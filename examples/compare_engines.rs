@@ -1,0 +1,56 @@
+//! Engine comparison across process counts — a compact, runnable version
+//! of the paper's Figures 6 and 8 (OPC vs P for PT-Scotch vs ParMETIS).
+//!
+//! ```bash
+//! cargo run --release --offline --example compare_engines [scale]
+//! ```
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::generators;
+use ptscotch::runtime::XlaRuntime;
+use ptscotch::strategy::Strategy;
+
+fn main() {
+    let scale: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let g = generators::audikw_like(8 * scale, 8 * scale, 8 * scale, 0.02, 30, 1);
+    println!(
+        "graph: audikw-like |V|={} |E|={} max degree {}",
+        g.n(),
+        g.m(),
+        g.max_degree()
+    );
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    let strat = Strategy::default();
+    let seq = svc.order(&g, Engine::Sequential, &strat).unwrap();
+    println!("sequential O_SS = {:.4e}", seq.stats.opc);
+    println!();
+    println!("{:>4} {:>14} {:>14} {:>10} {:>10}", "p", "O_PTS", "O_PM", "t_PTS", "t_PM");
+    for p in [2usize, 3, 4, 6, 8] {
+        let pts = svc.order(&g, Engine::PtScotch { p }, &strat).unwrap();
+        let pm = if p.is_power_of_two() {
+            match svc.order(&g, Engine::ParMetisLike { p }, &strat) {
+                Ok(r) => format!("{:.4e}", r.stats.opc),
+                Err(e) => format!("† {e}"),
+            }
+        } else {
+            "† non-pow2".to_string() // the paper's dagger: PM cannot run
+        };
+        let tpm = if p.is_power_of_two() {
+            svc.order(&g, Engine::ParMetisLike { p }, &strat)
+                .map(|r| format!("{:.2}", r.wall_seconds))
+                .unwrap_or_else(|_| "—".into())
+        } else {
+            "—".into()
+        };
+        println!(
+            "{:>4} {:>14.4e} {:>14} {:>10.2} {:>10}",
+            p, pts.stats.opc, pm, pts.wall_seconds, tpm
+        );
+    }
+    println!();
+    println!("(† marks configurations the baseline cannot run — the paper's");
+    println!(" Tables 2–3 use the same symbol for ParMETIS failures.)");
+}

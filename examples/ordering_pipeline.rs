@@ -1,0 +1,98 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E workload): run the FULL
+//! three-layer system on a real small workload and report the paper's
+//! headline metric.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example ordering_pipeline
+//! ```
+//!
+//! Pipeline: generate a ~50k-unknown 3D mesh → PT-Scotch parallel nested
+//! dissection on 8 simulated ranks with the **XLA diffusion band
+//! refiner** (the AOT-compiled Pallas kernel on the request path) →
+//! symbolic Cholesky → OPC/NNZ vs the sequential reference and the
+//! ParMETIS-like baseline, plus per-rank memory and traffic.
+
+use ptscotch::coordinator::{Engine, OrderingService, PhaseTimer};
+use ptscotch::graph::generators;
+use ptscotch::runtime::XlaRuntime;
+use ptscotch::strategy::Strategy;
+
+fn main() {
+    let mut timer = PhaseTimer::new();
+    // ~46k unknowns: large enough to be a real workload on one core,
+    // small enough to finish in seconds.
+    let g = generators::grid3d(36, 36, 36);
+    timer.lap("generate");
+    println!(
+        "workload: grid3d 36^3 — |V|={} |E|={} ({} B CSR)",
+        g.n(),
+        g.m(),
+        g.footprint_bytes()
+    );
+
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    let xla_ok = svc.has_xla();
+    println!("XLA runtime: {}", if xla_ok { "loaded" } else { "MISSING — run `make artifacts`" });
+
+    // The three-layer hot path: XLA diffusion refiner when available.
+    let strat = if xla_ok {
+        Strategy::parse("refiner=xla").unwrap()
+    } else {
+        Strategy::default()
+    };
+    let p = 8;
+    let pts = svc
+        .order(&g, Engine::PtScotch { p }, &strat)
+        .expect("pt-scotch ordering");
+    timer.lap("pt-scotch p=8");
+    let seq = svc
+        .order(&g, Engine::Sequential, &Strategy::default())
+        .expect("sequential ordering");
+    timer.lap("sequential");
+    let pm = svc
+        .order(&g, Engine::ParMetisLike { p }, &Strategy::default())
+        .expect("baseline ordering");
+    timer.lap("parmetis-like p=8");
+
+    println!();
+    println!(
+        "{:<24} {:>12} {:>12} {:>7} {:>8}",
+        "engine", "OPC", "NNZ(L)", "height", "t(s)"
+    );
+    for (name, rep) in [
+        (format!("pt-scotch p={p} ({})", if xla_ok { "xla" } else { "fm" }), &pts),
+        ("sequential scotch".to_string(), &seq),
+        (format!("parmetis-like p={p}"), &pm),
+    ] {
+        println!(
+            "{:<24} {:>12.4e} {:>12} {:>7} {:>8.2}",
+            name, rep.stats.opc, rep.stats.nnz, rep.stats.tree_height, rep.wall_seconds
+        );
+    }
+
+    let (mn, avg, mx) = pts.mem_min_avg_max();
+    println!();
+    println!(
+        "pt-scotch per-rank peak memory: min {} KiB / avg {:.0} KiB / max {} KiB",
+        mn / 1024,
+        avg / 1024.0,
+        mx / 1024
+    );
+    println!(
+        "pt-scotch comm: {} KiB total, {} msgs",
+        pts.total_comm_bytes() / 1024,
+        pts.msgs_sent_per_rank.iter().sum::<u64>()
+    );
+    println!("phases: {}", timer.summary());
+
+    // Headline check (paper Tables 2–3): parallel quality ≈ sequential.
+    let ratio = pts.stats.opc / seq.stats.opc;
+    println!();
+    println!(
+        "headline: OPC(PTS p={p}) / OPC(seq) = {ratio:.3}  (paper: ≈1, often <1; \
+         baseline ratio = {:.3})",
+        pm.stats.opc / seq.stats.opc
+    );
+    assert!(ratio < 1.6, "parallel quality regressed: {ratio}");
+    println!("E2E OK");
+}

@@ -1,0 +1,76 @@
+"""AOT emitter: lower the Layer-2 models to HLO **text** artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime compiles
+and executes the text modules through PJRT. HLO text — not
+``.serialize()`` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from ``python/``).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Size buckets emitted by default: (rows, max degree). Rows must be
+#: multiples of the kernel BLOCK (256). Band graphs bigger than the
+#: largest bucket fall back to the CPU reference at run time.
+BUCKETS = [(256, 32), (1024, 32), (4096, 32), (16384, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, buckets=None) -> list:
+    """Lower every (kernel, bucket) pair; returns manifest rows."""
+    buckets = buckets or BUCKETS
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for n, d in buckets:
+        for kernel, fn, k in [
+            ("diffusion", model.diffusion_steps, model.STEPS_PER_CALL),
+            ("minplus", model.minplus_step, 1),
+        ]:
+            args = model.example_args(n, d, kernel)
+            lowered = jax.jit(fn).lower(*args)
+            text = to_hlo_text(lowered)
+            fname = f"{kernel}_n{n}_d{d}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            rows.append((kernel, n, d, k, fname))
+            print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("# kernel n d steps file\n")
+        for r in rows:
+            f.write(" ".join(str(x) for x in r) + "\n")
+    print(f"manifest: {len(rows)} artifacts in {out_dir}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--small",
+        action="store_true",
+        help="emit only the smallest bucket (fast CI smoke)",
+    )
+    ns = ap.parse_args()
+    buckets = BUCKETS[:1] if ns.small else BUCKETS
+    emit(ns.out, buckets)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Layer-2 JAX models: the compute graphs that get AOT-lowered.
+
+Each model is a fixed-shape composition of the Layer-1 Pallas kernels
+(:mod:`compile.kernels.ell_spmv`) plus the anchor-clamping logic of the
+banded diffusion smoother. ``aot.py`` lowers one HLO text file per
+(model, bucket) pair; the Rust runtime loads and executes them from the
+band-refinement hot path.
+
+Semantics contract (shared with Rust ``sep::diffusion``):
+  * the anchor clamp ``x = mask·vals + (1-mask)·x`` runs **before** every
+    averaging step and once after the last — equivalent to clamping
+    after every step when the initial field already has anchors set;
+  * padded rows/lanes carry weight 0 and decay to 0;
+  * all arithmetic is f32.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ell_spmv
+
+#: Diffusion iterations fused into one artifact call. Unrolled (not
+#: ``fori_loop``) so XLA fuses the whole chain into one fixed pipeline.
+STEPS_PER_CALL = 8
+
+#: Damping factor baked into the artifacts (matches the Rust
+#: ``CpuDiffusionRefiner`` default).
+DAMPING = 0.95
+
+
+def diffusion_steps(x, fixed_mask, fixed_vals, nbr, w):
+    """K fused steps of the banded diffusion smoother (L2 model).
+
+    Args:
+      x: ``f32[n]`` field (anchors already at their clamp values).
+      fixed_mask: ``f32[n]`` 1.0 where the value is clamped (anchors).
+      fixed_vals: ``f32[n]`` clamp values (∓1 at the anchors).
+      nbr: ``i32[n, d]`` ELL neighbor table.
+      w: ``f32[n, d]`` ELL weights (0 = padding).
+
+    Returns:
+      1-tuple of the ``f32[n]`` field after ``STEPS_PER_CALL`` steps
+      (tuple because the AOT bridge lowers with ``return_tuple=True``).
+    """
+    for _ in range(STEPS_PER_CALL):
+        x = fixed_mask * fixed_vals + (1.0 - fixed_mask) * x
+        x = ell_spmv.ell_wavg(x, nbr, w, damping=DAMPING)
+    x = fixed_mask * fixed_vals + (1.0 - fixed_mask) * x
+    return (x,)
+
+
+def minplus_step(dist, nbr, w):
+    """One BFS/min-plus relaxation (L2 model around the L1 kernel)."""
+    return (ell_spmv.ell_minplus(dist, nbr, w),)
+
+
+def example_args(n: int, d: int, kernel: str):
+    """Shape specs used to lower a bucket."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    import jax
+
+    vec = jax.ShapeDtypeStruct((n,), f32)
+    tab_i = jax.ShapeDtypeStruct((n, d), i32)
+    tab_f = jax.ShapeDtypeStruct((n, d), f32)
+    if kernel == "diffusion":
+        return (vec, vec, vec, tab_i, tab_f)
+    if kernel == "minplus":
+        return (vec, tab_i, tab_f)
+    raise ValueError(f"unknown kernel {kernel}")

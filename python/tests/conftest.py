@@ -1,0 +1,6 @@
+"""Make `pytest python/tests/` work from the repo root: the compile
+package lives one directory up from the tests."""
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

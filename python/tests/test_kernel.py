@@ -1,0 +1,189 @@
+"""Kernel-vs-oracle correctness — the core build-time signal.
+
+The Pallas kernels (interpret mode) must agree with the pure-jnp oracles
+to float32 tolerance over hypothesis-generated ELL blocks, and the fused
+L2 diffusion model must agree with the step-by-step reference.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ell_spmv, ref
+
+
+def random_ell(rng, n, d, frac_pad_rows=0.2):
+    """A random symmetric-ish ELL block with padded lanes and rows."""
+    nbr = rng.integers(0, n, size=(n, d), dtype=np.int32)
+    w = rng.uniform(0.5, 3.0, size=(n, d)).astype(np.float32)
+    # Random padding: zero out a suffix of each row.
+    keep = rng.integers(0, d + 1, size=n)
+    lane = np.arange(d)[None, :]
+    mask = lane < keep[:, None]
+    w = np.where(mask, w, 0.0).astype(np.float32)
+    nbr = np.where(mask, nbr, 0).astype(np.int32)
+    # Some fully padded rows (like bucket padding).
+    pad_rows = rng.random(n) < frac_pad_rows
+    w[pad_rows] = 0.0
+    nbr[pad_rows] = 0
+    return jnp.asarray(nbr), jnp.asarray(w)
+
+
+# ----- fixed-size deterministic checks ---------------------------------
+
+
+def test_wavg_matches_ref_fixed():
+    rng = np.random.default_rng(0)
+    n, d = 256, 8
+    nbr, w = random_ell(rng, n, d)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = ell_spmv.ell_wavg(x, nbr, w, damping=0.9)
+    want = ref.ell_wavg_ref(x, nbr, w, damping=0.9)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_minplus_matches_ref_fixed():
+    rng = np.random.default_rng(1)
+    n, d = 256, 8
+    nbr, w = random_ell(rng, n, d)
+    dist = np.full(n, 3.0e38, dtype=np.float32)
+    dist[rng.integers(0, n, size=10)] = 0.0
+    got = ell_spmv.ell_minplus(jnp.asarray(dist), nbr, w)
+    want = ref.ell_minplus_ref(jnp.asarray(dist), nbr, w)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_minplus_fixed_point_reaches_bfs():
+    """Iterated min-plus equals BFS distances on a ring graph."""
+    n, d = 256, 2
+    nbr = np.zeros((n, d), dtype=np.int32)
+    w = np.ones((n, d), dtype=np.float32)
+    for v in range(n):
+        nbr[v, 0] = (v - 1) % n
+        nbr[v, 1] = (v + 1) % n
+    dist = np.full(n, 3.0e38, dtype=np.float32)
+    dist[0] = 0.0
+    x = jnp.asarray(dist)
+    for _ in range(n // 2 + 1):
+        x = ell_spmv.ell_minplus(x, jnp.asarray(nbr), jnp.asarray(w))
+    x = np.asarray(x)
+    for v in range(n):
+        assert x[v] == min(v, n - v), f"vertex {v}: {x[v]}"
+
+
+def test_diffusion_model_matches_ref():
+    rng = np.random.default_rng(2)
+    n, d = 256, 8
+    nbr, w = random_ell(rng, n, d)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    mask = np.zeros(n, dtype=np.float32)
+    vals = np.zeros(n, dtype=np.float32)
+    mask[[3, 7]] = 1.0
+    vals[3], vals[7] = -1.0, 1.0
+    got = model.diffusion_steps(x, jnp.asarray(mask), jnp.asarray(vals), nbr, w)[0]
+    want = ref.diffusion_ref(
+        x,
+        jnp.asarray(mask),
+        jnp.asarray(vals),
+        nbr,
+        w,
+        steps=model.STEPS_PER_CALL,
+        damping=model.DAMPING,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # Anchors stay clamped.
+    assert got[3] == -1.0 and got[7] == 1.0
+
+
+def test_diffusion_contracts_field():
+    """With damping < 1 and no anchors the field decays toward 0."""
+    rng = np.random.default_rng(3)
+    n, d = 256, 4
+    nbr, w = random_ell(rng, n, d, frac_pad_rows=0.0)
+    x = jnp.asarray(rng.uniform(-1, 1, n).astype(np.float32))
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    out = model.diffusion_steps(x, zeros, zeros, nbr, w)[0]
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(x))) + 1e-6
+
+
+# ----- hypothesis sweeps ------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(1, 16),
+    damping=st.floats(0.5, 1.0),
+)
+def test_wavg_hypothesis(seed, d, damping):
+    rng = np.random.default_rng(seed)
+    n = 256  # one BLOCK — shape sweep is over d and contents
+    nbr, w = random_ell(rng, n, d)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = ell_spmv.ell_wavg(x, nbr, w, damping=damping)
+    want = ref.ell_wavg_ref(x, nbr, w, damping=damping)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 16))
+def test_minplus_hypothesis(seed, d):
+    rng = np.random.default_rng(seed)
+    n = 256
+    nbr, w = random_ell(rng, n, d)
+    dist = rng.uniform(0, 50, n).astype(np.float32)
+    got = ell_spmv.ell_minplus(jnp.asarray(dist), nbr, w)
+    want = ref.ell_minplus_ref(jnp.asarray(dist), nbr, w)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_wavg_multiblock_grid(blocks, seed):
+    """The BlockSpec tiling must be seam-free across grid steps."""
+    rng = np.random.default_rng(seed)
+    n, d = 256 * blocks, 6
+    nbr, w = random_ell(rng, n, d)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    got = ell_spmv.ell_wavg(x, nbr, w)
+    want = ref.ell_wavg_ref(x, nbr, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-6)
+
+
+# ----- AOT bridge smoke -------------------------------------------------
+
+
+def test_aot_emit_small(tmp_path):
+    """The emitter produces parseable HLO text and a manifest."""
+    from compile import aot
+
+    rows = aot.emit(str(tmp_path), buckets=[(256, 8)])
+    assert len(rows) == 2  # diffusion + minplus
+    manifest = (tmp_path / "manifest.txt").read_text()
+    assert "diffusion 256 8" in manifest
+    hlo = (tmp_path / "diffusion_n256_d8.hlo.txt").read_text()
+    assert "HloModule" in hlo
+    assert "f32[256]" in hlo
+
+
+def test_lowered_diffusion_runs_and_matches(tmp_path):
+    """Execute the lowered computation via jax and compare to the model
+    (guards against lowering-time semantic drift)."""
+    import jax
+
+    n, d = 256, 8
+    rng = np.random.default_rng(7)
+    nbr, w = random_ell(rng, n, d)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    zeros = jnp.zeros(n, dtype=jnp.float32)
+    compiled = jax.jit(model.diffusion_steps).lower(x, zeros, zeros, nbr, w).compile()
+    got = compiled(x, zeros, zeros, nbr, w)[0]
+    want = model.diffusion_steps(x, zeros, zeros, nbr, w)[0]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,120 @@
+//! Ablations of the paper's design choices (DESIGN.md A1–A5).
+//!
+//! * **A1 band width** (§3.3): quality across band widths; the paper
+//!   argues width 3 is the sweet spot — "keeping more layers of vertices
+//!   in the band graph is not useful" — and that banding *improves*
+//!   quality by pre-constraining FM.
+//! * **A2/A3 fold-dup** (§3.2): multi-sequential best-of-p working
+//!   copies vs a single working copy (`folddup=0`), plus the fold-dup
+//!   threshold sweep.
+//! * **A4 strictly-improving refinement** (§3.3): PT-Scotch's band
+//!   multi-sequential refinement vs the ParMETIS-like strict pass on the
+//!   same graphs (engine-level comparison at fixed p).
+//! * **A5 refiner choice**: FM vs CPU diffusion vs AOT-XLA diffusion on
+//!   the band hot path (quality and wallclock; xla == diffcpu
+//!   numerically, the delta is execution path overhead).
+
+#[path = "common.rs"]
+mod common;
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::generators;
+use ptscotch::runtime::XlaRuntime;
+use ptscotch::strategy::Strategy;
+
+fn main() {
+    let scale = common::bench_scale();
+    let g = generators::grid3d(12 * scale, 12 * scale, 12 * scale);
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    println!("ablation graph: grid3d {0}^3 (|V|={1})", 12 * scale, g.n());
+
+    // --- A1: band width -------------------------------------------------
+    println!("\n== A1: band width (sequential, seed fixed) ==");
+    println!("{:<8} {:>12} {:>10} {:>8}", "width", "OPC", "NNZ", "t(s)");
+    for w in [1u32, 2, 3, 5, 8] {
+        let strat = Strategy::parse(&format!("band={w}")).unwrap();
+        let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
+        println!(
+            "{:<8} {:>12} {:>10} {:>8.2}",
+            w,
+            common::sci(rep.stats.opc),
+            rep.stats.nnz,
+            rep.wall_seconds
+        );
+        common::csv_row(
+            "ablation_band.csv",
+            "width,opc,nnz,seconds",
+            &format!("{w},{:.6e},{},{:.3}", rep.stats.opc, rep.stats.nnz, rep.wall_seconds),
+        );
+    }
+
+    // --- A2/A3: fold-dup ------------------------------------------------
+    println!("\n== A2/A3: fold-dup vs single working copy (p = 8) ==");
+    println!("{:<22} {:>12} {:>8}", "variant", "OPC", "t(s)");
+    for (name, spec) in [
+        ("fold-dup (paper)", "folddup=1"),
+        ("single copy", "folddup=0"),
+        ("fold-dup, thresh=50", "folddup=1,foldthresh=50"),
+        ("fold-dup, thresh=400", "folddup=1,foldthresh=400"),
+    ] {
+        let strat = Strategy::parse(spec).unwrap();
+        let rep = svc.order(&g, Engine::PtScotch { p: 8 }, &strat).unwrap();
+        println!(
+            "{:<22} {:>12} {:>8.2}",
+            name,
+            common::sci(rep.stats.opc),
+            rep.wall_seconds
+        );
+        common::csv_row(
+            "ablation_folddup.csv",
+            "variant,opc,seconds",
+            &format!("{name},{:.6e},{:.3}", rep.stats.opc, rep.wall_seconds),
+        );
+    }
+
+    // --- A4: refinement scheme -------------------------------------------
+    println!("\n== A4: band multi-seq (PTS) vs strict-improving (PM), by p ==");
+    println!("{:<4} {:>12} {:>12} {:>8}", "p", "OPC_PTS", "OPC_PM", "ratio");
+    for p in [2usize, 4, 8, 16] {
+        let strat = Strategy::default();
+        let pts = svc.order(&g, Engine::PtScotch { p }, &strat).unwrap();
+        let pm = svc.order(&g, Engine::ParMetisLike { p }, &strat).unwrap();
+        println!(
+            "{:<4} {:>12} {:>12} {:>8.3}",
+            p,
+            common::sci(pts.stats.opc),
+            common::sci(pm.stats.opc),
+            pm.stats.opc / pts.stats.opc
+        );
+        common::csv_row(
+            "ablation_refine.csv",
+            "p,opc_pts,opc_pm",
+            &format!("{p},{:.6e},{:.6e}", pts.stats.opc, pm.stats.opc),
+        );
+    }
+
+    // --- A5: refiner on the band hot path --------------------------------
+    println!("\n== A5: band refiner (sequential engine) ==");
+    println!("{:<12} {:>12} {:>8}", "refiner", "OPC", "t(s)");
+    let mut variants = vec![("fm", "refiner=fm"), ("diffcpu", "refiner=diffcpu")];
+    if svc.has_xla() {
+        variants.push(("xla", "refiner=xla"));
+    } else {
+        println!("(xla variant skipped: run `make artifacts`)");
+    }
+    for (name, spec) in variants {
+        let strat = Strategy::parse(spec).unwrap();
+        let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
+        println!(
+            "{:<12} {:>12} {:>8.2}",
+            name,
+            common::sci(rep.stats.opc),
+            rep.wall_seconds
+        );
+        common::csv_row(
+            "ablation_refiner.csv",
+            "refiner,opc,seconds",
+            &format!("{name},{:.6e},{:.3}", rep.stats.opc, rep.wall_seconds),
+        );
+    }
+}

@@ -1,0 +1,50 @@
+//! Shared bench harness utilities (criterion is unavailable in the
+//! offline crate set, so benches are `harness = false` binaries that
+//! print paper-style tables and append machine-readable CSV rows to
+//! `bench_out/`).
+
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use std::fs::OpenOptions;
+use std::io::Write;
+use std::path::Path;
+
+/// Process counts swept by default; `PTSCOTCH_BENCH_FULL=1` extends to
+/// the paper's full 2..64 range (64 simulated ranks on one core is slow).
+pub fn proc_counts() -> Vec<usize> {
+    if std::env::var_os("PTSCOTCH_BENCH_FULL").is_some() {
+        vec![2, 4, 8, 16, 32, 64]
+    } else {
+        vec![2, 4, 8, 16]
+    }
+}
+
+/// Graph-size scale factor (`PTSCOTCH_BENCH_SCALE`, default 1).
+pub fn bench_scale() -> usize {
+    std::env::var("PTSCOTCH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Append one CSV row (with header on first write) to `bench_out/<file>`.
+pub fn csv_row(file: &str, header: &str, row: &str) {
+    let dir = Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(file);
+    let fresh = !path.exists();
+    let mut f = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .expect("open csv");
+    if fresh {
+        writeln!(f, "{header}").unwrap();
+    }
+    writeln!(f, "{row}").unwrap();
+}
+
+/// Format an OPC the way the paper's tables do (e.g. `5.45e+12`).
+pub fn sci(x: f64) -> String {
+    format!("{x:.2e}")
+}

@@ -1,0 +1,59 @@
+//! Figures 10–11 reproduction: memory used per process during ordering,
+//! for the audikw1 and cage15 analogs.
+//!
+//! Expected shape (paper §4): average per-process memory falls with P
+//! (good scalability despite fold-dup), but (Fig. 10) audikw1 shows high
+//! *imbalance* because one process ends up owning the contiguous set of
+//! very-high-degree vertices, and (Fig. 11) cage15 stops scaling beyond
+//! ~8–16 processes because ghost vertices multiply.
+
+#[path = "common.rs"]
+mod common;
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::generators;
+use ptscotch::strategy::Strategy;
+
+fn main() {
+    let scale = common::bench_scale();
+    let svc = OrderingService::new_cpu_only();
+    let strat = Strategy::default();
+    let graphs = [
+        (
+            "audikw-like (fig 10)",
+            "fig10.csv",
+            generators::audikw_like(9 * scale, 9 * scale, 9 * scale, 0.03, 40, 1),
+        ),
+        (
+            "cage-like (fig 11)",
+            "fig11.csv",
+            generators::cage_like(9000 * scale * scale, 8, 2),
+        ),
+    ];
+    for (name, csv, g) in graphs {
+        println!("\n== {name}: |V|={} |E|={} ==", g.n(), g.m());
+        println!(
+            "{:<4} {:>12} {:>12} {:>12} {:>9}",
+            "p", "mem min KiB", "mem avg KiB", "mem max KiB", "max/avg"
+        );
+        for p in common::proc_counts() {
+            let rep = svc
+                .order(&g, Engine::PtScotch { p }, &strat)
+                .expect("pts");
+            let (mn, avg, mx) = rep.mem_min_avg_max();
+            println!(
+                "{:<4} {:>12} {:>12.0} {:>12} {:>9.2}",
+                p,
+                mn / 1024,
+                avg / 1024.0,
+                mx / 1024,
+                mx as f64 / avg.max(1.0)
+            );
+            common::csv_row(
+                csv,
+                "p,mem_min,mem_avg,mem_max",
+                &format!("{p},{mn},{avg:.0},{mx}"),
+            );
+        }
+    }
+}

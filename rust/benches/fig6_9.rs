@@ -1,0 +1,83 @@
+//! Figures 6–9 reproduction: OPC and NNZ fill ratio vs process count for
+//! the audikw1 and cage15 analogs, PT-Scotch vs ParMETIS-like, with the
+//! sequential Scotch value as the reference line.
+//!
+//! Expected shape (paper): the PT-Scotch series hugs the sequential line
+//! (often dipping below it as P grows — more multi-sequential working
+//! copies), while the ParMETIS series climbs steeply (audikw1: 5.8e12 →
+//! 1.07e13 from P=2 to 64, i.e. ~2× worse; NNZ ratio climbs similarly).
+
+#[path = "common.rs"]
+mod common;
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::generators;
+use ptscotch::strategy::Strategy;
+
+fn main() {
+    let scale = common::bench_scale();
+    let svc = OrderingService::new_cpu_only();
+    let strat = Strategy::default();
+    let graphs = [
+        (
+            "audikw-like (figs 6–7)",
+            "fig6_7.csv",
+            generators::audikw_like(9 * scale, 9 * scale, 9 * scale, 0.02, 30, 1),
+        ),
+        (
+            "cage-like (figs 8–9)",
+            "fig8_9.csv",
+            generators::cage_like(9000 * scale * scale, 8, 2),
+        ),
+    ];
+    for (name, csv, g) in graphs {
+        let seq = svc
+            .order(&g, Engine::Sequential, &strat)
+            .expect("sequential");
+        println!("\n== {name}: |V|={} |E|={} ==", g.n(), g.m());
+        println!(
+            "sequential reference: OPC {}  fill {:.2}",
+            common::sci(seq.stats.opc),
+            seq.stats.fill_ratio
+        );
+        println!(
+            "{:<4} {:>12} {:>10} {:>12} {:>10}",
+            "p", "OPC_PTS", "fill_PTS", "OPC_PM", "fill_PM"
+        );
+        for p in common::proc_counts() {
+            let pts = svc
+                .order(&g, Engine::PtScotch { p }, &strat)
+                .expect("pts");
+            let pm = svc.order(&g, Engine::ParMetisLike { p }, &strat).ok();
+            let (opm, fpm) = pm
+                .as_ref()
+                .map(|r| (common::sci(r.stats.opc), format!("{:.2}", r.stats.fill_ratio)))
+                .unwrap_or(("†".into(), "†".into()));
+            println!(
+                "{:<4} {:>12} {:>10.2} {:>12} {:>10}",
+                p,
+                common::sci(pts.stats.opc),
+                pts.stats.fill_ratio,
+                opm,
+                fpm
+            );
+            common::csv_row(
+                csv,
+                "p,opc_seq,fill_seq,opc_pts,fill_pts,opc_pm,fill_pm",
+                &format!(
+                    "{p},{:.6e},{:.4},{:.6e},{:.4},{},{}",
+                    seq.stats.opc,
+                    seq.stats.fill_ratio,
+                    pts.stats.opc,
+                    pts.stats.fill_ratio,
+                    pm.as_ref()
+                        .map(|r| format!("{:.6e}", r.stats.opc))
+                        .unwrap_or("NA".into()),
+                    pm.as_ref()
+                        .map(|r| format!("{:.4}", r.stats.fill_ratio))
+                        .unwrap_or("NA".into()),
+                ),
+            );
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! §Perf phase profile: where does ordering time go, layer by layer?
+//!
+//! Times the individual L3 phases (coarsening, initial separator, FM,
+//! band extraction, projection, minimum degree, symbolic evaluation) on
+//! a mid-size 3D mesh, plus the XLA (L1/L2) execution path when
+//! artifacts are present. Used to drive and document the optimization
+//! log in EXPERIMENTS.md §Perf.
+
+#[path = "common.rs"]
+mod common;
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::generators;
+use ptscotch::order::mmd::minimum_degree;
+use ptscotch::order::symbolic_cholesky;
+use ptscotch::rng::Rng;
+use ptscotch::runtime::{pack_ell_clamped, XlaRuntime};
+use ptscotch::sep::band::extract_band;
+use ptscotch::sep::coarsen::coarsen_hem;
+use ptscotch::sep::fm::{fm_refine, FmParams};
+use ptscotch::sep::initial::greedy_graph_growing;
+use ptscotch::sep::{multilevel_separator, FmRefiner};
+use ptscotch::strategy::{SepStrategy, Strategy};
+use std::time::Instant;
+
+fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(f());
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<34} {:>10.2} ms", dt * 1e3);
+    common::csv_row(
+        "perf_profile.csv",
+        "phase,ms",
+        &format!("{name},{:.4}", dt * 1e3),
+    );
+    dt
+}
+
+fn main() {
+    let scale = common::bench_scale();
+    let g = generators::grid3d(24 * scale, 24 * scale, 24 * scale);
+    println!("perf graph: grid3d {0}^3 (|V|={1}, |E|={2})\n", 24 * scale, g.n(), g.m());
+
+    println!("-- L3 phases --");
+    let mut rng = Rng::new(1);
+    time("coarsen_hem (1 level)", 5, || coarsen_hem(&g, &mut rng));
+    // Build the level-1 coarse graph once for downstream phases.
+    let c1 = coarsen_hem(&g, &mut Rng::new(1)).coarse;
+    time("greedy_graph_growing (4 tries)", 5, || {
+        greedy_graph_growing(&c1, 4, &mut rng)
+    });
+    let s0 = greedy_graph_growing(&g, 2, &mut Rng::new(2));
+    time("fm_refine (whole graph)", 3, || {
+        let mut s = s0.clone();
+        fm_refine(&g, &mut s, &[], &FmParams::default(), &mut rng)
+    });
+    time("extract_band (w=3)", 5, || extract_band(&g, &s0, 3));
+    let band = extract_band(&g, &s0, 3).unwrap();
+    println!("   (band size {} of {})", band.band_n(), g.n());
+    time("fm_refine (band only)", 5, || {
+        let mut b = band.clone();
+        fm_refine(&b.graph, &mut b.state, &b.locked, &FmParams::default(), &mut rng)
+    });
+    time("multilevel_separator (full)", 3, || {
+        multilevel_separator(&g, &SepStrategy::default(), &FmRefiner::default(), &mut rng)
+    });
+    let leaf = generators::grid3d(5 * scale, 5 * scale, 5 * scale);
+    time("minimum_degree (leaf 125·s³)", 5, || minimum_degree(&leaf));
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    let rep = svc
+        .order(&g, Engine::Sequential, &Strategy::default())
+        .unwrap();
+    time("symbolic_cholesky (eval)", 3, || {
+        symbolic_cholesky(&g, &rep.ordering)
+    });
+    time("nested_dissection (end-to-end)", 1, || {
+        svc.order(&g, Engine::Sequential, &Strategy::default())
+            .unwrap()
+    });
+
+    println!("\n-- L1/L2 (XLA path) --");
+    match XlaRuntime::load(&XlaRuntime::default_dir()) {
+        Err(e) => println!("artifacts unavailable ({e}); run `make artifacts`"),
+        Ok(rt) => {
+            // Anchor rows are clamped → excluded from the degree fit
+            // (§Perf opt 1; without this every mesh band misses the
+            // buckets and falls back to CPU).
+            let anchors = [band.anchor0, band.anchor1];
+            let d_real = (0..band.graph.n())
+                .filter(|v| !anchors.contains(v))
+                .map(|v| band.graph.degree(v))
+                .max()
+                .unwrap_or(0);
+            let bucket = rt.fit_diffusion(band.graph.n(), d_real);
+            match bucket.and_then(|b| pack_ell_clamped(&band.graph, b.n, b.d, &anchors).map(|e| (b, e))) {
+                None => println!("band does not fit a bucket (n={})", band.graph.n()),
+                Some((bucket, ell)) => {
+                    println!(
+                        "bucket n={} d={} ({} diffusion steps/call)",
+                        bucket.n, bucket.d, rt.steps_per_call
+                    );
+                    let x = vec![0.1f32; bucket.n];
+                    let mask = vec![0f32; bucket.n];
+                    let vals = vec![0f32; bucket.n];
+                    time("xla diffusion_step (8 iters)", 10, || {
+                        rt.diffusion_step(bucket, &x, &mask, &vals, &ell).unwrap()
+                    });
+                    // CPU reference for the same work (8 iterations).
+                    time("cpu diffusion (8 iters, ref)", 10, || {
+                        let mut xc = x.clone();
+                        for _ in 0..8 {
+                            xc = ptscotch::runtime::ell::ell_weighted_average(&ell, &xc, 0.95);
+                        }
+                        xc
+                    });
+                    // VMEM footprint estimate per grid step (DESIGN.md §7).
+                    let tile = ptscotch::runtime::EllPacked::tile_bytes(256, bucket.d);
+                    let field = bucket.n * 4;
+                    println!(
+                        "VMEM estimate: tile {} KiB + resident field {} KiB (budget ~16 MiB)",
+                        tile / 1024,
+                        field / 1024
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Tables 2–3 reproduction: `O_PTS`, `O_PM`, `t_PTS`, `t_PM` for every
+//! suite graph across process counts.
+//!
+//! Paper semantics preserved:
+//! * daggers (†) mark configurations the comparator cannot run — in the
+//!   paper those were ParMETIS MPI aborts; here they are the baseline's
+//!   structural power-of-two restriction (§3.2), surfaced on the
+//!   non-pow2 rows that PT-Scotch handles fine;
+//! * quality (`O_PTS`) should stay flat (or improve) with P while `O_PM`
+//!   degrades;
+//! * absolute times are single-core wallclock (DESIGN.md §3) — the
+//!   *ratio* t_PTS/t_PM ≈ 2–4× matches the paper's "about four times
+//!   slower on average".
+
+#[path = "common.rs"]
+mod common;
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::generators;
+use ptscotch::strategy::Strategy;
+
+fn main() {
+    let scale = common::bench_scale();
+    let svc = OrderingService::new_cpu_only();
+    let strat = Strategy::default();
+    let mut ps = common::proc_counts();
+    // Non-pow2 rows demonstrating the any-P property (paper §3.2).
+    ps.extend([3usize, 6]);
+    ps.sort_unstable();
+    println!("== Tables 2–3 (analog suite, scale {scale}) ==");
+    for (name, g) in generators::table1_suite(scale) {
+        println!("\n--- {name} (|V|={}, |E|={}) ---", g.n(), g.m());
+        println!(
+            "{:<8} {:>12} {:>12} {:>9} {:>9}",
+            "p", "O_PTS", "O_PM", "t_PTS", "t_PM"
+        );
+        for &p in &ps {
+            let pts = svc
+                .order(&g, Engine::PtScotch { p }, &strat)
+                .expect("pt-scotch");
+            let (opm, tpm) = match svc.order(&g, Engine::ParMetisLike { p }, &strat) {
+                Ok(r) => (common::sci(r.stats.opc), format!("{:.2}", r.wall_seconds)),
+                Err(_) => ("†".to_string(), "†".to_string()),
+            };
+            println!(
+                "{:<8} {:>12} {:>12} {:>9.2} {:>9}",
+                p,
+                common::sci(pts.stats.opc),
+                opm,
+                pts.wall_seconds,
+                tpm
+            );
+            common::csv_row(
+                "tables2_3.csv",
+                "graph,p,o_pts,t_pts,o_pm,t_pm",
+                &format!(
+                    "{name},{p},{:.6e},{:.3},{},{}",
+                    pts.stats.opc,
+                    pts.wall_seconds,
+                    opm.replace('†', "NA"),
+                    tpm.replace('†', "NA")
+                ),
+            );
+        }
+    }
+    println!("\n(† = baseline cannot run: non-power-of-two process count.)");
+}

@@ -1,0 +1,318 @@
+//! ParMETIS-like baseline orderer (S17).
+//!
+//! The paper's comparator degrades with process count for identifiable
+//! reasons, all of which this baseline reproduces faithfully (DESIGN.md
+//! §3):
+//!
+//! * **power-of-two only** — "its folding algorithm requires the number
+//!   of sending processes to be even, such that the parallel graph
+//!   ordering routine of ParMETIS can only work on numbers of processes
+//!   which are powers of two" (§3.2). [`parmetis_like_order`] returns
+//!   [`Error::NonPowerOfTwo`] otherwise;
+//! * **folding without duplication** — a single working copy of the
+//!   coarsest graph (on rank 0 here, the degenerate fold), so no
+//!   best-of-k selection among independent multilevel runs;
+//! * **strictly-improving parallel refinement** — "only moves that
+//!   strictly improve the partition are allowed, which hinders the
+//!   ability of the FM algorithm to escape from local minima … and leads
+//!   to severe loss of partition quality when the number of processes
+//!   (and thus of potential remote neighbors) increases" (§3.3). The
+//!   [`pmrefine`] pass additionally refuses moves whose pulled set spans
+//!   processes — the communication-avoidance that creates the
+//!   p-dependence.
+
+pub mod pmrefine;
+
+use crate::comm::{Comm, MemTracker};
+use crate::dist::coarsen::{coarsen_dist, DistCoarsening};
+use crate::dist::dgraph::DGraph;
+use crate::dist::dnd::ParallelOrderResult;
+use crate::dist::fold::{fold_half, FoldTarget};
+use crate::dist::induce::induce_dist;
+use crate::dist::matching::parallel_match;
+use crate::graph::Graph;
+use crate::order::{assemble_fragments, nested_dissection, OrderFragment};
+use crate::rng::Rng;
+use crate::sep::{multilevel_separator, FmRefiner, P0, P1, SEP};
+use crate::strategy::Strategy;
+use crate::{Error, Result};
+
+/// Order `g` with the ParMETIS-like parallel nested dissection.
+/// Collective; fails unless `comm.size()` is a power of two.
+pub fn parmetis_like_order(
+    comm: &Comm,
+    g: &Graph,
+    strat: &Strategy,
+) -> Result<ParallelOrderResult> {
+    let p = comm.size();
+    if !p.is_power_of_two() {
+        return Err(Error::NonPowerOfTwo(p));
+    }
+    let mem = MemTracker::new();
+    let dg = DGraph::from_global(comm, g);
+    mem.grow(dg.footprint_bytes());
+    let payload: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
+    let base_rng = Rng::new(strat.seed);
+    let mut frags = Vec::new();
+    let mut dist_levels = 0usize;
+    recurse(
+        comm, dg, payload, 0, strat, &base_rng, &mem, &mut frags, &mut dist_levels, 0,
+    );
+    let mut blob: Vec<u64> = Vec::new();
+    for f in &frags {
+        blob.push(f.start as u64);
+        blob.push(f.verts.len() as u64);
+        blob.extend(f.verts.iter().map(|&v| v as u64));
+    }
+    let all = comm.allgatherv(blob);
+    let mut all_frags = Vec::new();
+    for b in &all {
+        let mut i = 0usize;
+        while i < b.len() {
+            let (start, len) = (b[i] as usize, b[i + 1] as usize);
+            i += 2;
+            all_frags.push(OrderFragment {
+                start,
+                verts: b[i..i + len].iter().map(|&v| v as usize).collect(),
+            });
+            i += len;
+        }
+    }
+    let ordering = assemble_fragments(g.n(), all_frags)?;
+    Ok(ParallelOrderResult {
+        ordering,
+        peak_mem: mem.peak(),
+        dist_levels,
+    })
+}
+
+/// Baseline distributed separator: parallel coarsening, single working
+/// copy on rank 0 (fold without duplication), sequential initial
+/// separator there, then uncoarsening with strictly-improving parallel
+/// refinement only — no band graphs, no multi-sequential best-pick.
+fn baseline_separator(
+    comm: &Comm,
+    dg: &DGraph,
+    strat: &Strategy,
+    base_rng: &Rng,
+    mem: &MemTracker,
+) -> Vec<u8> {
+    let p = comm.size();
+    let stop_at = (strat.dist.folddup_threshold * p).max(2 * strat.sep.coarse_target) as u64;
+    let mut levels: Vec<(DGraph, DistCoarsening)> = Vec::new();
+    let mut cur = dg.clone();
+    let mut round = 0u64;
+    while cur.nglb > stop_at {
+        let mut rng = base_rng.derive(0xBA5E ^ round ^ ((comm.global_rank() as u64) << 40));
+        let mate = parallel_match(comm, &cur, strat.dist.matching_rounds, &mut rng);
+        let dc = coarsen_dist(comm, &cur, &mate);
+        if dc.coarse.nglb as f64 > cur.nglb as f64 * 0.95 {
+            break;
+        }
+        mem.grow(dc.coarse.footprint_bytes());
+        let prev = std::mem::replace(&mut cur, dc.coarse.clone());
+        levels.push((prev, dc));
+        round += 1;
+    }
+    // Single working copy: rank 0 computes, everyone receives.
+    let central = cur.centralize_all(comm);
+    mem.grow(central.footprint_bytes());
+    let seps: Vec<u8> = if comm.rank() == 0 {
+        let mut rng = base_rng.derive(0x0E11);
+        let refiner = FmRefiner {
+            params: strat.sep.fm.clone(),
+        };
+        let state = multilevel_separator(&central, &strat.sep, &refiner, &mut rng);
+        comm.bcast(0, Some(state.part.clone()))
+    } else {
+        comm.bcast(0, None)
+    };
+    mem.shrink(central.footprint_bytes());
+    let mut part: Vec<u8> = (0..cur.nloc())
+        .map(|v| seps[cur.glb(v) as usize])
+        .collect();
+    // Uncoarsen with strictly-improving parallel refinement only.
+    for (fine, dc) in levels.iter().rev() {
+        let coarse_part = part;
+        part = dc.coarse.fetch_at(comm, &dc.fine2coarse, &coarse_part);
+        pmrefine::strict_refine(comm, fine, &mut part, &strat.sep.fm, 8);
+    }
+    part
+}
+
+#[allow(clippy::too_many_arguments)]
+fn recurse(
+    comm: &Comm,
+    dg: DGraph,
+    payload: Vec<u64>,
+    start: usize,
+    strat: &Strategy,
+    base_rng: &Rng,
+    mem: &MemTracker,
+    frags: &mut Vec<OrderFragment>,
+    dist_levels: &mut usize,
+    depth: u64,
+) {
+    if comm.size() == 1 {
+        let local = dg.to_local();
+        mem.grow(local.footprint_bytes());
+        let mut rng = base_rng.derive(0x1EAF ^ (depth << 8));
+        let refiner = FmRefiner {
+            params: strat.sep.fm.clone(),
+        };
+        let ord = nested_dissection(&local, strat, &refiner, &mut rng);
+        frags.push(OrderFragment {
+            start,
+            verts: ord.iperm.iter().map(|&lv| payload[lv] as usize).collect(),
+        });
+        mem.shrink(local.footprint_bytes());
+        return;
+    }
+    if dg.nglb == 0 {
+        return;
+    }
+    *dist_levels += 1;
+    let part = baseline_separator(comm, &dg, strat, &base_rng.derive(depth), mem);
+    let counts = [
+        comm.allreduce_sum(part.iter().filter(|&&x| x == P0).count() as i64) as usize,
+        comm.allreduce_sum(part.iter().filter(|&&x| x == P1).count() as i64) as usize,
+        comm.allreduce_sum(part.iter().filter(|&&x| x == SEP).count() as i64) as usize,
+    ];
+    let degenerate = counts[0] == 0
+        || counts[1] == 0
+        || counts[2] as f64 > dg.nglb as f64 * strat.nd.max_sep_fraction;
+    if degenerate {
+        let central = dg.centralize_all(comm);
+        let all_payload = comm.allgatherv(payload.clone()).concat();
+        if comm.rank() == 0 {
+            let mut rng = base_rng.derive(0xD0 ^ depth);
+            let refiner = FmRefiner {
+                params: strat.sep.fm.clone(),
+            };
+            let ord = nested_dissection(&central, strat, &refiner, &mut rng);
+            frags.push(OrderFragment {
+                start,
+                verts: ord
+                    .iperm
+                    .iter()
+                    .map(|&lv| all_payload[lv] as usize)
+                    .collect(),
+            });
+        }
+        return;
+    }
+    let my_sep: Vec<usize> = (0..dg.nloc()).filter(|&v| part[v] == SEP).collect();
+    let sep_offset = comm.exscan_sum(my_sep.len() as u64) as usize;
+    if !my_sep.is_empty() {
+        frags.push(OrderFragment {
+            start: start + counts[0] + counts[1] + sep_offset,
+            verts: my_sep.iter().map(|&v| payload[v] as usize).collect(),
+        });
+    }
+    let keep0: Vec<bool> = part.iter().map(|&x| x == P0).collect();
+    let keep1: Vec<bool> = part.iter().map(|&x| x == P1).collect();
+    let ind0 = induce_dist(comm, &dg, &keep0, &payload);
+    let ind1 = induce_dist(comm, &dg, &keep1, &payload);
+    mem.grow(ind0.dg.footprint_bytes() + ind1.dg.footprint_bytes());
+    drop(dg);
+    drop(payload);
+    let p = comm.size();
+    let f0 = fold_half(comm, &ind0.dg, &ind0.orig, FoldTarget::low_half(p));
+    let f1 = fold_half(comm, &ind1.dg, &ind1.orig, FoldTarget::high_half(p));
+    let b0 = ind0.dg.footprint_bytes();
+    let b1 = ind1.dg.footprint_bytes();
+    drop(ind0);
+    drop(ind1);
+    mem.shrink(b0 + b1);
+    let in_low = FoldTarget::low_half(p).contains(comm.rank());
+    let sub = comm.split(if in_low { 0 } else { 1 });
+    match (in_low, f0, f1) {
+        (true, Some((dg0, pl0)), _) => {
+            mem.grow(dg0.footprint_bytes());
+            recurse(
+                &sub, dg0, pl0, start, strat, base_rng, mem, frags, dist_levels, depth * 2 + 1,
+            );
+        }
+        (false, _, Some((dg1, pl1))) => {
+            mem.grow(dg1.footprint_bytes());
+            recurse(
+                &sub,
+                dg1,
+                pl1,
+                start + counts[0],
+                strat,
+                base_rng,
+                mem,
+                frags,
+                dist_levels,
+                depth * 2 + 2,
+            );
+        }
+        _ => unreachable!(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::graph::generators;
+    use crate::order::symbolic_cholesky;
+    use std::sync::Arc;
+
+    #[test]
+    fn rejects_non_power_of_two() {
+        let g = Arc::new(generators::grid2d(10, 10));
+        let (res, _) = comm::run(3, move |c| {
+            let strat = Strategy::default();
+            matches!(
+                parmetis_like_order(&c, &g, &strat),
+                Err(Error::NonPowerOfTwo(3))
+            )
+        });
+        assert!(res.iter().all(|&ok| ok));
+    }
+
+    #[test]
+    fn orders_validly_on_pow2() {
+        let g = Arc::new(generators::grid2d(20, 20));
+        let gref = g.clone();
+        let (res, _) = comm::run(4, move |c| {
+            let strat = Strategy::default();
+            parmetis_like_order(&c, &g, &strat).unwrap().ordering
+        });
+        for o in &res {
+            o.validate().unwrap();
+            assert_eq!(o.iperm, res[0].iperm);
+        }
+        let s = symbolic_cholesky(&gref, &res[0]);
+        assert!(s.opc > 0.0);
+    }
+
+    #[test]
+    fn ptscotch_beats_baseline_at_p8() {
+        // The paper's headline claim, in miniature: at higher process
+        // counts PT-Scotch orders at least as well as the ParMETIS-like
+        // flow.
+        let g = Arc::new(generators::grid2d(30, 30));
+        let gref = g.clone();
+        let (res, _) = comm::run(8, move |c| {
+            let strat = Strategy::default();
+            let pm = parmetis_like_order(&c, &g, &strat).unwrap().ordering;
+            let refiner = FmRefiner::default();
+            let pts = crate::dist::parallel_order(&c, &g, &strat, &refiner).ordering;
+            (pm, pts)
+        });
+        let (pm, pts) = &res[0];
+        let s_pm = symbolic_cholesky(&gref, pm);
+        let s_pts = symbolic_cholesky(&gref, pts);
+        // Allow slack — on tiny instances the gap is noisy — but the
+        // baseline must not win by a large margin.
+        assert!(
+            s_pts.opc <= s_pm.opc * 1.15,
+            "PTS {} vs PM {}",
+            s_pts.opc,
+            s_pm.opc
+        );
+    }
+}

@@ -1,0 +1,497 @@
+//! In-process MPI-like communicator (S9).
+//!
+//! PT-Scotch is an MPI program; this container has no MPI (and one core),
+//! so we reproduce the *programming model* instead of the transport: one
+//! OS thread per rank, typed point-to-point messages with tag matching,
+//! the collectives the algorithms need (barrier, allgatherv, allreduce,
+//! alltoallv, broadcast, exclusive scan), communicator splitting for the
+//! recursive nested-dissection subgroups, and per-rank traffic counters
+//! that substitute for wallclock in the scalability analysis
+//! (DESIGN.md §3). The distributed algorithms in [`crate::dist`] only see
+//! this API and would map 1:1 onto MPI.
+
+pub mod stats;
+
+pub use stats::{MemTracker, StatsSnapshot};
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering as AOrd};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// One in-flight message.
+struct Packet {
+    src: usize, // global rank
+    tag: u64,
+    data: Box<dyn Any + Send>,
+}
+
+/// Per-thread mailbox: a deque of packets plus a wakeup condvar.
+#[derive(Default)]
+struct Mailbox {
+    queue: Mutex<VecDeque<Packet>>,
+    avail: Condvar,
+}
+
+/// Shared transport: one mailbox per global rank + traffic counters.
+struct Transport {
+    boxes: Vec<Mailbox>,
+    sent_bytes: Vec<AtomicU64>,
+    sent_msgs: Vec<AtomicU64>,
+}
+
+/// A communicator handle held by one rank (thread). Sub-communicators
+/// created by [`Comm::split`] share the transport but re-rank members.
+pub struct Comm {
+    /// Global rank (thread index) of this endpoint.
+    grank: usize,
+    /// Rank within this communicator.
+    rank: usize,
+    /// Global ranks of the members, ascending; `members[rank] == grank`.
+    members: Arc<Vec<usize>>,
+    /// Tag namespace of this communicator (prevents cross-group mixups
+    /// when sibling subgroups run concurrently).
+    scope: u64,
+    /// Monotonic per-communicator collective counter (all members call
+    /// collectives in the same order, so it stays in sync).
+    op_seq: std::cell::Cell<u64>,
+    transport: Arc<Transport>,
+}
+
+/// Spawn `p` ranks, run `f(comm)` on each, join, and return the results
+/// in rank order together with the traffic statistics.
+pub fn run<R, F>(p: usize, f: F) -> (Vec<R>, StatsSnapshot)
+where
+    R: Send + 'static,
+    F: Fn(Comm) -> R + Send + Sync + 'static,
+{
+    assert!(p >= 1, "need at least one rank");
+    let transport = Arc::new(Transport {
+        boxes: (0..p).map(|_| Mailbox::default()).collect(),
+        sent_bytes: (0..p).map(|_| AtomicU64::new(0)).collect(),
+        sent_msgs: (0..p).map(|_| AtomicU64::new(0)).collect(),
+    });
+    let members = Arc::new((0..p).collect::<Vec<_>>());
+    let f = Arc::new(f);
+    let mut handles = Vec::with_capacity(p);
+    for r in 0..p {
+        let comm = Comm {
+            grank: r,
+            rank: r,
+            members: members.clone(),
+            scope: 0x5c07c4,
+            op_seq: std::cell::Cell::new(0),
+            transport: transport.clone(),
+        };
+        let f = f.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("rank{r}"))
+                .stack_size(16 << 20)
+                .spawn(move || f(comm))
+                .expect("spawn rank thread"),
+        );
+    }
+    let results: Vec<R> = handles
+        .into_iter()
+        .map(|h| h.join().expect("rank thread panicked"))
+        .collect();
+    let stats = StatsSnapshot {
+        bytes_sent: transport
+            .sent_bytes
+            .iter()
+            .map(|a| a.load(AOrd::Relaxed))
+            .collect(),
+        msgs_sent: transport
+            .sent_msgs
+            .iter()
+            .map(|a| a.load(AOrd::Relaxed))
+            .collect(),
+    };
+    (results, stats)
+}
+
+impl Comm {
+    /// Rank within this communicator.
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in this communicator.
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Global (thread) rank — stable across splits; used to derive
+    /// deterministic per-rank RNG streams.
+    #[inline]
+    pub fn global_rank(&self) -> usize {
+        self.grank
+    }
+
+    fn scoped(&self, tag: u64) -> u64 {
+        // Mix the scope into user tags; reserve the top bit for collectives.
+        (self
+            .scope
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(tag))
+            & !(1 << 63)
+    }
+
+    fn next_coll_tag(&self) -> u64 {
+        let s = self.op_seq.get();
+        self.op_seq.set(s + 1);
+        (1 << 63)
+            | (self
+                .scope
+                .wrapping_mul(0x2545_F491_4F6C_DD1D)
+                .wrapping_add(s)
+                >> 1)
+    }
+
+    fn send_raw(&self, to_local: usize, tag: u64, data: Box<dyn Any + Send>, bytes: usize) {
+        let dst = self.members[to_local];
+        let t = &self.transport;
+        t.sent_bytes[self.grank].fetch_add(bytes as u64, AOrd::Relaxed);
+        t.sent_msgs[self.grank].fetch_add(1, AOrd::Relaxed);
+        let mut q = t.boxes[dst].queue.lock().unwrap();
+        q.push_back(Packet {
+            src: self.grank,
+            tag,
+            data,
+        });
+        t.boxes[dst].avail.notify_all();
+    }
+
+    fn recv_raw(&self, from_local: usize, tag: u64) -> Box<dyn Any + Send> {
+        let src = self.members[from_local];
+        let mbox = &self.transport.boxes[self.grank];
+        let mut q = mbox.queue.lock().unwrap();
+        loop {
+            if let Some(pos) = q.iter().position(|p| p.src == src && p.tag == tag) {
+                return q.remove(pos).unwrap().data;
+            }
+            q = mbox.avail.wait(q).unwrap();
+        }
+    }
+
+    /// Send a typed vector to `to` (local rank) with a user tag.
+    pub fn send<T: Send + 'static>(&self, to: usize, tag: u64, data: Vec<T>) {
+        let bytes = data.len() * std::mem::size_of::<T>();
+        self.send_raw(to, self.scoped(tag), Box::new(data), bytes);
+    }
+
+    /// Receive a typed vector from `from` (local rank) with a user tag.
+    /// Panics on type mismatch — a programming error, like an MPI
+    /// datatype mismatch.
+    pub fn recv<T: Send + 'static>(&self, from: usize, tag: u64) -> Vec<T> {
+        *self
+            .recv_raw(from, self.scoped(tag))
+            .downcast::<Vec<T>>()
+            .expect("message type mismatch")
+    }
+
+    /// Barrier over this communicator (gather-to-root + broadcast).
+    pub fn barrier(&self) {
+        let tag = self.next_coll_tag();
+        if self.rank == 0 {
+            for r in 1..self.size() {
+                let _: Box<dyn Any + Send> = self.recv_raw(r, tag);
+            }
+            for r in 1..self.size() {
+                self.send_raw(r, tag, Box::new(Vec::<u8>::new()), 0);
+            }
+        } else if self.size() > 1 {
+            self.send_raw(0, tag, Box::new(Vec::<u8>::new()), 0);
+            let _ = self.recv_raw(0, tag);
+        }
+    }
+
+    /// Gather each rank's vector on every rank (returned in rank order).
+    pub fn allgatherv<T: Clone + Send + 'static>(&self, mine: Vec<T>) -> Vec<Vec<T>> {
+        let tag = self.next_coll_tag();
+        let p = self.size();
+        if p == 1 {
+            return vec![mine];
+        }
+        if self.rank == 0 {
+            let mut all = Vec::with_capacity(p);
+            all.push(mine);
+            for r in 1..p {
+                all.push(*self.recv_raw(r, tag).downcast::<Vec<T>>().unwrap());
+            }
+            let bytes: usize = all.iter().map(|v| v.len() * std::mem::size_of::<T>()).sum();
+            for r in 1..p {
+                self.send_raw(r, tag, Box::new(all.clone()), bytes);
+            }
+            all
+        } else {
+            let bytes = mine.len() * std::mem::size_of::<T>();
+            self.send_raw(0, tag, Box::new(mine), bytes);
+            *self.recv_raw(0, tag).downcast::<Vec<Vec<T>>>().unwrap()
+        }
+    }
+
+    /// All-reduce with an arbitrary associative fold over per-rank values.
+    pub fn allreduce<T, F>(&self, mine: T, fold: F) -> T
+    where
+        T: Clone + Send + 'static,
+        F: Fn(T, T) -> T,
+    {
+        let all = self.allgatherv(vec![mine]);
+        let mut it = all.into_iter().map(|mut v| v.pop().expect("one value"));
+        let first = it.next().expect("at least one rank");
+        it.fold(first, fold)
+    }
+
+    /// Sum-all-reduce of an `i64`.
+    pub fn allreduce_sum(&self, v: i64) -> i64 {
+        self.allreduce(v, |a, b| a + b)
+    }
+
+    /// Exclusive prefix sum across ranks (rank 0 gets 0).
+    pub fn exscan_sum(&self, v: u64) -> u64 {
+        let all = self.allgatherv(vec![v]);
+        all.iter().take(self.rank).map(|x| x[0]).sum()
+    }
+
+    /// Personalized all-to-all: `out[r]` goes to rank `r`; returns the
+    /// vectors received from each rank (in rank order).
+    pub fn alltoallv<T: Send + 'static>(&self, out: Vec<Vec<T>>) -> Vec<Vec<T>> {
+        assert_eq!(out.len(), self.size());
+        let tag = self.next_coll_tag();
+        let p = self.size();
+        let mut mine: Option<Vec<T>> = None;
+        // Deterministic order: send ascending, then receive ascending.
+        for (r, data) in out.into_iter().enumerate() {
+            if r == self.rank {
+                mine = Some(data);
+                continue;
+            }
+            let bytes = data.len() * std::mem::size_of::<T>();
+            self.send_raw(r, tag, Box::new(data), bytes);
+        }
+        let mut result: Vec<Vec<T>> = Vec::with_capacity(p);
+        for r in 0..p {
+            if r == self.rank {
+                result.push(mine.take().expect("own slot"));
+            } else {
+                result.push(*self.recv_raw(r, tag).downcast::<Vec<T>>().unwrap());
+            }
+        }
+        result
+    }
+
+    /// Broadcast from `root` to every rank.
+    pub fn bcast<T: Clone + Send + 'static>(&self, root: usize, data: Option<Vec<T>>) -> Vec<T> {
+        let tag = self.next_coll_tag();
+        if self.rank == root {
+            let data = data.expect("root must supply data");
+            let bytes = data.len() * std::mem::size_of::<T>();
+            for r in 0..self.size() {
+                if r != root {
+                    self.send_raw(r, tag, Box::new(data.clone()), bytes);
+                }
+            }
+            data
+        } else {
+            *self.recv_raw(root, tag).downcast::<Vec<T>>().unwrap()
+        }
+    }
+
+    /// Split into sub-communicators by color. Collective. Members of each
+    /// color are re-ranked by ascending parent rank. Sibling groups get
+    /// distinct tag scopes derived from the color.
+    pub fn split(&self, color: usize) -> Comm {
+        let colors = self.allgatherv(vec![color]);
+        let members: Vec<usize> = (0..self.size())
+            .filter(|&r| colors[r][0] == color)
+            .map(|r| self.members[r])
+            .collect();
+        let rank = members
+            .iter()
+            .position(|&g| g == self.grank)
+            .expect("caller is a member of its own color");
+        Comm {
+            grank: self.grank,
+            rank,
+            members: Arc::new(members),
+            scope: self.scope.wrapping_mul(31).wrapping_add(color as u64 + 1),
+            op_seq: std::cell::Cell::new(0),
+            transport: self.transport.clone(),
+        }
+    }
+
+    /// A derived endpoint with a distinct tag scope for use by an overlap
+    /// thread on the *same* rank (§3.1 builds the two induced subgraphs
+    /// concurrently). The clone talks to the same peers; tag scoping
+    /// keeps the two contexts' messages apart.
+    pub fn overlap_context(&self, ctx: u64) -> Comm {
+        Comm {
+            grank: self.grank,
+            rank: self.rank,
+            members: self.members.clone(),
+            scope: self.scope.wrapping_mul(131).wrapping_add(ctx + 7),
+            op_seq: std::cell::Cell::new(0),
+            transport: self.transport.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let (res, stats) = run(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 7, vec![1u64, 2, 3]);
+                0u64
+            } else {
+                let v: Vec<u64> = c.recv(0, 7);
+                v.iter().sum()
+            }
+        });
+        assert_eq!(res, vec![0, 6]);
+        assert_eq!(stats.msgs_sent[0], 1);
+        assert_eq!(stats.bytes_sent[0], 24);
+    }
+
+    #[test]
+    fn tag_matching_out_of_order() {
+        let (res, _) = run(2, |c| {
+            if c.rank() == 0 {
+                c.send(1, 1, vec![10i32]);
+                c.send(1, 2, vec![20i32]);
+                0
+            } else {
+                // Receive in reverse tag order.
+                let b: Vec<i32> = c.recv(0, 2);
+                let a: Vec<i32> = c.recv(0, 1);
+                a[0] + b[0] * 100
+            }
+        });
+        assert_eq!(res[1], 2010);
+    }
+
+    #[test]
+    fn allgatherv_orders_by_rank() {
+        let (res, _) = run(4, |c| {
+            let all = c.allgatherv(vec![c.rank() as u64 * 10]);
+            all.iter().map(|v| v[0]).collect::<Vec<_>>()
+        });
+        for r in res {
+            assert_eq!(r, vec![0, 10, 20, 30]);
+        }
+    }
+
+    #[test]
+    fn allreduce_and_exscan() {
+        let (res, _) = run(5, |c| {
+            let sum = c.allreduce_sum(c.rank() as i64 + 1);
+            let ex = c.exscan_sum((c.rank() as u64 + 1) * 2);
+            (sum, ex)
+        });
+        for (r, (sum, ex)) in res.iter().enumerate() {
+            assert_eq!(*sum, 15);
+            assert_eq!(*ex, (0..r).map(|k| (k as u64 + 1) * 2).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn alltoallv_personalizes() {
+        let (res, _) = run(3, |c| {
+            let out: Vec<Vec<u32>> = (0..3)
+                .map(|dst| vec![(c.rank() * 10 + dst) as u32])
+                .collect();
+            let inn = c.alltoallv(out);
+            inn.iter().map(|v| v[0]).collect::<Vec<u32>>()
+        });
+        assert_eq!(res[0], vec![0, 10, 20]);
+        assert_eq!(res[1], vec![1, 11, 21]);
+        assert_eq!(res[2], vec![2, 12, 22]);
+    }
+
+    #[test]
+    fn bcast_from_nonzero_root() {
+        let (res, _) = run(4, |c| {
+            let data = if c.rank() == 2 {
+                Some(vec![9u8, 8])
+            } else {
+                None
+            };
+            c.bcast(2, data)
+        });
+        for r in res {
+            assert_eq!(r, vec![9, 8]);
+        }
+    }
+
+    #[test]
+    fn split_creates_independent_groups() {
+        let (res, _) = run(6, |c| {
+            let half = if c.rank() < 3 { 0 } else { 1 };
+            let sub = c.split(half);
+            // Each subgroup sums its own members' global ranks.
+            let s = sub.allreduce_sum(c.rank() as i64);
+            (sub.rank(), sub.size(), s)
+        });
+        assert_eq!(res[0], (0, 3, 3)); // 0+1+2
+        assert_eq!(res[4], (1, 3, 12)); // 3+4+5
+    }
+
+    #[test]
+    fn split_uneven_sizes() {
+        // ⌈5/2⌉ = 3 and ⌊5/2⌋ = 2 — the any-P property PT-Scotch claims.
+        let (res, _) = run(5, |c| {
+            let half = if c.rank() < 3 { 0 } else { 1 };
+            let sub = c.split(half);
+            sub.size()
+        });
+        assert_eq!(res, vec![3, 3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn barrier_completes() {
+        let (res, _) = run(4, |c| {
+            for _ in 0..10 {
+                c.barrier();
+            }
+            true
+        });
+        assert!(res.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn nested_splits() {
+        let (res, _) = run(8, |c| {
+            let s1 = c.split(c.rank() / 4);
+            let s2 = s1.split(s1.rank() / 2);
+            (s2.size(), s2.allreduce_sum(1))
+        });
+        for r in res {
+            assert_eq!(r, (2, 2));
+        }
+    }
+
+    #[test]
+    fn overlap_contexts_do_not_cross_talk() {
+        let (res, _) = run(2, |c| {
+            let ca = c.overlap_context(0);
+            let cb = c.overlap_context(1);
+            if c.rank() == 0 {
+                cb.send(1, 3, vec![2u8]);
+                ca.send(1, 3, vec![1u8]);
+                0u8
+            } else {
+                let a: Vec<u8> = ca.recv(0, 3);
+                let b: Vec<u8> = cb.recv(0, 3);
+                a[0] * 10 + b[0]
+            }
+        });
+        assert_eq!(res[1], 12);
+    }
+}

@@ -1,0 +1,100 @@
+//! Per-rank traffic and memory accounting.
+//!
+//! On this single-core container, wallclock speedup is unmeasurable, so
+//! the scalability analysis of EXPERIMENTS.md reports what the paper's
+//! timing curves are made of: per-rank communication volume/counts and
+//! peak tracked memory (Figures 10–11 are per-process memory plots).
+
+/// Immutable snapshot of the transport counters after a run.
+#[derive(Clone, Debug)]
+pub struct StatsSnapshot {
+    /// Bytes sent by each global rank.
+    pub bytes_sent: Vec<u64>,
+    /// Messages sent by each global rank.
+    pub msgs_sent: Vec<u64>,
+}
+
+impl StatsSnapshot {
+    /// Total bytes sent by all ranks.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent.iter().sum()
+    }
+
+    /// Total messages sent by all ranks.
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs_sent.iter().sum()
+    }
+
+    /// Maximum bytes sent by any one rank (load-imbalance indicator).
+    pub fn max_bytes(&self) -> u64 {
+        self.bytes_sent.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Per-rank memory tracker for the graph working set. The distributed
+/// pipeline calls [`MemTracker::grow`]/[`MemTracker::shrink`] as graph
+/// fragments are created and dropped and records the running peak —
+/// reproducing the quantity plotted in Figures 10–11.
+#[derive(Debug, Default)]
+pub struct MemTracker {
+    live: std::cell::Cell<i64>,
+    peak: std::cell::Cell<i64>,
+}
+
+impl MemTracker {
+    /// New tracker with zero usage.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `bytes` of newly live graph data.
+    pub fn grow(&self, bytes: usize) {
+        let live = self.live.get() + bytes as i64;
+        self.live.set(live);
+        if live > self.peak.get() {
+            self.peak.set(live);
+        }
+    }
+
+    /// Register `bytes` of released graph data.
+    pub fn shrink(&self, bytes: usize) {
+        self.live.set(self.live.get() - bytes as i64);
+    }
+
+    /// Current live bytes.
+    pub fn live(&self) -> i64 {
+        self.live.get()
+    }
+
+    /// Peak live bytes observed.
+    pub fn peak(&self) -> i64 {
+        self.peak.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let s = StatsSnapshot {
+            bytes_sent: vec![10, 30, 20],
+            msgs_sent: vec![1, 2, 3],
+        };
+        assert_eq!(s.total_bytes(), 60);
+        assert_eq!(s.total_msgs(), 6);
+        assert_eq!(s.max_bytes(), 30);
+    }
+
+    #[test]
+    fn mem_tracker_peak() {
+        let t = MemTracker::new();
+        t.grow(100);
+        t.grow(50);
+        t.shrink(120);
+        t.grow(10);
+        assert_eq!(t.live(), 40);
+        assert_eq!(t.peak(), 150);
+    }
+}

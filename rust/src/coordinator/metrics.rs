@@ -1,0 +1,117 @@
+//! Reports and phase timers.
+
+use crate::order::{Ordering, SymbolicStats};
+use std::time::Instant;
+
+/// Everything a bench or example needs to print one paper-style row.
+#[derive(Debug)]
+pub struct OrderingReport {
+    /// The computed ordering.
+    pub ordering: Ordering,
+    /// Symbolic-factorization quality (NNZ, OPC, fill, tree height).
+    pub stats: SymbolicStats,
+    /// Wallclock of the ordering (single-core; see DESIGN.md §3 on the
+    /// time-vs-traffic substitution).
+    pub wall_seconds: f64,
+    /// Peak tracked graph memory per rank (Figures 10–11).
+    pub peak_mem_per_rank: Vec<i64>,
+    /// Bytes sent per rank.
+    pub bytes_sent_per_rank: Vec<u64>,
+    /// Messages sent per rank.
+    pub msgs_sent_per_rank: Vec<u64>,
+}
+
+impl OrderingReport {
+    /// `(min, avg, max)` of peak memory per rank, in bytes.
+    pub fn mem_min_avg_max(&self) -> (i64, f64, i64) {
+        let v = &self.peak_mem_per_rank;
+        let min = v.iter().copied().min().unwrap_or(0);
+        let max = v.iter().copied().max().unwrap_or(0);
+        let avg = if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<i64>() as f64 / v.len() as f64
+        };
+        (min, avg, max)
+    }
+
+    /// Total communication volume in bytes.
+    pub fn total_comm_bytes(&self) -> u64 {
+        self.bytes_sent_per_rank.iter().sum()
+    }
+}
+
+/// A simple named phase timer for the §Perf profiles.
+pub struct PhaseTimer {
+    t0: Instant,
+    /// Completed phases: (name, seconds).
+    pub phases: Vec<(String, f64)>,
+}
+
+impl Default for PhaseTimer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseTimer {
+    /// Start the clock.
+    pub fn new() -> PhaseTimer {
+        PhaseTimer {
+            t0: Instant::now(),
+            phases: Vec::new(),
+        }
+    }
+
+    /// Close the current phase under `name` and restart the clock.
+    pub fn lap(&mut self, name: &str) {
+        let dt = self.t0.elapsed().as_secs_f64();
+        self.phases.push((name.to_string(), dt));
+        self.t0 = Instant::now();
+    }
+
+    /// Render a one-line summary.
+    pub fn summary(&self) -> String {
+        self.phases
+            .iter()
+            .map(|(n, s)| format!("{n}={s:.3}s"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::order::SymbolicStats;
+
+    #[test]
+    fn mem_stats_aggregate() {
+        let r = OrderingReport {
+            ordering: Ordering::identity(1),
+            stats: SymbolicStats {
+                nnz: 1,
+                opc: 1.0,
+                fill_ratio: 1.0,
+                tree_height: 1,
+            },
+            wall_seconds: 0.0,
+            peak_mem_per_rank: vec![10, 30, 20],
+            bytes_sent_per_rank: vec![5, 6],
+            msgs_sent_per_rank: vec![1, 1],
+        };
+        let (min, avg, max) = r.mem_min_avg_max();
+        assert_eq!((min, max), (10, 30));
+        assert!((avg - 20.0).abs() < 1e-12);
+        assert_eq!(r.total_comm_bytes(), 11);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.lap("a");
+        t.lap("b");
+        assert_eq!(t.phases.len(), 2);
+        assert!(t.summary().contains("a="));
+    }
+}

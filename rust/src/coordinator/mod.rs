@@ -1,0 +1,211 @@
+//! Coordinator (S20): the strategy-driven front door of the system.
+//!
+//! [`OrderingService`] owns the XLA runtime (loaded once, reused across
+//! jobs — Python never runs at request time), picks the band refiner per
+//! strategy, launches the simulated rank fleet, and returns orderings
+//! with the paper's quality metrics and per-rank telemetry. The CLI
+//! (`rust/src/main.rs`), examples and all benches go through this API.
+
+pub mod metrics;
+
+pub use metrics::{OrderingReport, PhaseTimer};
+
+use crate::baseline::parmetis_like_order;
+use crate::comm;
+use crate::dist::parallel_order;
+use crate::graph::Graph;
+use crate::order::{nested_dissection, symbolic_cholesky, Ordering};
+use crate::rng::Rng;
+use crate::runtime::{load_shared, DiffusionRefiner, SharedRuntime};
+use crate::sep::diffusion::CpuDiffusionRefiner;
+use crate::sep::{BandRefiner, FmRefiner};
+use crate::strategy::{RefinerKind, Strategy};
+use crate::{Error, Result};
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which ordering engine to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Sequential Scotch-like pipeline (reference / Table 1 `O_SS`).
+    Sequential,
+    /// PT-Scotch parallel nested dissection on `p` simulated ranks.
+    PtScotch { p: usize },
+    /// ParMETIS-like baseline on `p` simulated ranks (power of two).
+    ParMetisLike { p: usize },
+}
+
+/// The ordering service: reusable across jobs.
+pub struct OrderingService {
+    runtime: Option<SharedRuntime>,
+}
+
+impl OrderingService {
+    /// Build a service without XLA artifacts (FM / CPU-diffusion only).
+    pub fn new_cpu_only() -> OrderingService {
+        OrderingService { runtime: None }
+    }
+
+    /// Build a service, loading AOT artifacts from `dir` if present.
+    /// Missing artifacts are not an error unless a strategy later
+    /// demands the XLA refiner.
+    pub fn new(dir: &Path) -> OrderingService {
+        let runtime = load_shared(dir).ok();
+        OrderingService { runtime }
+    }
+
+    /// Is the XLA runtime loaded?
+    pub fn has_xla(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Materialize the refiner for a strategy.
+    pub fn refiner(&self, strat: &Strategy) -> Result<Box<dyn BandRefiner + Send + Sync>> {
+        match strat.refiner {
+            RefinerKind::Fm => Ok(Box::new(FmRefiner {
+                params: strat.sep.fm.clone(),
+            })),
+            RefinerKind::DiffusionCpu => Ok(Box::new(CpuDiffusionRefiner {
+                fm: strat.sep.fm.clone(),
+                ..CpuDiffusionRefiner::default()
+            })),
+            RefinerKind::DiffusionXla => {
+                let rt = self.runtime.clone().ok_or_else(|| {
+                    Error::NoArtifact(
+                        "strategy requests the XLA refiner but no artifacts are loaded \
+                         (run `make artifacts`)"
+                            .into(),
+                    )
+                })?;
+                let mut r = DiffusionRefiner::new(rt);
+                r.fm = strat.sep.fm.clone();
+                Ok(Box::new(r))
+            }
+        }
+    }
+
+    /// Order `g` with the selected engine and strategy; returns the
+    /// ordering plus the full quality/telemetry report.
+    pub fn order(&self, g: &Graph, engine: Engine, strat: &Strategy) -> Result<OrderingReport> {
+        strat.validate()?;
+        g.validate()?;
+        let t0 = Instant::now();
+        let (ordering, peak_mem, comm_bytes, comm_msgs): (Ordering, Vec<i64>, Vec<u64>, Vec<u64>) =
+            match engine {
+                Engine::Sequential => {
+                    let refiner = self.refiner(strat)?;
+                    let mut rng = Rng::new(strat.seed);
+                    let o = nested_dissection(g, strat, refiner.as_ref(), &mut rng);
+                    (o, vec![g.footprint_bytes() as i64], vec![0], vec![0])
+                }
+                Engine::PtScotch { p } => {
+                    let ga = Arc::new(g.clone());
+                    let strat2 = strat.clone();
+                    let service_refiner: Arc<dyn BandRefiner + Send + Sync> =
+                        Arc::from(self.refiner(strat)?);
+                    let (res, stats) = comm::run(p, move |c| {
+                        let r = parallel_order(&c, &ga, &strat2, service_refiner.as_ref());
+                        (r.ordering, r.peak_mem)
+                    });
+                    let mems = res.iter().map(|(_, m)| *m).collect();
+                    let o = res.into_iter().next().expect("rank 0 result").0;
+                    (o, mems, stats.bytes_sent, stats.msgs_sent)
+                }
+                Engine::ParMetisLike { p } => {
+                    if !p.is_power_of_two() {
+                        return Err(Error::NonPowerOfTwo(p));
+                    }
+                    let ga = Arc::new(g.clone());
+                    let strat2 = strat.clone();
+                    let (res, stats) = comm::run(p, move |c| {
+                        let r = parmetis_like_order(&c, &ga, &strat2)?;
+                        Ok::<_, Error>((r.ordering, r.peak_mem))
+                    });
+                    let mut orderings = Vec::new();
+                    let mut mems = Vec::new();
+                    for r in res {
+                        let (o, m) = r?;
+                        orderings.push(o);
+                        mems.push(m);
+                    }
+                    (
+                        orderings.into_iter().next().expect("rank 0"),
+                        mems,
+                        stats.bytes_sent,
+                        stats.msgs_sent,
+                    )
+                }
+            };
+        let wall = t0.elapsed();
+        ordering.validate()?;
+        let stats = symbolic_cholesky(g, &ordering);
+        Ok(OrderingReport {
+            ordering,
+            stats,
+            wall_seconds: wall.as_secs_f64(),
+            peak_mem_per_rank: peak_mem,
+            bytes_sent_per_rank: comm_bytes,
+            msgs_sent_per_rank: comm_msgs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn sequential_engine_reports_quality() {
+        let g = generators::grid2d(16, 16);
+        let svc = OrderingService::new_cpu_only();
+        let rep = svc
+            .order(&g, Engine::Sequential, &Strategy::default())
+            .unwrap();
+        rep.ordering.validate().unwrap();
+        assert!(rep.stats.opc > 0.0);
+        assert!(rep.stats.nnz >= g.n() as u64);
+        assert!(rep.wall_seconds >= 0.0);
+    }
+
+    #[test]
+    fn ptscotch_engine_multirank() {
+        let g = generators::grid2d(18, 18);
+        let svc = OrderingService::new_cpu_only();
+        let rep = svc
+            .order(&g, Engine::PtScotch { p: 4 }, &Strategy::default())
+            .unwrap();
+        rep.ordering.validate().unwrap();
+        assert_eq!(rep.peak_mem_per_rank.len(), 4);
+        assert!(rep.bytes_sent_per_rank.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn parmetis_engine_requires_pow2() {
+        let g = generators::grid2d(10, 10);
+        let svc = OrderingService::new_cpu_only();
+        let err = svc
+            .order(&g, Engine::ParMetisLike { p: 6 }, &Strategy::default())
+            .unwrap_err();
+        assert!(matches!(err, Error::NonPowerOfTwo(6)));
+    }
+
+    #[test]
+    fn xla_strategy_without_artifacts_errors() {
+        let g = generators::grid2d(8, 8);
+        let svc = OrderingService::new_cpu_only();
+        let strat = Strategy::parse("refiner=xla").unwrap();
+        let err = svc.order(&g, Engine::Sequential, &strat).unwrap_err();
+        assert!(matches!(err, Error::NoArtifact(_)));
+    }
+
+    #[test]
+    fn cpu_diffusion_strategy_works() {
+        let g = generators::grid2d(14, 14);
+        let svc = OrderingService::new_cpu_only();
+        let strat = Strategy::parse("refiner=diffcpu").unwrap();
+        let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
+        rep.ordering.validate().unwrap();
+    }
+}

@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use std::fmt;
+
+/// Errors produced by the ptscotch library.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed graph structure (asymmetric adjacency, out-of-range ids…).
+    InvalidGraph(String),
+    /// Invalid ordering / permutation.
+    InvalidOrdering(String),
+    /// Invalid strategy or configuration value.
+    InvalidStrategy(String),
+    /// Distributed-layer error (rank mismatch, fold failure…).
+    Dist(String),
+    /// The ParMETIS-like baseline only supports power-of-two process
+    /// counts (the limitation the paper calls out in §3.2).
+    NonPowerOfTwo(usize),
+    /// I/O or parse error.
+    Io(String),
+    /// XLA/PJRT runtime error.
+    Runtime(String),
+    /// No AOT artifact available for the requested kernel/size bucket.
+    NoArtifact(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidGraph(m) => write!(f, "invalid graph: {m}"),
+            Error::InvalidOrdering(m) => write!(f, "invalid ordering: {m}"),
+            Error::InvalidStrategy(m) => write!(f, "invalid strategy: {m}"),
+            Error::Dist(m) => write!(f, "distributed error: {m}"),
+            Error::NonPowerOfTwo(p) => {
+                write!(f, "baseline requires a power-of-two process count, got {p}")
+            }
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::NoArtifact(m) => write!(f, "no artifact: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,165 @@
+//! Incremental construction of CSR graphs from edge lists.
+//!
+//! Used by the generators, the I/O readers, the coarse-graph builders and
+//! the distributed induced-subgraph / fold routines. Duplicate edges are
+//! merged by *summing* their weights (the behavior coarsening needs).
+
+use super::Graph;
+use crate::{Error, Result};
+
+/// Accumulates undirected edges and vertex weights, then emits a CSR
+/// [`Graph`] with sorted, deduplicated adjacency lists.
+#[derive(Clone, Debug)]
+pub struct GraphBuilder {
+    n: usize,
+    vwgt: Vec<i64>,
+    /// Directed arc triples `(u, v, w)`; both directions are recorded.
+    arcs: Vec<(u32, u32, i64)>,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph with `n` vertices, unit vertex weights.
+    pub fn new(n: usize) -> Self {
+        GraphBuilder {
+            n,
+            vwgt: vec![1; n],
+            arcs: Vec::new(),
+        }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Set the weight of one vertex.
+    pub fn set_vwgt(&mut self, v: usize, w: i64) {
+        self.vwgt[v] = w;
+    }
+
+    /// Add `w` to the weight of one vertex.
+    pub fn add_vwgt(&mut self, v: usize, w: i64) {
+        self.vwgt[v] += w;
+    }
+
+    /// Add an undirected edge with weight 1. Self-loops are ignored.
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        self.add_edge_w(u, v, 1);
+    }
+
+    /// Add an undirected weighted edge. Self-loops are ignored; duplicate
+    /// edges have their weights summed at build time.
+    pub fn add_edge_w(&mut self, u: usize, v: usize, w: i64) {
+        if u == v {
+            return;
+        }
+        debug_assert!(u < self.n && v < self.n);
+        self.arcs.push((u as u32, v as u32, w));
+        self.arcs.push((v as u32, u as u32, w));
+    }
+
+    /// Current number of recorded arcs (2× edges, before dedup).
+    pub fn arc_count(&self) -> usize {
+        self.arcs.len()
+    }
+
+    /// Emit the validated CSR graph.
+    pub fn build(mut self) -> Result<Graph> {
+        let n = self.n;
+        if self.vwgt.iter().any(|&w| w <= 0) {
+            return Err(Error::InvalidGraph("non-positive vertex weight".into()));
+        }
+        // Sort arcs by (src, dst) then merge duplicates, summing weights.
+        self.arcs.sort_unstable_by_key(|&(u, v, _)| (u, v));
+        let mut xadj = vec![0usize; n + 1];
+        let mut adj: Vec<u32> = Vec::with_capacity(self.arcs.len());
+        let mut ewgt: Vec<i64> = Vec::with_capacity(self.arcs.len());
+        let mut i = 0;
+        while i < self.arcs.len() {
+            let (u, v, mut w) = self.arcs[i];
+            i += 1;
+            while i < self.arcs.len() && self.arcs[i].0 == u && self.arcs[i].1 == v {
+                w += self.arcs[i].2;
+                i += 1;
+            }
+            adj.push(v);
+            ewgt.push(w);
+            xadj[u as usize + 1] += 1;
+        }
+        for v in 0..n {
+            xadj[v + 1] += xadj[v];
+        }
+        let g = Graph {
+            xadj,
+            adj,
+            vwgt: self.vwgt,
+            ewgt,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_triangle() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        let g = b.build().unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+    }
+
+    #[test]
+    fn merges_duplicate_edges() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge_w(0, 1, 2);
+        b.add_edge_w(1, 0, 3);
+        let g = b.build().unwrap();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.edge_weights(0), &[5]);
+        assert_eq!(g.edge_weights(1), &[5]);
+    }
+
+    #[test]
+    fn ignores_self_loops() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 0);
+        b.add_edge(0, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn isolated_vertices_ok() {
+        let b = GraphBuilder::new(4);
+        let g = b.build().unwrap();
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn vertex_weights_respected() {
+        let mut b = GraphBuilder::new(2);
+        b.set_vwgt(0, 5);
+        b.add_vwgt(1, 2);
+        b.add_edge(0, 1);
+        let g = b.build().unwrap();
+        assert_eq!(g.vwgt, vec![5, 3]);
+        assert_eq!(g.total_vwgt(), 8);
+    }
+
+    #[test]
+    fn rejects_zero_vwgt() {
+        let mut b = GraphBuilder::new(1);
+        b.set_vwgt(0, 0);
+        assert!(b.build().is_err());
+    }
+}

@@ -1,0 +1,351 @@
+//! Graph generators (S2): regular meshes plus synthetic analogs of the
+//! paper's test matrices (Table 1).
+//!
+//! The paper evaluates on matrices from CEA, the Parasol project and the
+//! University of Florida collection (audikw1, cage15, brgm, qimonda07,
+//! thread, …). Those files are not redistributable/downloadable in this
+//! offline environment, so we generate structural analogs that match the
+//! properties ordering quality actually depends on — dimensionality
+//! (2D/3D mesh vs expander vs circuit), degree distribution and locality —
+//! as documented in DESIGN.md §3. Real matrices can be substituted via
+//! [`crate::graph::io`] when available.
+
+use super::{Graph, GraphBuilder};
+use crate::rng::Rng;
+
+/// Path graph on `n` vertices with edge weight `w` (test helper).
+pub fn path(n: usize, w: i64) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        b.add_edge_w(v - 1, v, w);
+    }
+    b.build().expect("path is valid")
+}
+
+/// Cycle graph on `n ≥ 3` vertices.
+pub fn cycle(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for v in 0..n {
+        b.add_edge(v, (v + 1) % n);
+    }
+    b.build().expect("cycle is valid")
+}
+
+/// Complete graph on `n` vertices (small tests only).
+pub fn complete(n: usize) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            b.add_edge(u, v);
+        }
+    }
+    b.build().expect("complete is valid")
+}
+
+/// 5-point 2D grid `nx × ny` — the classic nested-dissection test family
+/// (separators are O(√n); OPC optimum is O(n^{3/2})).
+pub fn grid2d(nx: usize, ny: usize) -> Graph {
+    let idx = |x: usize, y: usize| y * nx + x;
+    let mut b = GraphBuilder::new(nx * ny);
+    for y in 0..ny {
+        for x in 0..nx {
+            if x + 1 < nx {
+                b.add_edge(idx(x, y), idx(x + 1, y));
+            }
+            if y + 1 < ny {
+                b.add_edge(idx(x, y), idx(x, y + 1));
+            }
+        }
+    }
+    b.build().expect("grid2d is valid")
+}
+
+/// 7-point 3D grid `nx × ny × nz` — the mesh family behind the paper's
+/// conesphere / coupole / brgm analogs (separators O(n^{2/3})).
+pub fn grid3d(nx: usize, ny: usize, nz: usize) -> Graph {
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    let mut b = GraphBuilder::new(nx * ny * nz);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                if x + 1 < nx {
+                    b.add_edge(idx(x, y, z), idx(x + 1, y, z));
+                }
+                if y + 1 < ny {
+                    b.add_edge(idx(x, y, z), idx(x, y + 1, z));
+                }
+                if z + 1 < nz {
+                    b.add_edge(idx(x, y, z), idx(x, y, z + 1));
+                }
+            }
+        }
+    }
+    b.build().expect("grid3d is valid")
+}
+
+/// 27-point 3D grid (all neighbors in the surrounding cube) — a denser
+/// finite-element-like mesh, average degree ≈ 26.
+pub fn grid3d_27pt(nx: usize, ny: usize, nz: usize) -> Graph {
+    let idx = |x: usize, y: usize, z: usize| (z * ny + y) * nx + x;
+    let mut b = GraphBuilder::new(nx * ny * nz);
+    for z in 0..nz {
+        for y in 0..ny {
+            for x in 0..nx {
+                let v = idx(x, y, z);
+                for dz in 0..=1usize {
+                    for dy in -(1isize)..=1 {
+                        for dx in -(1isize)..=1 {
+                            if dz == 0 && (dy < 0 || (dy == 0 && dx <= 0)) {
+                                continue; // enumerate each pair once
+                            }
+                            let (nx_, ny_, nz_) = (
+                                x as isize + dx,
+                                y as isize + dy,
+                                z as isize + dz as isize,
+                            );
+                            if nx_ < 0
+                                || ny_ < 0
+                                || nx_ >= nx as isize
+                                || ny_ >= ny as isize
+                                || nz_ >= nz as isize
+                            {
+                                continue;
+                            }
+                            b.add_edge(v, idx(nx_ as usize, ny_ as usize, nz_ as usize));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    b.build().expect("grid3d_27pt is valid")
+}
+
+/// `audikw1` analog: a 27-point 3D mesh with one *contiguous* cluster of
+/// very-high-degree vertices (the paper attributes audikw1's per-process
+/// memory imbalance, Fig. 10, to "a set of contiguous vertices of very
+/// high degree"). `cluster_frac` of the vertices (a contiguous id range)
+/// get ≈ `cluster_extra` additional intra-cluster edges each.
+pub fn audikw_like(
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    cluster_frac: f64,
+    cluster_extra: usize,
+    seed: u64,
+) -> Graph {
+    let n = nx * ny * nz;
+    let base = grid3d_27pt(nx, ny, nz);
+    let mut b = GraphBuilder::new(n);
+    for v in 0..n {
+        for &u in base.neighbors(v) {
+            if (u as usize) > v {
+                b.add_edge(v, u as usize);
+            }
+        }
+    }
+    let mut rng = Rng::new(seed);
+    let csize = ((n as f64 * cluster_frac) as usize).max(2).min(n);
+    let cstart = (n - csize) / 2; // contiguous range in the middle
+    for v in cstart..cstart + csize {
+        for _ in 0..cluster_extra {
+            let u = cstart + rng.below(csize);
+            if u != v {
+                b.add_edge(v, u);
+            }
+        }
+    }
+    b.build().expect("audikw_like is valid")
+}
+
+/// `cage15` analog: a low-degree expander-like graph built as the union of
+/// `half_deg` random perfect matchings over a Hamiltonian cycle. DNA
+/// electrophoresis matrices behave like small-world expanders: small
+/// separators do not exist, orderings are expensive, and distributing the
+/// graph produces many ghost vertices (the Fig. 11 effect).
+pub fn cage_like(n: usize, half_deg: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for v in 0..n {
+        b.add_edge(v, (v + 1) % n); // connectivity backbone
+    }
+    for _ in 0..half_deg {
+        let p = rng.permutation(n);
+        for pair in p.chunks_exact(2) {
+            b.add_edge(pair[0], pair[1]);
+        }
+    }
+    b.build().expect("cage_like is valid")
+}
+
+/// `qimonda07` analog: a circuit-simulation-like graph — very sparse
+/// (average degree ≈ 6.8), mostly local wiring along a linear placement
+/// with a few long-range nets.
+pub fn qimonda_like(n: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        b.add_edge(v - 1, v); // local chain
+    }
+    // ~2.2 extra local edges per vertex within a window, plus ~0.2 global.
+    for v in 0..n {
+        for _ in 0..2 {
+            let off = 2 + rng.below(14);
+            if v + off < n {
+                b.add_edge(v, v + off);
+            }
+        }
+        if rng.below(5) == 0 {
+            let u = rng.below(n);
+            if u != v {
+                b.add_edge(v, u);
+            }
+        }
+    }
+    b.build().expect("qimonda_like is valid")
+}
+
+/// `thread` analog: a small, very dense connector problem — average degree
+/// ≈ `band` via a banded dense structure with random skips.
+pub fn thread_like(n: usize, band: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for v in 0..n {
+        let lim = (v + band / 2).min(n - 1);
+        for u in (v + 1)..=lim {
+            // Dense band with 80% fill.
+            if rng.below(5) != 0 {
+                b.add_edge(v, u);
+            }
+        }
+    }
+    b.build().expect("thread_like is valid")
+}
+
+/// Random geometric-ish mesh used for property tests: a jittered grid with
+/// some diagonal edges (irregular but planar-ish).
+pub fn irregular_mesh(nx: usize, ny: usize, seed: u64) -> Graph {
+    let base = grid2d(nx, ny);
+    let mut rng = Rng::new(seed);
+    let idx = |x: usize, y: usize| y * nx + x;
+    let mut b = GraphBuilder::new(nx * ny);
+    for v in 0..base.n() {
+        for &u in base.neighbors(v) {
+            if (u as usize) > v {
+                b.add_edge(v, u as usize);
+            }
+        }
+    }
+    for y in 0..ny.saturating_sub(1) {
+        for x in 0..nx.saturating_sub(1) {
+            if rng.coin() {
+                b.add_edge(idx(x, y), idx(x + 1, y + 1));
+            } else {
+                b.add_edge(idx(x + 1, y), idx(x, y + 1));
+            }
+        }
+    }
+    b.build().expect("irregular_mesh is valid")
+}
+
+/// The named analog suite mirroring Table 1 of the paper, at a scale that
+/// fits this container's single-core budget. Sizes are configurable via
+/// `scale` (1 = bench default).
+pub fn table1_suite(scale: usize) -> Vec<(&'static str, Graph)> {
+    let s = scale.max(1);
+    vec![
+        ("grid3d-s", grid3d(12 * s, 12 * s, 12 * s)),
+        ("audikw-like", audikw_like(10 * s, 10 * s, 10 * s, 0.02, 40, 1)),
+        ("cage-like", cage_like(12_000 * s * s, 8, 2)),
+        ("conesphere-like", grid3d_27pt(9 * s, 9 * s, 9 * s)),
+        ("qimonda-like", qimonda_like(30_000 * s * s, 3)),
+        ("thread-like", thread_like(2_000 * s, 120, 4)),
+        ("grid2d-l", grid2d(110 * s, 110 * s)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid2d_counts() {
+        let g = grid2d(4, 3);
+        assert_eq!(g.n(), 12);
+        assert_eq!(g.m(), 3 * 3 + 4 * 2); // horizontal + vertical
+        g.validate().unwrap();
+        let (_, nc) = g.components();
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn grid3d_counts() {
+        let g = grid3d(3, 3, 3);
+        assert_eq!(g.n(), 27);
+        assert_eq!(g.m(), 2 * 9 * 3); // 3 directions × 2·9 edges
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn grid3d_27pt_degree() {
+        let g = grid3d_27pt(5, 5, 5);
+        g.validate().unwrap();
+        // interior vertex (2,2,2) has full 26-neighborhood
+        let center = (2 * 5 + 2) * 5 + 2;
+        assert_eq!(g.degree(center), 26);
+        let (_, nc) = g.components();
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn audikw_like_has_high_degree_cluster() {
+        let g = audikw_like(8, 8, 8, 0.05, 30, 7);
+        g.validate().unwrap();
+        assert!(g.max_degree() > 40, "max degree {}", g.max_degree());
+        let (_, nc) = g.components();
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn cage_like_is_connected_low_degree() {
+        let g = cage_like(2000, 8, 5);
+        g.validate().unwrap();
+        let (_, nc) = g.components();
+        assert_eq!(nc, 1);
+        let avg = g.avg_degree();
+        assert!((8.0..=20.0).contains(&avg), "avg degree {avg}");
+    }
+
+    #[test]
+    fn qimonda_like_sparse() {
+        let g = qimonda_like(5000, 9);
+        g.validate().unwrap();
+        let avg = g.avg_degree();
+        assert!((4.0..=9.0).contains(&avg), "avg degree {avg}");
+        let (_, nc) = g.components();
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn thread_like_dense() {
+        let g = thread_like(500, 100, 3);
+        g.validate().unwrap();
+        assert!(g.avg_degree() > 50.0);
+    }
+
+    #[test]
+    fn irregular_mesh_valid_connected() {
+        let g = irregular_mesh(10, 10, 17);
+        g.validate().unwrap();
+        let (_, nc) = g.components();
+        assert_eq!(nc, 1);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = cage_like(500, 4, 42);
+        let b = cage_like(500, 4, 42);
+        assert_eq!(a.xadj, b.xadj);
+        assert_eq!(a.adj, b.adj);
+    }
+}

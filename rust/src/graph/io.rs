@@ -1,0 +1,272 @@
+//! Graph I/O (S3): CHACO/Metis `.graph` and MatrixMarket readers/writers.
+//!
+//! These let real paper matrices (audikw1, cage15, …) drop into every
+//! bench and example when available; the offline runs use the generator
+//! analogs instead (DESIGN.md §3).
+
+use super::{Graph, GraphBuilder};
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+/// Read a CHACO / Metis `.graph` file.
+///
+/// Format: header `n m [fmt [ncon]]`, then one line per vertex listing
+/// 1-based neighbor ids; `fmt` bit 0 = edge weights, bit 1 = vertex
+/// weights (`10` = vwgt only, `1` = ewgt only, `11` = both).
+pub fn read_chaco<R: Read>(r: R) -> Result<Graph> {
+    let reader = BufReader::new(r);
+    let mut lines = reader.lines().filter_map(|l| {
+        let l = l.ok()?;
+        let t = l.trim().to_string();
+        if t.is_empty() || t.starts_with('%') || t.starts_with('#') {
+            None
+        } else {
+            Some(t)
+        }
+    });
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Io("empty .graph file".into()))?;
+    let h: Vec<usize> = header
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| Error::Io(format!("bad header token {t}"))))
+        .collect::<Result<_>>()?;
+    if h.len() < 2 {
+        return Err(Error::Io("header needs n and m".into()));
+    }
+    let (n, m) = (h[0], h[1]);
+    let fmt = h.get(2).copied().unwrap_or(0);
+    let has_ewgt = fmt % 10 == 1;
+    let has_vwgt = (fmt / 10) % 10 == 1;
+    let mut b = GraphBuilder::new(n);
+    let mut v = 0usize;
+    for line in lines {
+        if v >= n {
+            return Err(Error::Io("more vertex lines than n".into()));
+        }
+        let toks: Vec<i64> = line
+            .split_whitespace()
+            .map(|t| t.parse().map_err(|_| Error::Io(format!("bad token {t}"))))
+            .collect::<Result<_>>()?;
+        let mut i = 0;
+        if has_vwgt {
+            if toks.is_empty() {
+                return Err(Error::Io(format!("missing vwgt on line of vertex {v}")));
+            }
+            b.set_vwgt(v, toks[0]);
+            i = 1;
+        }
+        while i < toks.len() {
+            let u = toks[i] as usize;
+            if u == 0 || u > n {
+                return Err(Error::Io(format!("neighbor {u} out of range")));
+            }
+            let w = if has_ewgt {
+                i += 1;
+                *toks
+                    .get(i)
+                    .ok_or_else(|| Error::Io("missing edge weight".into()))?
+            } else {
+                1
+            };
+            // Each undirected edge appears on both endpoint lines; only add
+            // from the smaller endpoint to avoid double-weighting.
+            if u - 1 > v {
+                b.add_edge_w(v, u - 1, w);
+            }
+            i += 1;
+        }
+        v += 1;
+    }
+    if v != n {
+        return Err(Error::Io(format!("expected {n} vertex lines, got {v}")));
+    }
+    let g = b.build()?;
+    if g.m() != m {
+        return Err(Error::Io(format!(
+            "header claims {m} edges, file has {}",
+            g.m()
+        )));
+    }
+    Ok(g)
+}
+
+/// Write a graph in CHACO `.graph` format (with weights iff non-unit).
+pub fn write_chaco<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    let has_vwgt = g.vwgt.iter().any(|&x| x != 1);
+    let has_ewgt = g.ewgt.iter().any(|&x| x != 1);
+    let fmt = (has_vwgt as usize) * 10 + has_ewgt as usize;
+    if fmt != 0 {
+        writeln!(w, "{} {} {:02}", g.n(), g.m(), fmt)?;
+    } else {
+        writeln!(w, "{} {}", g.n(), g.m())?;
+    }
+    let mut line = String::new();
+    for v in 0..g.n() {
+        line.clear();
+        if has_vwgt {
+            line.push_str(&g.vwgt[v].to_string());
+        }
+        for (&u, &ew) in g.neighbors(v).iter().zip(g.edge_weights(v)) {
+            if !line.is_empty() {
+                line.push(' ');
+            }
+            line.push_str(&(u + 1).to_string());
+            if has_ewgt {
+                line.push(' ');
+                line.push_str(&ew.to_string());
+            }
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket coordinate file as the adjacency structure of a
+/// symmetric matrix (diagonal dropped, pattern symmetrized, values
+/// ignored — ordering is purely structural).
+pub fn read_matrix_market<R: Read>(r: R) -> Result<Graph> {
+    let reader = BufReader::new(r);
+    let mut lines = reader.lines().filter_map(|l| {
+        let l = l.ok()?;
+        let t = l.trim().to_string();
+        if t.is_empty() {
+            None
+        } else {
+            Some(t)
+        }
+    });
+    let banner = lines
+        .next()
+        .ok_or_else(|| Error::Io("empty MatrixMarket file".into()))?;
+    if !banner.starts_with("%%MatrixMarket") {
+        return Err(Error::Io("missing MatrixMarket banner".into()));
+    }
+    let mut size_line = None;
+    for l in lines.by_ref() {
+        if l.starts_with('%') {
+            continue;
+        }
+        size_line = Some(l);
+        break;
+    }
+    let size_line = size_line.ok_or_else(|| Error::Io("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .take(3)
+        .map(|t| t.parse().map_err(|_| Error::Io(format!("bad size token {t}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::Io("size line needs rows cols nnz".into()));
+    }
+    let (rows, cols) = (dims[0], dims[1]);
+    if rows != cols {
+        return Err(Error::Io("matrix must be square".into()));
+    }
+    let mut b = GraphBuilder::new(rows);
+    for l in lines {
+        if l.starts_with('%') {
+            continue;
+        }
+        let mut it = l.split_whitespace();
+        let i: usize = it
+            .next()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| Error::Io("bad entry row".into()))?;
+        let j: usize = it
+            .next()
+            .and_then(|t| t.parse().ok())
+            .ok_or_else(|| Error::Io("bad entry col".into()))?;
+        if i == 0 || j == 0 || i > rows || j > rows {
+            return Err(Error::Io(format!("entry ({i},{j}) out of range")));
+        }
+        if i != j {
+            b.add_edge_w(i - 1, j - 1, 1);
+        }
+    }
+    // Duplicate (i,j)/(j,i) entries are merged by the builder; reset the
+    // merged weights to 1 (pattern graph).
+    let mut g = b.build()?;
+    for w in g.ewgt.iter_mut() {
+        *w = 1;
+    }
+    Ok(g)
+}
+
+/// Load a graph from a path, dispatching on extension (`.graph`/`.chaco`
+/// vs `.mtx`).
+pub fn load(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path)?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => read_matrix_market(f),
+        _ => read_chaco(f),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn chaco_roundtrip_unweighted() {
+        let g = generators::grid2d(5, 4);
+        let mut buf = Vec::new();
+        write_chaco(&g, &mut buf).unwrap();
+        let h = read_chaco(&buf[..]).unwrap();
+        assert_eq!(g.xadj, h.xadj);
+        assert_eq!(g.adj, h.adj);
+        assert_eq!(g.vwgt, h.vwgt);
+        assert_eq!(g.ewgt, h.ewgt);
+    }
+
+    #[test]
+    fn chaco_roundtrip_weighted() {
+        let mut b = crate::graph::GraphBuilder::new(3);
+        b.set_vwgt(0, 4);
+        b.set_vwgt(2, 9);
+        b.add_edge_w(0, 1, 3);
+        b.add_edge_w(1, 2, 5);
+        let g = b.build().unwrap();
+        let mut buf = Vec::new();
+        write_chaco(&g, &mut buf).unwrap();
+        let h = read_chaco(&buf[..]).unwrap();
+        assert_eq!(g.vwgt, h.vwgt);
+        assert_eq!(g.ewgt, h.ewgt);
+        assert_eq!(g.adj, h.adj);
+    }
+
+    #[test]
+    fn chaco_rejects_bad_edge_count() {
+        let text = "2 5\n2\n1\n";
+        assert!(read_chaco(text.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn matrix_market_reads_symmetric_pattern() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                    % comment\n\
+                    3 3 4\n1 1\n2 1\n3 2\n3 3\n";
+        let g = read_matrix_market(text.as_bytes()).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2); // diagonal dropped
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(2), &[1]);
+    }
+
+    #[test]
+    fn matrix_market_merges_both_triangles() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    2 2 3\n1 2 1.5\n2 1 2.5\n1 1 3.0\n";
+        let g = read_matrix_market(text.as_bytes()).unwrap();
+        assert_eq!(g.m(), 1);
+        assert_eq!(g.ewgt, vec![1, 1]);
+    }
+
+    #[test]
+    fn matrix_market_rejects_rectangular() {
+        let text = "%%MatrixMarket matrix coordinate real general\n2 3 1\n1 2 1.0\n";
+        assert!(read_matrix_market(text.as_bytes()).is_err());
+    }
+}

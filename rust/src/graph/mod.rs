@@ -1,0 +1,363 @@
+//! Centralized graph substrate (S1): compressed-sparse-row graphs with
+//! vertex and edge weights, as used by the sequential Scotch-like pipeline
+//! and as the per-process fragment representation of the distributed layer.
+
+pub mod builder;
+pub mod generators;
+pub mod induced;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use induced::InducedGraph;
+
+use crate::{Error, Result};
+
+/// An undirected weighted graph in CSR form.
+///
+/// Invariants (checked by [`Graph::validate`]):
+/// * `xadj.len() == n + 1`, `xadj[0] == 0`, non-decreasing;
+/// * every `adj` entry is `< n` and never equal to its own vertex;
+/// * adjacency is symmetric with matching edge weights;
+/// * `vwgt` and `ewgt` are strictly positive.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    /// Per-vertex adjacency start offsets; length `n + 1`.
+    pub xadj: Vec<usize>,
+    /// Concatenated neighbor lists; length `2·m` (each edge stored twice).
+    pub adj: Vec<u32>,
+    /// Vertex weights (coarsened vertices accumulate weight).
+    pub vwgt: Vec<i64>,
+    /// Edge weights, parallel to `adj` (collapsed edges accumulate weight).
+    pub ewgt: Vec<i64>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Number of directed arcs (`2·m`).
+    #[inline]
+    pub fn arcs(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Neighbor list of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.adj[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    /// Edge weights parallel to [`Graph::neighbors`].
+    #[inline]
+    pub fn edge_weights(&self, v: usize) -> &[i64] {
+        &self.ewgt[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.xadj[v + 1] - self.xadj[v]
+    }
+
+    /// Sum of all vertex weights.
+    pub fn total_vwgt(&self) -> i64 {
+        self.vwgt.iter().sum()
+    }
+
+    /// Maximum vertex weight (0 for the empty graph).
+    pub fn max_vwgt(&self) -> i64 {
+        self.vwgt.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Maximum degree (0 for the empty graph).
+    pub fn max_degree(&self) -> usize {
+        (0..self.n()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Average degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n() == 0 {
+            0.0
+        } else {
+            self.arcs() as f64 / self.n() as f64
+        }
+    }
+
+    /// Build an unweighted graph (unit vertex and edge weights) from CSR
+    /// arrays. The arrays are validated.
+    pub fn from_csr(xadj: Vec<usize>, adj: Vec<u32>) -> Result<Self> {
+        let n = xadj.len().saturating_sub(1);
+        let g = Graph {
+            vwgt: vec![1; n],
+            ewgt: vec![1; adj.len()],
+            xadj,
+            adj,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Build a weighted graph from CSR arrays, with validation.
+    pub fn from_csr_weighted(
+        xadj: Vec<usize>,
+        adj: Vec<u32>,
+        vwgt: Vec<i64>,
+        ewgt: Vec<i64>,
+    ) -> Result<Self> {
+        let g = Graph {
+            xadj,
+            adj,
+            vwgt,
+            ewgt,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Approximate heap footprint in bytes (used by the per-rank memory
+    /// tracking that reproduces Figures 10–11).
+    pub fn footprint_bytes(&self) -> usize {
+        self.xadj.len() * std::mem::size_of::<usize>()
+            + self.adj.len() * std::mem::size_of::<u32>()
+            + self.vwgt.len() * std::mem::size_of::<i64>()
+            + self.ewgt.len() * std::mem::size_of::<i64>()
+    }
+
+    /// Full structural validation of the CSR invariants.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n();
+        if self.xadj.len() != n + 1 {
+            return Err(Error::InvalidGraph(format!(
+                "xadj.len() = {} but n + 1 = {}",
+                self.xadj.len(),
+                n + 1
+            )));
+        }
+        if self.xadj[0] != 0 || *self.xadj.last().unwrap() != self.adj.len() {
+            return Err(Error::InvalidGraph("xadj bounds mismatch".into()));
+        }
+        if self.ewgt.len() != self.adj.len() {
+            return Err(Error::InvalidGraph("ewgt length mismatch".into()));
+        }
+        for v in 0..n {
+            if self.xadj[v] > self.xadj[v + 1] {
+                return Err(Error::InvalidGraph(format!("xadj decreasing at {v}")));
+            }
+            if self.vwgt[v] <= 0 {
+                return Err(Error::InvalidGraph(format!("vwgt[{v}] <= 0")));
+            }
+        }
+        for (i, &u) in self.adj.iter().enumerate() {
+            if (u as usize) >= n {
+                return Err(Error::InvalidGraph(format!("adj[{i}] = {u} out of range")));
+            }
+            if self.ewgt[i] <= 0 {
+                return Err(Error::InvalidGraph(format!("ewgt[{i}] <= 0")));
+            }
+        }
+        for v in 0..n {
+            for (&u, &w) in self.neighbors(v).iter().zip(self.edge_weights(v)) {
+                let u = u as usize;
+                if u == v {
+                    return Err(Error::InvalidGraph(format!("self-loop at {v}")));
+                }
+                // Symmetry: v must appear in u's list with the same weight.
+                let pos = self.neighbors(u).iter().position(|&x| x as usize == v);
+                match pos {
+                    None => {
+                        return Err(Error::InvalidGraph(format!(
+                            "edge {v}->{u} has no reverse arc"
+                        )))
+                    }
+                    Some(k) => {
+                        if self.ewgt[self.xadj[u] + k] != w {
+                            return Err(Error::InvalidGraph(format!(
+                                "edge weight mismatch on {v}<->{u}"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Connected components; returns `(component id per vertex, count)`.
+    pub fn components(&self) -> (Vec<u32>, usize) {
+        let n = self.n();
+        let mut comp = vec![u32::MAX; n];
+        let mut nc = 0usize;
+        let mut stack = Vec::new();
+        for s in 0..n {
+            if comp[s] != u32::MAX {
+                continue;
+            }
+            comp[s] = nc as u32;
+            stack.push(s);
+            while let Some(v) = stack.pop() {
+                for &u in self.neighbors(v) {
+                    let u = u as usize;
+                    if comp[u] == u32::MAX {
+                        comp[u] = nc as u32;
+                        stack.push(u);
+                    }
+                }
+            }
+            nc += 1;
+        }
+        (comp, nc)
+    }
+
+    /// BFS distances from a set of sources, cut off at `max_dist`
+    /// (unreached vertices get `u32::MAX`). This is the reference
+    /// implementation of the band-membership computation; the XLA min-plus
+    /// kernel reproduces it on packed band graphs.
+    pub fn multi_source_bfs(&self, sources: &[usize], max_dist: u32) -> Vec<u32> {
+        let mut dist = vec![u32::MAX; self.n()];
+        let mut frontier: Vec<usize> = Vec::with_capacity(sources.len());
+        for &s in sources {
+            if dist[s] == u32::MAX {
+                dist[s] = 0;
+                frontier.push(s);
+            }
+        }
+        let mut next = Vec::new();
+        let mut d = 0;
+        while !frontier.is_empty() && d < max_dist {
+            d += 1;
+            for &v in &frontier {
+                for &u in self.neighbors(v) {
+                    let u = u as usize;
+                    if dist[u] == u32::MAX {
+                        dist[u] = d;
+                        next.push(u);
+                    }
+                }
+            }
+            std::mem::swap(&mut frontier, &mut next);
+            next.clear();
+        }
+        dist
+    }
+
+    /// A pseudo-peripheral vertex: start anywhere, repeatedly jump to the
+    /// farthest vertex of a BFS until eccentricity stops growing.
+    pub fn pseudo_peripheral(&self, start: usize) -> usize {
+        let mut v = start;
+        let mut ecc = 0u32;
+        for _ in 0..8 {
+            let dist = self.multi_source_bfs(&[v], u32::MAX);
+            let (far, fd) = dist
+                .iter()
+                .enumerate()
+                .filter(|(_, &d)| d != u32::MAX)
+                .max_by_key(|(_, &d)| d)
+                .map(|(i, &d)| (i, d))
+                .unwrap_or((v, 0));
+            if fd <= ecc {
+                break;
+            }
+            ecc = fd;
+            v = far;
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 0 - 1 - 2 path.
+    fn path3() -> Graph {
+        Graph::from_csr(vec![0, 1, 3, 4], vec![1, 0, 2, 1]).unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = path3();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.total_vwgt(), 3);
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_asymmetric() {
+        let g = Graph {
+            xadj: vec![0, 1, 1],
+            adj: vec![1],
+            vwgt: vec![1, 1],
+            ewgt: vec![1],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_self_loop() {
+        let g = Graph {
+            xadj: vec![0, 1],
+            adj: vec![0],
+            vwgt: vec![1],
+            ewgt: vec![1],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_weight_mismatch() {
+        let g = Graph {
+            xadj: vec![0, 1, 2],
+            adj: vec![1, 0],
+            vwgt: vec![1, 1],
+            ewgt: vec![2, 3],
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn components_of_disconnected() {
+        // Two disjoint edges: 0-1, 2-3.
+        let g = Graph::from_csr(vec![0, 1, 2, 3, 4], vec![1, 0, 3, 2]).unwrap();
+        let (comp, nc) = g.components();
+        assert_eq!(nc, 2);
+        assert_eq!(comp[0], comp[1]);
+        assert_eq!(comp[2], comp[3]);
+        assert_ne!(comp[0], comp[2]);
+    }
+
+    #[test]
+    fn bfs_distances() {
+        let g = path3();
+        let d = g.multi_source_bfs(&[0], u32::MAX);
+        assert_eq!(d, vec![0, 1, 2]);
+        let d = g.multi_source_bfs(&[0], 1);
+        assert_eq!(d, vec![0, 1, u32::MAX]);
+        let d = g.multi_source_bfs(&[0, 2], u32::MAX);
+        assert_eq!(d, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_path() {
+        let g = path3();
+        let p = g.pseudo_peripheral(1);
+        assert!(p == 0 || p == 2);
+    }
+
+    #[test]
+    fn footprint_positive() {
+        assert!(path3().footprint_bytes() > 0);
+    }
+}

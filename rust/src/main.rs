@@ -1,0 +1,191 @@
+//! `ptscotch` CLI — the leader entrypoint.
+//!
+//! ```text
+//! ptscotch order  --graph grid2d:64x64      -p 8 --engine pts [--strategy band=3,...]
+//! ptscotch order  --graph file:matrix.mtx   --engine seq
+//! ptscotch suite  --scale 1 -p 2,4,8        # Table-2/3-style sweep
+//! ptscotch info                             # artifact / runtime status
+//! ```
+//!
+//! Graph specs: `grid2d:NxM`, `grid3d:NxMxK`, `grid3d27:NxMxK`,
+//! `audikw:NxMxK`, `cage:N`, `qimonda:N`, `thread:N`, `file:PATH`.
+
+use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::graph::{generators, io, Graph};
+use ptscotch::runtime::XlaRuntime;
+use ptscotch::strategy::Strategy;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn parse_graph(spec: &str) -> Result<Graph, String> {
+    let (kind, arg) = spec.split_once(':').unwrap_or((spec, ""));
+    let dims = |s: &str| -> Result<Vec<usize>, String> {
+        s.split('x')
+            .map(|t| t.parse::<usize>().map_err(|_| format!("bad dim {t}")))
+            .collect()
+    };
+    match kind {
+        "grid2d" => {
+            let d = dims(arg)?;
+            if d.len() != 2 {
+                return Err("grid2d needs NxM".into());
+            }
+            Ok(generators::grid2d(d[0], d[1]))
+        }
+        "grid3d" => {
+            let d = dims(arg)?;
+            if d.len() != 3 {
+                return Err("grid3d needs NxMxK".into());
+            }
+            Ok(generators::grid3d(d[0], d[1], d[2]))
+        }
+        "grid3d27" => {
+            let d = dims(arg)?;
+            if d.len() != 3 {
+                return Err("grid3d27 needs NxMxK".into());
+            }
+            Ok(generators::grid3d_27pt(d[0], d[1], d[2]))
+        }
+        "audikw" => {
+            let d = dims(arg)?;
+            if d.len() != 3 {
+                return Err("audikw needs NxMxK".into());
+            }
+            Ok(generators::audikw_like(d[0], d[1], d[2], 0.02, 40, 1))
+        }
+        "cage" => Ok(generators::cage_like(
+            arg.parse().map_err(|_| "cage needs N")?,
+            8,
+            2,
+        )),
+        "qimonda" => Ok(generators::qimonda_like(
+            arg.parse().map_err(|_| "qimonda needs N")?,
+            3,
+        )),
+        "thread" => Ok(generators::thread_like(
+            arg.parse().map_err(|_| "thread needs N")?,
+            120,
+            4,
+        )),
+        "file" => io::load(Path::new(arg)).map_err(|e| e.to_string()),
+        other => Err(format!("unknown graph kind {other}")),
+    }
+}
+
+fn get_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn cmd_order(args: &[String]) -> Result<(), String> {
+    let spec = get_flag(args, "--graph").ok_or("--graph required")?;
+    let g = parse_graph(&spec)?;
+    let p: usize = get_flag(args, "-p")
+        .map(|s| s.parse().unwrap_or(1))
+        .unwrap_or(1);
+    let engine = match get_flag(args, "--engine").as_deref().unwrap_or("pts") {
+        "seq" => Engine::Sequential,
+        "pts" => Engine::PtScotch { p },
+        "pm" => Engine::ParMetisLike { p },
+        e => return Err(format!("unknown engine {e} (seq|pts|pm)")),
+    };
+    let strat = Strategy::parse(&get_flag(args, "--strategy").unwrap_or_default())
+        .map_err(|e| e.to_string())?;
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    eprintln!(
+        "graph {spec}: |V|={} |E|={} avg-deg={:.2}; engine={engine:?} xla={}",
+        g.n(),
+        g.m(),
+        g.avg_degree(),
+        svc.has_xla()
+    );
+    let rep = svc.order(&g, engine, &strat).map_err(|e| e.to_string())?;
+    let (mn, avg, mx) = rep.mem_min_avg_max();
+    println!(
+        "OPC={:.3e} NNZ={} fill={:.2} height={} time={:.2}s mem(min/avg/max)={}/{:.0}/{} B comm={} B",
+        rep.stats.opc,
+        rep.stats.nnz,
+        rep.stats.fill_ratio,
+        rep.stats.tree_height,
+        rep.wall_seconds,
+        mn,
+        avg,
+        mx,
+        rep.total_comm_bytes()
+    );
+    Ok(())
+}
+
+fn cmd_suite(args: &[String]) -> Result<(), String> {
+    let scale: usize = get_flag(args, "--scale")
+        .map(|s| s.parse().unwrap_or(1))
+        .unwrap_or(1);
+    let ps: Vec<usize> = get_flag(args, "-p")
+        .unwrap_or_else(|| "2,4".to_string())
+        .split(',')
+        .filter_map(|t| t.parse().ok())
+        .collect();
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    let strat = Strategy::parse(&get_flag(args, "--strategy").unwrap_or_default())
+        .map_err(|e| e.to_string())?;
+    println!(
+        "{:<18} {:>8} {:>10} {:>4} {:>12} {:>9}",
+        "graph", "|V|", "|E|", "p", "OPC", "t(s)"
+    );
+    for (name, g) in generators::table1_suite(scale) {
+        for &p in &ps {
+            let rep = svc
+                .order(&g, Engine::PtScotch { p }, &strat)
+                .map_err(|e| e.to_string())?;
+            println!(
+                "{:<18} {:>8} {:>10} {:>4} {:>12.4e} {:>9.2}",
+                name,
+                g.n(),
+                g.m(),
+                p,
+                rep.stats.opc,
+                rep.wall_seconds
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    let dir = XlaRuntime::default_dir();
+    println!("artifact dir: {}", dir.display());
+    match XlaRuntime::load(&dir) {
+        Ok(rt) => {
+            println!("runtime: loaded ({} steps/call)", rt.steps_per_call);
+            for b in rt.diffusion_buckets() {
+                println!("  diffusion bucket n={} d={}", b.n, b.d);
+            }
+        }
+        Err(e) => println!("runtime: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let r = match args.first().map(String::as_str) {
+        Some("order") => cmd_order(&args[1..]),
+        Some("suite") => cmd_suite(&args[1..]),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!(
+                "usage: ptscotch <order|suite|info> [--graph SPEC] [-p N] \
+                 [--engine seq|pts|pm] [--strategy k=v,...]"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Orderings and their quality evaluation (S7–S8): permutation
+//! containers, elimination trees, symbolic Cholesky factorization (the
+//! paper's NNZ and OPC metrics), minimum-degree leaf ordering and
+//! sequential nested dissection.
+
+pub mod elimtree;
+pub mod mmd;
+pub mod nd;
+pub mod symbolic;
+
+pub use nd::nested_dissection;
+pub use symbolic::{symbolic_cholesky, SymbolicStats};
+
+use crate::{Error, Result};
+
+/// A symmetric permutation of the vertices/unknowns.
+///
+/// `perm[old] = new` (direct permutation) and `iperm[new] = old` (inverse
+/// permutation). PT-Scotch materializes orderings as *inverse* permutation
+/// fragments because those can be built fully distributed (§2.2); the
+/// direct permutation is derived at assembly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Ordering {
+    /// `perm[old] = new`.
+    pub perm: Vec<usize>,
+    /// `iperm[new] = old`.
+    pub iperm: Vec<usize>,
+}
+
+impl Ordering {
+    /// The identity ordering on `n` unknowns.
+    pub fn identity(n: usize) -> Ordering {
+        let id: Vec<usize> = (0..n).collect();
+        Ordering {
+            perm: id.clone(),
+            iperm: id,
+        }
+    }
+
+    /// Build from an inverse permutation (`iperm[new] = old`).
+    pub fn from_iperm(iperm: Vec<usize>) -> Result<Ordering> {
+        let n = iperm.len();
+        let mut perm = vec![usize::MAX; n];
+        for (new, &old) in iperm.iter().enumerate() {
+            if old >= n {
+                return Err(Error::InvalidOrdering(format!(
+                    "iperm[{new}] = {old} out of range"
+                )));
+            }
+            if perm[old] != usize::MAX {
+                return Err(Error::InvalidOrdering(format!("duplicate old index {old}")));
+            }
+            perm[old] = new;
+        }
+        Ok(Ordering { perm, iperm })
+    }
+
+    /// Build from a direct permutation (`perm[old] = new`).
+    pub fn from_perm(perm: Vec<usize>) -> Result<Ordering> {
+        let n = perm.len();
+        let mut iperm = vec![usize::MAX; n];
+        for (old, &new) in perm.iter().enumerate() {
+            if new >= n {
+                return Err(Error::InvalidOrdering(format!(
+                    "perm[{old}] = {new} out of range"
+                )));
+            }
+            if iperm[new] != usize::MAX {
+                return Err(Error::InvalidOrdering(format!("duplicate new index {new}")));
+            }
+            iperm[new] = old;
+        }
+        Ok(Ordering { perm, iperm })
+    }
+
+    /// Number of unknowns.
+    pub fn n(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Check that `perm` and `iperm` are mutually inverse bijections.
+    pub fn validate(&self) -> Result<()> {
+        if self.perm.len() != self.iperm.len() {
+            return Err(Error::InvalidOrdering("perm/iperm length mismatch".into()));
+        }
+        for old in 0..self.perm.len() {
+            let new = self.perm[old];
+            if new >= self.iperm.len() || self.iperm[new] != old {
+                return Err(Error::InvalidOrdering(format!(
+                    "perm/iperm disagree at old = {old}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// An inverse-permutation *fragment*: the sub-ordering of one subgraph,
+/// starting at a global index (§2.2). The distributed ordering is the
+/// assembly of all fragments by ascending start index.
+#[derive(Clone, Debug)]
+pub struct OrderFragment {
+    /// Global start index of this fragment in the inverse permutation.
+    pub start: usize,
+    /// Original global vertex ids, in local inverse-permutation order.
+    pub verts: Vec<usize>,
+}
+
+/// Assemble fragments into a complete ordering of `n` unknowns.
+/// Fragments must tile `0..n` exactly.
+pub fn assemble_fragments(n: usize, mut frags: Vec<OrderFragment>) -> Result<Ordering> {
+    frags.sort_by_key(|f| f.start);
+    let mut iperm = Vec::with_capacity(n);
+    for f in &frags {
+        if f.start != iperm.len() {
+            return Err(Error::InvalidOrdering(format!(
+                "fragment starts at {} but {} indices are filled",
+                f.start,
+                iperm.len()
+            )));
+        }
+        iperm.extend_from_slice(&f.verts);
+    }
+    if iperm.len() != n {
+        return Err(Error::InvalidOrdering(format!(
+            "fragments cover {} of {n} indices",
+            iperm.len()
+        )));
+    }
+    Ordering::from_iperm(iperm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let o = Ordering::identity(5);
+        o.validate().unwrap();
+        assert_eq!(o.perm, o.iperm);
+    }
+
+    #[test]
+    fn from_iperm_inverts() {
+        let o = Ordering::from_iperm(vec![2, 0, 1]).unwrap();
+        o.validate().unwrap();
+        assert_eq!(o.perm, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn from_perm_inverts() {
+        let o = Ordering::from_perm(vec![1, 2, 0]).unwrap();
+        o.validate().unwrap();
+        assert_eq!(o.iperm, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_range() {
+        assert!(Ordering::from_iperm(vec![0, 0]).is_err());
+        assert!(Ordering::from_iperm(vec![0, 5]).is_err());
+        assert!(Ordering::from_perm(vec![1, 1]).is_err());
+    }
+
+    #[test]
+    fn assemble_tiles_fragments() {
+        let frags = vec![
+            OrderFragment {
+                start: 2,
+                verts: vec![0, 3],
+            },
+            OrderFragment {
+                start: 0,
+                verts: vec![2, 1],
+            },
+        ];
+        let o = assemble_fragments(4, frags).unwrap();
+        assert_eq!(o.iperm, vec![2, 1, 0, 3]);
+        o.validate().unwrap();
+    }
+
+    #[test]
+    fn assemble_rejects_gap_and_overlap() {
+        let gap = vec![OrderFragment {
+            start: 1,
+            verts: vec![0],
+        }];
+        assert!(assemble_fragments(2, gap).is_err());
+        let short = vec![OrderFragment {
+            start: 0,
+            verts: vec![0],
+        }];
+        assert!(assemble_fragments(2, short).is_err());
+    }
+}

@@ -1,0 +1,191 @@
+//! Symbolic Cholesky factorization: column counts of the factor `L` of
+//! the permuted matrix, yielding the paper's two quality metrics (§4):
+//!
+//! * **NNZ** — number of non-zeros of the factored reordered matrix;
+//! * **OPC** — operation count of Cholesky factorization, `Σ_c n_c²`
+//!   where `n_c` is the number of non-zeros of column `c`, diagonal
+//!   included.
+//!
+//! Column counts are obtained by the row-subtree property: `L(i,j) ≠ 0`
+//! iff `j` lies on an elimination-tree path from some `k ∈ adj(i), k < i`
+//! up to `i`. Walking each row's subtree with stamping costs
+//! `O(nnz(L))` — exact, and fast enough for every graph in the bench
+//! suite (the asymptotically optimal Gilbert–Ng–Peyton variant can be
+//! swapped in without changing the interface).
+
+use super::elimtree::{etree, etree_height};
+use super::Ordering;
+use crate::graph::Graph;
+
+/// Result of a symbolic factorization.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SymbolicStats {
+    /// Non-zeros of `L`, diagonal included (the paper's NNZ).
+    pub nnz: u64,
+    /// Cholesky operation count `Σ n_c²` (the paper's OPC).
+    pub opc: f64,
+    /// Fill ratio: `NNZ(L) / NNZ(tril(A))` with diagonals included.
+    pub fill_ratio: f64,
+    /// Elimination-tree height (factorization critical path proxy).
+    pub tree_height: usize,
+}
+
+/// Symbolically factor `PAPᵀ` where `A` is the adjacency structure of `g`
+/// (plus a full diagonal) and `P` is `order`.
+pub fn symbolic_cholesky(g: &Graph, order: &Ordering) -> SymbolicStats {
+    debug_assert!(order.validate().is_ok());
+    let n = g.n();
+    let parent = etree(g, order);
+    let mut count = vec![1u64; n]; // diagonal of every column
+    let mut stamp = vec![usize::MAX; n];
+    for i in 0..n {
+        stamp[i] = i; // row i never walks past itself
+        let old_i = order.iperm[i];
+        for &u in g.neighbors(old_i) {
+            let mut j = order.perm[u as usize];
+            if j >= i {
+                continue;
+            }
+            // Walk up the etree until an already-stamped column.
+            while stamp[j] != i {
+                stamp[j] = i;
+                count[j] += 1; // L(i,j) ≠ 0
+                j = parent[j];
+                debug_assert!(j != usize::MAX, "walk fell off the tree");
+            }
+        }
+    }
+    let nnz: u64 = count.iter().sum();
+    let opc: f64 = count.iter().map(|&c| (c as f64) * (c as f64)).sum();
+    let nnz_a = (g.arcs() / 2 + n) as f64;
+    SymbolicStats {
+        nnz,
+        opc,
+        fill_ratio: nnz as f64 / nnz_a,
+        tree_height: etree_height(&parent),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    /// Brute-force symbolic factorization by explicit elimination:
+    /// O(n³)-ish, for cross-checking on small graphs.
+    fn brute_force(g: &Graph, order: &Ordering) -> (u64, f64) {
+        let n = g.n();
+        // adjacency sets in new indices
+        let mut rows: Vec<std::collections::BTreeSet<usize>> =
+            vec![std::collections::BTreeSet::new(); n];
+        for v in 0..n {
+            for &u in g.neighbors(v) {
+                let (a, b) = (order.perm[v], order.perm[u as usize]);
+                if a != b {
+                    rows[a.max(b)].insert(a.min(b));
+                }
+            }
+        }
+        // Column structures of L by elimination.
+        let mut cols: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, row) in rows.iter().enumerate() {
+            for &j in row {
+                cols[j].push(i);
+            }
+        }
+        // Fill: eliminating column j connects all later nonzeros of col j
+        // to the smallest one (the parent) — standard symbolic elimination.
+        let mut nnz = 0u64;
+        let mut opc = 0f64;
+        let mut colsets: Vec<std::collections::BTreeSet<usize>> = cols
+            .iter()
+            .map(|c| c.iter().copied().collect())
+            .collect();
+        for j in 0..n {
+            let below: Vec<usize> = colsets[j].iter().copied().filter(|&i| i > j).collect();
+            let c = below.len() as u64 + 1;
+            nnz += c;
+            opc += (c as f64) * (c as f64);
+            if let Some(&p) = below.first() {
+                for &i in &below[1..] {
+                    colsets[p].insert(i);
+                }
+            }
+        }
+        (nnz, opc)
+    }
+
+    #[test]
+    fn tridiagonal_has_no_fill() {
+        let g = generators::path(10, 1);
+        let o = Ordering::identity(10);
+        let s = symbolic_cholesky(&g, &o);
+        // L is bidiagonal: 2 per column except the last.
+        assert_eq!(s.nnz, 19);
+        assert_eq!(s.opc, 9.0 * 4.0 + 1.0);
+        assert!((s.fill_ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn arrow_matrix_orderings_differ() {
+        // Star graph: center first = dense fill; center last = none.
+        let mut b = GraphBuilder::new(6);
+        for v in 1..6 {
+            b.add_edge(0, v);
+        }
+        let g = b.build().unwrap();
+        let center_last = Ordering::from_iperm(vec![1, 2, 3, 4, 5, 0]).unwrap();
+        let center_first = Ordering::identity(6);
+        let good = symbolic_cholesky(&g, &center_last);
+        let bad = symbolic_cholesky(&g, &center_first);
+        assert_eq!(good.nnz, 11); // 5 leaf cols of 2 + center col of 1
+        assert_eq!(bad.nnz, 21); // full lower triangle
+        assert!(bad.opc > good.opc);
+    }
+
+    #[test]
+    fn matches_brute_force_on_grid() {
+        let g = generators::grid2d(5, 5);
+        for seed in [1u64, 2, 3] {
+            let mut rng = crate::rng::Rng::new(seed);
+            let o = Ordering::from_iperm(rng.permutation(25)).unwrap();
+            let s = symbolic_cholesky(&g, &o);
+            let (nnz, opc) = brute_force(&g, &o);
+            assert_eq!(s.nnz, nnz, "seed {seed}");
+            assert_eq!(s.opc, opc, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_on_irregular() {
+        let g = generators::irregular_mesh(6, 5, 4);
+        let mut rng = crate::rng::Rng::new(7);
+        let o = Ordering::from_iperm(rng.permutation(30)).unwrap();
+        let s = symbolic_cholesky(&g, &o);
+        let (nnz, opc) = brute_force(&g, &o);
+        assert_eq!(s.nnz, nnz);
+        assert_eq!(s.opc, opc);
+    }
+
+    #[test]
+    fn disconnected_components_are_independent() {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(3, 4);
+        b.add_edge(4, 5);
+        let g = b.build().unwrap();
+        let s = symbolic_cholesky(&g, &Ordering::identity(6));
+        assert_eq!(s.nnz, 2 * 5); // two tridiagonal 3×3 factors
+    }
+
+    #[test]
+    fn opc_is_at_least_nnz() {
+        let g = generators::grid3d(4, 4, 4);
+        let o = Ordering::identity(64);
+        let s = symbolic_cholesky(&g, &o);
+        assert!(s.opc >= s.nnz as f64);
+        assert!(s.tree_height >= 1);
+        assert!(s.fill_ratio >= 1.0);
+    }
+}

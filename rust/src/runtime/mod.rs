@@ -1,0 +1,265 @@
+//! XLA/PJRT runtime (S18): loads the AOT-compiled JAX/Pallas artifacts
+//! and runs them from the coordinator's band-refinement hot path.
+//!
+//! The interchange format is **HLO text** (`artifacts/*.hlo.txt`) — see
+//! `python/compile/aot.py` and /opt/xla-example: jax ≥ 0.5 emits protos
+//! with 64-bit instruction ids that the crate's XLA build rejects, while
+//! the text parser reassigns ids cleanly. One executable is compiled per
+//! `(kernel, size-bucket)`; band graphs are packed into the bucket's ELL
+//! layout ([`pack_ell`]) and padded rows carry zero weights, so the
+//! kernel needs no dynamic shapes. Python never runs at order time.
+
+pub mod ell;
+pub mod refiner;
+
+pub use ell::{pack_ell, pack_ell_clamped, EllPacked};
+pub use refiner::DiffusionRefiner;
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// A `Send` wrapper around [`XlaRuntime`].
+///
+/// SAFETY: the `xla` crate's client/executable types are `!Send` because
+/// they hold `Rc` refcounts and raw PJRT pointers. All of those objects
+/// live strictly *inside* one `XlaRuntime` value: our methods take
+/// `&self`, build every `Literal` locally, and convert results to plain
+/// `Vec<f32>` before returning, so no `Rc` clone or PJRT handle ever
+/// escapes. Accessed exclusively through `Mutex<SendRuntime>` (see
+/// [`SharedRuntime`]), all refcount traffic is serialized, which is the
+/// soundness condition `Rc` needs when a value migrates across threads.
+pub struct SendRuntime(pub XlaRuntime);
+unsafe impl Send for SendRuntime {}
+
+/// The shareable runtime handle used by refiners across rank threads.
+pub type SharedRuntime = Arc<Mutex<SendRuntime>>;
+
+/// Load artifacts and wrap them for cross-thread sharing.
+pub fn load_shared(dir: &Path) -> Result<SharedRuntime> {
+    Ok(Arc::new(Mutex::new(SendRuntime(XlaRuntime::load(dir)?))))
+}
+
+/// Identifies one compiled artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Bucket {
+    /// Padded vertex count (rows of the ELL block).
+    pub n: usize,
+    /// Padded neighbor-list width (columns of the ELL block).
+    pub d: usize,
+}
+
+/// A loaded artifact registry plus the PJRT CPU client.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    /// Diffusion executables by bucket; each runs `steps_per_call`
+    /// damped-averaging iterations.
+    diffusion: BTreeMap<Bucket, xla::PjRtLoadedExecutable>,
+    /// One-step min-plus (BFS) executables by bucket.
+    minplus: BTreeMap<Bucket, xla::PjRtLoadedExecutable>,
+    /// Iterations fused into one diffusion call (baked at AOT time).
+    pub steps_per_call: usize,
+}
+
+impl XlaRuntime {
+    /// Load every artifact listed in `<dir>/manifest.txt`. Lines:
+    /// `kernel n d k file`, `#` comments allowed.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| Error::NoArtifact(format!("{}: {e}", manifest.display())))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PJRT client: {e:?}")))?;
+        let mut rt = XlaRuntime {
+            client,
+            diffusion: BTreeMap::new(),
+            minplus: BTreeMap::new(),
+            steps_per_call: 8,
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = line.split_whitespace().collect();
+            if f.len() != 5 {
+                return Err(Error::NoArtifact(format!("bad manifest line: {line}")));
+            }
+            let (kernel, n, d, k, file) = (
+                f[0],
+                f[1].parse::<usize>()
+                    .map_err(|_| Error::NoArtifact(format!("bad n in {line}")))?,
+                f[2].parse::<usize>()
+                    .map_err(|_| Error::NoArtifact(format!("bad d in {line}")))?,
+                f[3].parse::<usize>()
+                    .map_err(|_| Error::NoArtifact(format!("bad k in {line}")))?,
+                f[4],
+            );
+            let path: PathBuf = dir.join(file);
+            let exe = rt.compile_file(&path)?;
+            let bucket = Bucket { n, d };
+            match kernel {
+                "diffusion" => {
+                    rt.steps_per_call = k;
+                    rt.diffusion.insert(bucket, exe);
+                }
+                "minplus" => {
+                    rt.minplus.insert(bucket, exe);
+                }
+                other => {
+                    return Err(Error::NoArtifact(format!("unknown kernel {other}")));
+                }
+            }
+        }
+        Ok(rt)
+    }
+
+    fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::NoArtifact("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e:?}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e:?}", path.display())))
+    }
+
+    /// Buckets with a diffusion executable, ascending.
+    pub fn diffusion_buckets(&self) -> Vec<Bucket> {
+        self.diffusion.keys().copied().collect()
+    }
+
+    /// Smallest diffusion bucket that fits `(n, d)`.
+    pub fn fit_diffusion(&self, n: usize, d: usize) -> Option<Bucket> {
+        self.diffusion
+            .keys()
+            .copied()
+            .filter(|b| b.n >= n && b.d >= d)
+            .min()
+    }
+
+    /// Run `steps_per_call` diffusion iterations on a packed band graph.
+    ///
+    /// `x` is the field, `fixed_mask`/`fixed_vals` clamp the anchors
+    /// (mask 1 = clamped). All vectors must have length `bucket.n`; the
+    /// ELL arrays must be `bucket.n × bucket.d` row-major.
+    pub fn diffusion_step(
+        &self,
+        bucket: Bucket,
+        x: &[f32],
+        fixed_mask: &[f32],
+        fixed_vals: &[f32],
+        ell: &EllPacked,
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .diffusion
+            .get(&bucket)
+            .ok_or_else(|| Error::NoArtifact(format!("diffusion bucket {bucket:?}")))?;
+        debug_assert_eq!(x.len(), bucket.n);
+        debug_assert_eq!(ell.nbr.len(), bucket.n * bucket.d);
+        let (n, d) = (bucket.n as i64, bucket.d as i64);
+        let lx = xla::Literal::vec1(x);
+        let lm = xla::Literal::vec1(fixed_mask);
+        let lv = xla::Literal::vec1(fixed_vals);
+        let ln = xla::Literal::vec1(&ell.nbr)
+            .reshape(&[n, d])
+            .map_err(|e| Error::Runtime(format!("reshape nbr: {e:?}")))?;
+        let lw = xla::Literal::vec1(&ell.w)
+            .reshape(&[n, d])
+            .map_err(|e| Error::Runtime(format!("reshape w: {e:?}")))?;
+        let out = exe
+            .execute::<xla::Literal>(&[lx, lm, lv, ln, lw])
+            .map_err(|e| Error::Runtime(format!("execute: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("sync: {e:?}")))?;
+        let t = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("tuple: {e:?}")))?;
+        t.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))
+    }
+
+    /// Run one min-plus (BFS relaxation) step: `dist' = min(dist,
+    /// min_nbr(dist)+1)` with masked (padded) entries contributing +inf.
+    pub fn minplus_step(
+        &self,
+        bucket: Bucket,
+        dist: &[f32],
+        ell: &EllPacked,
+    ) -> Result<Vec<f32>> {
+        let exe = self
+            .minplus
+            .get(&bucket)
+            .ok_or_else(|| Error::NoArtifact(format!("minplus bucket {bucket:?}")))?;
+        let (n, d) = (bucket.n as i64, bucket.d as i64);
+        let lx = xla::Literal::vec1(dist);
+        let ln = xla::Literal::vec1(&ell.nbr)
+            .reshape(&[n, d])
+            .map_err(|e| Error::Runtime(format!("reshape nbr: {e:?}")))?;
+        let lw = xla::Literal::vec1(&ell.w)
+            .reshape(&[n, d])
+            .map_err(|e| Error::Runtime(format!("reshape w: {e:?}")))?;
+        let out = exe
+            .execute::<xla::Literal>(&[lx, ln, lw])
+            .map_err(|e| Error::Runtime(format!("execute: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("sync: {e:?}")))?;
+        let t = out
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("tuple: {e:?}")))?;
+        t.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))
+    }
+
+    /// Smallest min-plus bucket that fits `(n, d)`.
+    pub fn fit_minplus(&self, n: usize, d: usize) -> Option<Bucket> {
+        self.minplus
+            .keys()
+            .copied()
+            .filter(|b| b.n >= n && b.d >= d)
+            .min()
+    }
+
+    /// Default artifact directory: `$PTSCOTCH_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("PTSCOTCH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Execution tests against real artifacts live in
+    // rust/tests/xla_integration.rs (they need `make artifacts` first).
+
+    #[test]
+    fn load_missing_dir_is_clean_error() {
+        match XlaRuntime::load(Path::new("/nonexistent/dir")) {
+            Err(Error::NoArtifact(_)) => {}
+            Err(e) => panic!("wrong error kind: {e}"),
+            Ok(_) => panic!("load must fail on a missing dir"),
+        }
+    }
+
+    #[test]
+    fn bucket_ordering_picks_smallest_fit() {
+        // BTreeMap ordering: (n, d) lexicographic. fit must prefer the
+        // smallest n that fits.
+        let b1 = Bucket { n: 256, d: 32 };
+        let b2 = Bucket { n: 1024, d: 32 };
+        assert!(b1 < b2);
+        let buckets = [b2, b1];
+        let fit = buckets
+            .iter()
+            .copied()
+            .filter(|b| b.n >= 300 && b.d >= 16)
+            .min();
+        assert_eq!(fit, Some(b2));
+    }
+}

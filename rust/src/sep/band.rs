@@ -1,0 +1,250 @@
+//! Band-graph extraction (§3.3): keep only vertices at distance ≤ `width`
+//! from the separator, replace each discarded side by a single *anchor*
+//! vertex of equal weight connected to the last kept layer of its part.
+//! Refining the much smaller band graph (with anchors locked) confines
+//! the separator to the band — the paper's key quality/scalability lever,
+//! with width 3 found optimal.
+
+use super::{SepState, BandRefiner, P0, P1, SEP};
+use crate::graph::{Graph, GraphBuilder};
+use crate::rng::Rng;
+
+/// A band graph: the extracted subgraph, the map back to parent vertices,
+/// the two anchor ids, the separator state restricted to the band, and
+/// the lock vector (anchors locked).
+#[derive(Clone, Debug)]
+pub struct BandGraph {
+    /// The band graph itself (band vertices + 2 anchors at the end).
+    pub graph: Graph,
+    /// `orig[i]` = parent-graph id of band vertex `i` (anchors excluded).
+    pub orig: Vec<usize>,
+    /// Index of the part-0 anchor (`orig.len()`).
+    pub anchor0: usize,
+    /// Index of the part-1 anchor (`orig.len() + 1`).
+    pub anchor1: usize,
+    /// Separator state on the band graph.
+    pub state: SepState,
+    /// Lock vector for FM: anchors are locked.
+    pub locked: Vec<bool>,
+}
+
+impl BandGraph {
+    /// Number of non-anchor band vertices.
+    pub fn band_n(&self) -> usize {
+        self.orig.len()
+    }
+}
+
+/// Extract the band of vertices at distance ≤ `width` from the separator
+/// of `state`. Returns `None` when the separator is empty (nothing to
+/// refine) — e.g. on disconnected graphs.
+pub fn extract_band(g: &Graph, state: &SepState, width: u32) -> Option<BandGraph> {
+    let seps = state.sep_vertices();
+    if seps.is_empty() {
+        return None;
+    }
+    let dist = g.multi_source_bfs(&seps, width);
+    let n = g.n();
+    let mut local = vec![u32::MAX; n];
+    let mut orig = Vec::new();
+    for v in 0..n {
+        if dist[v] != u32::MAX {
+            local[v] = orig.len() as u32;
+            orig.push(v);
+        }
+    }
+    let nb = orig.len();
+    let anchor0 = nb;
+    let anchor1 = nb + 1;
+    let mut b = GraphBuilder::new(nb + 2);
+    // Anchor weights = total excluded weight per part (≥ 1 to satisfy the
+    // positive-weight invariant when a whole part lies inside the band).
+    let mut excl = [0i64; 2];
+    for v in 0..n {
+        if dist[v] == u32::MAX {
+            excl[state.part[v] as usize] += g.vwgt[v];
+        }
+    }
+    b.set_vwgt(anchor0, excl[0].max(1));
+    b.set_vwgt(anchor1, excl[1].max(1));
+    let mut part = vec![SEP; nb + 2];
+    for (i, &ov) in orig.iter().enumerate() {
+        part[i] = state.part[ov];
+        b.set_vwgt(i, g.vwgt[ov]);
+        for (&u, &w) in g.neighbors(ov).iter().zip(g.edge_weights(ov)) {
+            let u = u as usize;
+            match local[u] {
+                u32::MAX => {
+                    // Neighbor outside the band: represented by the anchor
+                    // of its part (its part equals ov's part, since the
+                    // band contains every vertex within `width ≥ 1` of the
+                    // separator and parts only touch through it).
+                    let a = if state.part[u] == P0 { anchor0 } else { anchor1 };
+                    b.add_edge_w(i, a, w);
+                }
+                lu => {
+                    if (lu as usize) > i {
+                        b.add_edge_w(i, lu as usize, w);
+                    }
+                }
+            }
+        }
+    }
+    part[anchor0] = P0;
+    part[anchor1] = P1;
+    let graph = b.build().expect("band graph is structurally valid");
+    let state_band = SepState::from_parts(&graph, part);
+    let mut locked = vec![false; nb + 2];
+    locked[anchor0] = true;
+    locked[anchor1] = true;
+    Some(BandGraph {
+        graph,
+        orig,
+        anchor0,
+        anchor1,
+        state: state_band,
+        locked,
+    })
+}
+
+/// Write a refined band state back into the parent separator state.
+pub fn project_band(band: &BandGraph, g: &Graph, state: &mut SepState) {
+    for (i, &ov) in band.orig.iter().enumerate() {
+        state.part[ov] = band.state.part[i];
+    }
+    state.recompute_weights(g);
+    debug_assert!(state.validate(g).is_ok());
+}
+
+/// One band-refinement step: extract a band of `width`, run `refiner`,
+/// project back. Keeps the better of (refined, original) by quality key —
+/// refiners are not required to be monotone. Returns `true` if a band
+/// existed.
+pub fn band_refine_step(
+    g: &Graph,
+    state: &mut SepState,
+    width: u32,
+    refiner: &dyn BandRefiner,
+    rng: &mut Rng,
+) -> bool {
+    let Some(mut band) = extract_band(g, state, width) else {
+        return false;
+    };
+    let before = state.quality_key();
+    refiner.refine_band(&mut band, rng);
+    debug_assert!(band.state.validate(&band.graph).is_ok());
+    if band.state.quality_key() < before {
+        project_band(&band, g, state);
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::sep::fm::FmParams;
+    use crate::sep::initial::greedy_graph_growing;
+    use crate::sep::FmRefiner;
+
+    fn mid_grid_state(nx: usize, ny: usize) -> (Graph, SepState) {
+        let g = generators::grid2d(nx, ny);
+        let mid = nx / 2;
+        let part: Vec<u8> = (0..nx * ny)
+            .map(|v| {
+                let x = v % nx;
+                if x < mid {
+                    P0
+                } else if x == mid {
+                    SEP
+                } else {
+                    P1
+                }
+            })
+            .collect();
+        let s = SepState::from_parts(&g, part);
+        s.validate(&g).unwrap();
+        (g, s)
+    }
+
+    #[test]
+    fn band_of_column_separator_has_expected_width() {
+        let (g, s) = mid_grid_state(11, 7);
+        let band = extract_band(&g, &s, 2).unwrap();
+        // Columns mid-2 .. mid+2 → 5 columns × 7 rows.
+        assert_eq!(band.band_n(), 5 * 7);
+        band.graph.validate().unwrap();
+        band.state.validate(&band.graph).unwrap();
+        // Anchor weights must equal the excluded part weights.
+        assert_eq!(band.graph.vwgt[band.anchor0], 3 * 7);
+        assert_eq!(band.graph.vwgt[band.anchor1], 3 * 7);
+    }
+
+    #[test]
+    fn band_state_weights_match_parent() {
+        let (g, s) = mid_grid_state(11, 7);
+        let band = extract_band(&g, &s, 3).unwrap();
+        // Total band weight (with anchors) equals parent total.
+        assert_eq!(band.graph.total_vwgt(), g.total_vwgt());
+        assert_eq!(band.state.wgts, s.wgts);
+    }
+
+    #[test]
+    fn empty_separator_yields_none() {
+        let g = generators::path(5, 1);
+        let s = SepState::from_parts(&g, vec![P0; 5]);
+        assert!(extract_band(&g, &s, 3).is_none());
+    }
+
+    #[test]
+    fn project_band_roundtrip_identity() {
+        let (g, mut s) = mid_grid_state(9, 5);
+        let before = s.part.clone();
+        let band = extract_band(&g, &s, 3).unwrap();
+        project_band(&band, &g, &mut s);
+        assert_eq!(s.part, before);
+    }
+
+    #[test]
+    fn band_refine_step_improves_or_keeps() {
+        let g = generators::irregular_mesh(16, 16, 5);
+        let mut rng = Rng::new(6);
+        let mut s = greedy_graph_growing(&g, 3, &mut rng);
+        let before = s.quality_key();
+        let refiner = FmRefiner {
+            params: FmParams::default(),
+        };
+        let had_band = band_refine_step(&g, &mut s, 3, &refiner, &mut rng);
+        assert!(had_band);
+        s.validate(&g).unwrap();
+        assert!(s.quality_key() <= before);
+    }
+
+    #[test]
+    fn refined_separator_stays_within_band() {
+        // Width-1 band around a mid column: after FM, every separator
+        // vertex must be within distance 1 of the original separator.
+        let (g, mut s) = mid_grid_state(15, 9);
+        let orig_sep = s.sep_vertices();
+        let dist = g.multi_source_bfs(&orig_sep, u32::MAX);
+        let refiner = FmRefiner {
+            params: FmParams::default(),
+        };
+        let mut rng = Rng::new(7);
+        band_refine_step(&g, &mut s, 1, &refiner, &mut rng);
+        s.validate(&g).unwrap();
+        for v in s.sep_vertices() {
+            assert!(dist[v] <= 1, "separator escaped the band at {v}");
+        }
+    }
+
+    #[test]
+    fn whole_graph_band_when_width_large() {
+        let (g, s) = mid_grid_state(7, 5);
+        let band = extract_band(&g, &s, 100).unwrap();
+        assert_eq!(band.band_n(), g.n());
+        // Anchors get the minimum weight 1 and are isolated.
+        assert_eq!(band.graph.vwgt[band.anchor0], 1);
+        assert_eq!(band.graph.degree(band.anchor0), 0);
+    }
+}

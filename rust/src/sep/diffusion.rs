@@ -1,0 +1,254 @@
+//! Banded diffusion separator smoothing — the "parallel diffusion-based
+//! method" the paper cites as refinement future work ([28], §5) and that
+//! we implement as the numeric hot-spot of the three-layer stack.
+//!
+//! Two liquids flow from the two anchors (part 0 = −1, part 1 = +1)
+//! through the band graph; after `k` damped averaging iterations the sign
+//! field induces a smooth bipartition whose crossing edges are covered to
+//! produce a valid vertex separator, then polished with FM.
+//!
+//! This module is the **pure-Rust reference**: [`diffusion_iterations`]
+//! defines the exact numeric semantics that the L1 Pallas kernel
+//! (`python/compile/kernels/ell_spmv.py`) and the L2 JAX model reproduce;
+//! `runtime::DiffusionRefiner` swaps the iteration loop for the
+//! AOT-compiled XLA executable and is tested to match this function.
+
+use super::band::BandGraph;
+use super::fm::{fm_refine, FmParams};
+use super::{BandRefiner, SepState, P0, P1, SEP};
+use crate::graph::Graph;
+use crate::rng::Rng;
+
+/// Initial diffusion field for a band state: −1 on part 0, +1 on part 1,
+/// 0 on the separator.
+pub fn initial_field(state: &SepState) -> Vec<f32> {
+    state
+        .part
+        .iter()
+        .map(|&p| match p {
+            P0 => -1.0,
+            P1 => 1.0,
+            _ => 0.0,
+        })
+        .collect()
+}
+
+/// `k` damped weighted-averaging iterations with the anchor values
+/// re-clamped to ∓1 after every step:
+///
+/// `x'[v] = damping · (Σ_u w(u,v)·x[u]) / Σ_u w(u,v)`
+///
+/// Zero-degree vertices decay to 0. All arithmetic is f32 to match the
+/// XLA artifact bit-for-bit up to reduction order.
+pub fn diffusion_iterations(
+    g: &Graph,
+    mut x: Vec<f32>,
+    anchor0: usize,
+    anchor1: usize,
+    k: usize,
+    damping: f32,
+) -> Vec<f32> {
+    let n = g.n();
+    debug_assert_eq!(x.len(), n);
+    let mut next = vec![0f32; n];
+    for _ in 0..k {
+        x[anchor0] = -1.0;
+        x[anchor1] = 1.0;
+        for v in 0..n {
+            let mut num = 0f32;
+            let mut den = 0f32;
+            for (&u, &w) in g.neighbors(v).iter().zip(g.edge_weights(v)) {
+                let w = w as f32;
+                num += w * x[u as usize];
+                den += w;
+            }
+            next[v] = if den > 0.0 { damping * num / den } else { 0.0 };
+        }
+        std::mem::swap(&mut x, &mut next);
+    }
+    x[anchor0] = -1.0;
+    x[anchor1] = 1.0;
+    x
+}
+
+/// Convert a diffusion field into a valid separator state on the band:
+/// parts by sign, then a one-pass vertex cover of crossing edges (the
+/// endpoint with the smaller |x| joins the separator; locked vertices —
+/// the anchors — never do).
+pub fn field_to_separator(band: &BandGraph, x: &[f32]) -> SepState {
+    let g = &band.graph;
+    let n = g.n();
+    let mut part: Vec<u8> = (0..n)
+        .map(|v| if x[v] < 0.0 { P0 } else { P1 })
+        .collect();
+    part[band.anchor0] = P0;
+    part[band.anchor1] = P1;
+    for v in 0..n {
+        if part[v] == SEP {
+            continue;
+        }
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if part[u] == SEP || part[u] == part[v] {
+                continue;
+            }
+            // Crossing edge: cover it with the weaker endpoint.
+            let pick_v = if band.locked[v] {
+                false
+            } else if band.locked[u] {
+                true
+            } else {
+                let (av, au) = (x[v].abs(), x[u].abs());
+                av < au || (av == au && v < u)
+            };
+            if pick_v {
+                part[v] = SEP;
+                break;
+            } else {
+                part[u] = SEP;
+            }
+        }
+    }
+    SepState::from_parts(g, part)
+}
+
+/// Pure-CPU diffusion band refiner: diffusion iterations (reference
+/// implementation), sign-cover, FM polish. `runtime::DiffusionRefiner`
+/// is the XLA-backed equivalent used on the request path.
+#[derive(Clone, Debug)]
+pub struct CpuDiffusionRefiner {
+    /// Number of diffusion iterations (paper-scale band graphs converge
+    /// within a few dozen).
+    pub iterations: usize,
+    /// Damping factor in (0, 1]; keeps the field contractive.
+    pub damping: f32,
+    /// FM polish parameters.
+    pub fm: FmParams,
+}
+
+impl Default for CpuDiffusionRefiner {
+    fn default() -> Self {
+        CpuDiffusionRefiner {
+            iterations: 32,
+            damping: 0.95,
+            fm: FmParams::default(),
+        }
+    }
+}
+
+impl BandRefiner for CpuDiffusionRefiner {
+    fn refine_band(&self, band: &mut BandGraph, rng: &mut Rng) {
+        let x0 = initial_field(&band.state);
+        let x = diffusion_iterations(
+            &band.graph,
+            x0,
+            band.anchor0,
+            band.anchor1,
+            self.iterations,
+            self.damping,
+        );
+        let candidate = field_to_separator(band, &x);
+        debug_assert!(candidate.validate(&band.graph).is_ok());
+        if candidate.quality_key() < band.state.quality_key() {
+            band.state = candidate;
+        }
+        fm_refine(&band.graph, &mut band.state, &band.locked, &self.fm, rng);
+    }
+
+    fn name(&self) -> &'static str {
+        "diffusion+fm(cpu)"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::sep::band::extract_band;
+    use crate::sep::initial::greedy_graph_growing;
+
+    fn grid_band() -> BandGraph {
+        let g = generators::grid2d(13, 9);
+        let part: Vec<u8> = (0..13 * 9)
+            .map(|v| {
+                let x = v % 13;
+                if x < 6 {
+                    P0
+                } else if x == 6 {
+                    SEP
+                } else {
+                    P1
+                }
+            })
+            .collect();
+        let s = SepState::from_parts(&g, part);
+        extract_band(&g, &s, 3).unwrap()
+    }
+
+    #[test]
+    fn field_converges_to_signed_halves() {
+        let band = grid_band();
+        let x0 = initial_field(&band.state);
+        let x = diffusion_iterations(&band.graph, x0, band.anchor0, band.anchor1, 64, 0.95);
+        // Vertices adjacent to anchor0 must be clearly negative, and
+        // symmetrically for anchor1.
+        for (&u, _) in band
+            .graph
+            .neighbors(band.anchor0)
+            .iter()
+            .zip(band.graph.edge_weights(band.anchor0))
+        {
+            assert!(x[u as usize] < -0.2, "x[{u}] = {}", x[u as usize]);
+        }
+        for &u in band.graph.neighbors(band.anchor1) {
+            assert!(x[u as usize] > 0.2);
+        }
+    }
+
+    #[test]
+    fn field_to_separator_is_valid() {
+        let band = grid_band();
+        let x0 = initial_field(&band.state);
+        let x = diffusion_iterations(&band.graph, x0, band.anchor0, band.anchor1, 16, 0.9);
+        let s = field_to_separator(&band, &x);
+        s.validate(&band.graph).unwrap();
+        assert!(s.sep_weight() > 0);
+        assert_eq!(s.part[band.anchor0], P0);
+        assert_eq!(s.part[band.anchor1], P1);
+    }
+
+    #[test]
+    fn cpu_refiner_improves_or_keeps_quality() {
+        let g = generators::irregular_mesh(18, 18, 11);
+        let mut rng = Rng::new(21);
+        let s = greedy_graph_growing(&g, 3, &mut rng);
+        let mut band = extract_band(&g, &s, 3).unwrap();
+        let before = band.state.quality_key();
+        let r = CpuDiffusionRefiner::default();
+        r.refine_band(&mut band, &mut rng);
+        band.state.validate(&band.graph).unwrap();
+        assert!(band.state.quality_key() <= before);
+    }
+
+    #[test]
+    fn zero_degree_vertices_decay() {
+        // Band whose anchors are isolated (width covers everything).
+        let g = generators::path(3, 1);
+        let s = SepState::from_parts(&g, vec![P0, SEP, P1]);
+        let band = extract_band(&g, &s, 5).unwrap();
+        let x0 = initial_field(&band.state);
+        let x = diffusion_iterations(&band.graph, x0, band.anchor0, band.anchor1, 8, 0.9);
+        // Anchors clamp to ±1 regardless.
+        assert_eq!(x[band.anchor0], -1.0);
+        assert_eq!(x[band.anchor1], 1.0);
+    }
+
+    #[test]
+    fn iterations_deterministic() {
+        let band = grid_band();
+        let x0 = initial_field(&band.state);
+        let a = diffusion_iterations(&band.graph, x0.clone(), band.anchor0, band.anchor1, 20, 0.95);
+        let b = diffusion_iterations(&band.graph, x0, band.anchor0, band.anchor1, 20, 0.95);
+        assert_eq!(a, b);
+    }
+}

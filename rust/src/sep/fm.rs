@@ -1,0 +1,340 @@
+//! Vertex Fiduccia–Mattheyses separator refinement (Hendrickson &
+//! Rothberg [16] style), the local optimization at the core of both the
+//! sequential pipeline and the multi-sequential band refinement (§3.3).
+//!
+//! A *move* takes a separator vertex `v` into part `p`; every neighbor of
+//! `v` in the opposite part is pulled into the separator, which exactly
+//! preserves the no-0–1-edge invariant. The gain of the move is the
+//! separator-weight decrease `vwgt[v] − Σ vwgt[pulled]`. Negative-gain
+//! moves are allowed (hill climbing) with rollback to the best visited
+//! state; `locked` vertices (the band-graph anchors) can neither move nor
+//! be pulled into the separator — this is what confines refined separators
+//! to the band (§3.3's "pre-constrained banding").
+
+use super::{SepState, SEP};
+use crate::graph::Graph;
+use crate::rng::Rng;
+use std::collections::BinaryHeap;
+
+/// FM tuning parameters.
+#[derive(Clone, Debug)]
+pub struct FmParams {
+    /// Maximum refinement passes (each pass ends in a rollback-to-best).
+    pub max_passes: usize,
+    /// Consecutive non-improving moves tolerated before a pass ends.
+    pub max_neg_moves: usize,
+    /// Relative part-imbalance tolerance: `|w0−w1| ≤ max(eps·total, 2·max_vwgt)`.
+    pub balance_eps: f64,
+}
+
+impl Default for FmParams {
+    fn default() -> Self {
+        FmParams {
+            max_passes: 8,
+            max_neg_moves: 80,
+            balance_eps: 0.05,
+        }
+    }
+}
+
+/// Gain of moving separator vertex `v` to part `p`.
+#[inline]
+fn move_gain(g: &Graph, part: &[u8], v: usize, p: u8) -> i64 {
+    let other = 1 - p;
+    let mut pulled = 0i64;
+    for &u in g.neighbors(v) {
+        if part[u as usize] == other {
+            pulled += g.vwgt[u as usize];
+        }
+    }
+    g.vwgt[v] - pulled
+}
+
+/// Refine `state` in place; returns the final separator weight.
+///
+/// `locked[v]` marks vertices that must keep their current part (band
+/// anchors). Passing an empty slice means nothing is locked.
+pub fn fm_refine(
+    g: &Graph,
+    state: &mut SepState,
+    locked: &[bool],
+    params: &FmParams,
+    rng: &mut Rng,
+) -> i64 {
+    let n = g.n();
+    debug_assert!(locked.is_empty() || locked.len() == n);
+    let is_locked = |v: usize| !locked.is_empty() && locked[v];
+    let total = g.total_vwgt();
+    let max_imb = ((params.balance_eps * total as f64) as i64).max(2 * g.max_vwgt());
+
+    let mut version: Vec<u32> = vec![0; n];
+    // Heap entries: (gain, random tie-break, vertex, target part, version).
+    let mut heap: BinaryHeap<(i64, u64, u32, u8, u32)> = BinaryHeap::new();
+    let mut moved = vec![false; n];
+    // Rollback log: (vertex, previous part).
+    let mut log: Vec<(u32, u8)> = Vec::new();
+
+    for _pass in 0..params.max_passes {
+        heap.clear();
+        log.clear();
+        for f in moved.iter_mut() {
+            *f = false;
+        }
+        for v in 0..n {
+            if state.part[v] == SEP && !is_locked(v) {
+                for p in 0..2u8 {
+                    heap.push((
+                        move_gain(g, &state.part, v, p),
+                        rng.next_u64(),
+                        v as u32,
+                        p,
+                        version[v],
+                    ));
+                }
+            }
+        }
+        let pass_start_key = state.quality_key();
+        let mut best_key = pass_start_key;
+        let mut best_len = 0usize;
+        let mut neg_streak = 0usize;
+
+        'moves: while let Some((gain, _tie, v32, p, ver)) = heap.pop() {
+            let v = v32 as usize;
+            if ver != version[v] || state.part[v] != SEP || moved[v] || is_locked(v) {
+                continue;
+            }
+            debug_assert_eq!(gain, move_gain(g, &state.part, v, p));
+            let other = 1 - p;
+            // Pulled weight + locked-pull check.
+            let mut pulled = 0i64;
+            for &u in g.neighbors(v) {
+                let u = u as usize;
+                if state.part[u] == other {
+                    if is_locked(u) {
+                        continue 'moves; // would drag an anchor into the separator
+                    }
+                    pulled += g.vwgt[u];
+                }
+            }
+            // Balance feasibility.
+            let mut w = state.wgts;
+            w[p as usize] += g.vwgt[v];
+            w[other as usize] -= pulled;
+            w[2] += pulled - g.vwgt[v];
+            let imb_new = (w[0] - w[1]).abs();
+            if imb_new > max_imb && imb_new >= state.imbalance() {
+                continue;
+            }
+
+            // Apply the move.
+            log.push((v32, SEP));
+            state.part[v] = p;
+            moved[v] = true;
+            let mut touched: Vec<usize> = Vec::new();
+            let mut pulled_list: Vec<usize> = Vec::new();
+            for &u in g.neighbors(v) {
+                let u = u as usize;
+                if state.part[u] == other {
+                    log.push((u as u32, other));
+                    state.part[u] = SEP;
+                    pulled_list.push(u);
+                    touched.push(u);
+                } else if state.part[u] == SEP {
+                    touched.push(u);
+                }
+            }
+            state.wgts = w;
+            // Pulled vertices' separator neighbors also see changed gains.
+            for &u in &pulled_list {
+                for &t in g.neighbors(u) {
+                    let t = t as usize;
+                    if state.part[t] == SEP {
+                        touched.push(t);
+                    }
+                }
+            }
+            touched.sort_unstable();
+            touched.dedup();
+            for &t in &touched {
+                if state.part[t] == SEP && !moved[t] && !is_locked(t) {
+                    version[t] = version[t].wrapping_add(1);
+                    for q in 0..2u8 {
+                        heap.push((
+                            move_gain(g, &state.part, t, q),
+                            rng.next_u64(),
+                            t as u32,
+                            q,
+                            version[t],
+                        ));
+                    }
+                }
+            }
+
+            // Best-state tracking with hill-climbing budget.
+            let key = state.quality_key();
+            if key < best_key {
+                best_key = key;
+                best_len = log.len();
+                neg_streak = 0;
+            } else {
+                neg_streak += 1;
+                if neg_streak > params.max_neg_moves {
+                    break;
+                }
+            }
+        }
+
+        // Roll back to the best prefix of the move log.
+        while log.len() > best_len {
+            let (v32, old) = log.pop().unwrap();
+            let v = v32 as usize;
+            let cur = state.part[v];
+            state.wgts[cur as usize] -= g.vwgt[v];
+            state.wgts[old as usize] += g.vwgt[v];
+            state.part[v] = old;
+        }
+        debug_assert!(state.validate(g).is_ok());
+        if best_key >= pass_start_key {
+            break; // pass brought no improvement
+        }
+    }
+    state.sep_weight()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+    use crate::sep::initial::greedy_graph_growing;
+    use crate::sep::{P0, P1};
+
+    fn refine(g: &Graph, state: &mut SepState, seed: u64) -> i64 {
+        fm_refine(g, state, &[], &FmParams::default(), &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn fm_never_worsens() {
+        let g = generators::grid2d(16, 16);
+        let mut rng = Rng::new(5);
+        let mut s = greedy_graph_growing(&g, 2, &mut rng);
+        let before = s.quality_key();
+        refine(&g, &mut s, 6);
+        s.validate(&g).unwrap();
+        assert!(s.quality_key() <= before);
+    }
+
+    #[test]
+    fn fm_finds_single_cut_vertex() {
+        // Two 10-cliques joined by one articulation vertex 20: the optimal
+        // separator is exactly {20}.
+        let mut b = GraphBuilder::new(21);
+        for u in 0..10 {
+            for v in (u + 1)..10 {
+                b.add_edge(u, v);
+            }
+        }
+        for u in 10..20 {
+            for v in (u + 1)..20 {
+                b.add_edge(u, v);
+            }
+        }
+        for u in 0..10 {
+            b.add_edge(u, 20);
+        }
+        for u in 10..20 {
+            b.add_edge(u, 20);
+        }
+        let g = b.build().unwrap();
+        // Start from a deliberately bad separator: all of clique 1's
+        // boundary-adjacent half in the separator.
+        let mut part = vec![P0; 21];
+        for v in 10..20 {
+            part[v] = P1;
+        }
+        part[20] = SEP;
+        part[0] = SEP;
+        part[1] = SEP;
+        let mut s = SepState::from_parts(&g, part);
+        s.validate(&g).unwrap();
+        refine(&g, &mut s, 7);
+        s.validate(&g).unwrap();
+        assert_eq!(s.sep_weight(), 1);
+        assert_eq!(s.part[20], SEP);
+    }
+
+    #[test]
+    fn fm_respects_locked_vertices() {
+        let g = generators::path(7, 1);
+        // Separator at vertex 1 (unbalanced); optimum would move it to 3.
+        let mut part = vec![P0, SEP, P1, P1, P1, P1, P1];
+        part[0] = P0;
+        let mut s = SepState::from_parts(&g, part);
+        s.validate(&g).unwrap();
+        // Lock everything: nothing may change.
+        let locked = vec![true; 7];
+        let before = s.part.clone();
+        fm_refine(&g, &mut s, &locked, &FmParams::default(), &mut Rng::new(8));
+        assert_eq!(s.part, before);
+    }
+
+    #[test]
+    fn fm_improves_off_center_path_separator() {
+        let g = generators::path(31, 1);
+        let mut part = vec![P1; 31];
+        part[0] = P0;
+        part[1] = SEP;
+        for v in 2..31 {
+            part[v] = P1;
+        }
+        let mut s = SepState::from_parts(&g, part);
+        s.validate(&g).unwrap();
+        let imb_before = s.imbalance();
+        fm_refine(
+            &g,
+            &mut s,
+            &[],
+            &FmParams {
+                max_passes: 30,
+                max_neg_moves: 200,
+                balance_eps: 0.05,
+            },
+            &mut Rng::new(9),
+        );
+        s.validate(&g).unwrap();
+        assert_eq!(s.sep_weight(), 1);
+        assert!(s.imbalance() < imb_before, "imbalance {} not improved", s.imbalance());
+        assert!(s.imbalance() <= 3);
+    }
+
+    #[test]
+    fn fm_grid_reaches_near_optimal_column() {
+        let g = generators::grid2d(12, 12);
+        let mut rng = Rng::new(10);
+        let mut s = greedy_graph_growing(&g, 3, &mut rng);
+        refine(&g, &mut s, 11);
+        s.validate(&g).unwrap();
+        // Optimal vertex separator of a 12×12 grid is one 12-vertex column.
+        assert!(s.sep_weight() <= 14, "sep weight {}", s.sep_weight());
+    }
+
+    #[test]
+    fn fm_handles_empty_separator() {
+        let g = generators::path(4, 1);
+        let mut s = SepState::from_parts(&g, vec![P0, P0, P0, P0]);
+        let w = refine(&g, &mut s, 12);
+        assert_eq!(w, 0);
+        s.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn fm_is_deterministic() {
+        let g = generators::irregular_mesh(14, 14, 3);
+        let mut rng = Rng::new(13);
+        let s0 = greedy_graph_growing(&g, 3, &mut rng);
+        let mut a = s0.clone();
+        let mut b = s0;
+        refine(&g, &mut a, 14);
+        refine(&g, &mut b, 14);
+        assert_eq!(a.part, b.part);
+    }
+}

@@ -1,0 +1,194 @@
+//! Initial separator computation on the coarsest graph.
+//!
+//! Greedy graph growing (GGG): grow part 0 by BFS from a random seed until
+//! it holds about half of the total vertex weight, take the lighter side
+//! of the resulting boundary as the vertex separator, then let the caller
+//! refine with FM. Several tries with different seeds are performed and
+//! the best state (smallest separator, then best balance) is kept —
+//! exactly the "best of k" selection philosophy of §3.2.
+
+use super::{SepState, P0, P1, SEP};
+use crate::graph::Graph;
+use crate::rng::Rng;
+use std::collections::VecDeque;
+
+/// Grow part 0 from `seed` until ≈ half the total weight is consumed.
+/// Works on disconnected graphs by restarting from unvisited vertices.
+fn grow_half(g: &Graph, seed: usize, rng: &mut Rng) -> Vec<u8> {
+    let n = g.n();
+    let total = g.total_vwgt();
+    let half = total / 2;
+    let mut part = vec![P1; n];
+    let mut w0 = 0i64;
+    let mut queue = VecDeque::new();
+    let mut enqueued = vec![false; n];
+    queue.push_back(seed);
+    enqueued[seed] = true;
+    let mut next_probe = 0usize;
+    while w0 < half {
+        let v = match queue.pop_front() {
+            Some(v) => v,
+            None => {
+                // Disconnected: restart from a random-ish unvisited vertex.
+                let mut found = None;
+                for _ in 0..4 {
+                    let cand = rng.below(n);
+                    if !enqueued[cand] {
+                        found = Some(cand);
+                        break;
+                    }
+                }
+                let v = found.or_else(|| {
+                    while next_probe < n && enqueued[next_probe] {
+                        next_probe += 1;
+                    }
+                    (next_probe < n).then_some(next_probe)
+                });
+                match v {
+                    Some(v) => {
+                        enqueued[v] = true;
+                        v
+                    }
+                    None => break, // everything consumed
+                }
+            }
+        };
+        part[v] = P0;
+        w0 += g.vwgt[v];
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if !enqueued[u] {
+                enqueued[u] = true;
+                queue.push_back(u);
+            }
+        }
+    }
+    part
+}
+
+/// Turn a 2-way partition into a valid vertex-separator state by moving
+/// the lighter boundary side into the separator.
+pub fn boundary_to_separator(g: &Graph, mut part: Vec<u8>) -> SepState {
+    let mut bw = [0i64; 2];
+    let mut boundary = [Vec::new(), Vec::new()];
+    for v in 0..g.n() {
+        let p = part[v];
+        if p == SEP {
+            continue;
+        }
+        if g
+            .neighbors(v)
+            .iter()
+            .any(|&u| part[u as usize] != p && part[u as usize] != SEP)
+        {
+            bw[p as usize] += g.vwgt[v];
+            boundary[p as usize].push(v);
+        }
+    }
+    let side = if bw[0] <= bw[1] { 0 } else { 1 };
+    for &v in &boundary[side] {
+        part[v] = SEP;
+    }
+    SepState::from_parts(g, part)
+}
+
+/// Greedy-graph-growing initial separator: best of `tries` seeds.
+pub fn greedy_graph_growing(g: &Graph, tries: usize, rng: &mut Rng) -> SepState {
+    let n = g.n();
+    if n == 0 {
+        return SepState {
+            part: Vec::new(),
+            wgts: [0; 3],
+        };
+    }
+    if n == 1 {
+        return SepState::from_parts(g, vec![P0]);
+    }
+    let mut best: Option<SepState> = None;
+    for t in 0..tries.max(1) {
+        let seed = if t == 0 {
+            g.pseudo_peripheral(rng.below(n))
+        } else {
+            rng.below(n)
+        };
+        let part = grow_half(g, seed, rng);
+        let state = boundary_to_separator(g, part);
+        debug_assert!(state.validate(g).is_ok());
+        if best
+            .as_ref()
+            .map(|b| state.quality_key() < b.quality_key())
+            .unwrap_or(true)
+        {
+            best = Some(state);
+        }
+    }
+    best.expect("at least one try")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn ggg_on_path_is_balanced_small_sep() {
+        let g = generators::path(101, 1);
+        let mut rng = Rng::new(1);
+        let s = greedy_graph_growing(&g, 4, &mut rng);
+        s.validate(&g).unwrap();
+        assert!(s.sep_weight() <= 2, "sep weight {}", s.sep_weight());
+        assert!(s.imbalance() <= 10, "imbalance {}", s.imbalance());
+        assert!(s.wgts[0] > 0 && s.wgts[1] > 0);
+    }
+
+    #[test]
+    fn ggg_on_grid_scales_like_sqrt() {
+        let g = generators::grid2d(20, 20);
+        let mut rng = Rng::new(2);
+        let s = greedy_graph_growing(&g, 4, &mut rng);
+        s.validate(&g).unwrap();
+        // A BFS-grown boundary on a 20×20 grid should be ≲ 2 columns.
+        assert!(s.sep_weight() <= 44, "sep weight {}", s.sep_weight());
+        assert!(s.wgts[0] > 0 && s.wgts[1] > 0);
+    }
+
+    #[test]
+    fn ggg_handles_disconnected() {
+        // Two disjoint paths: the separator can be empty.
+        let mut b = crate::graph::GraphBuilder::new(8);
+        for v in 1..4 {
+            b.add_edge(v - 1, v);
+        }
+        for v in 5..8 {
+            b.add_edge(v - 1, v);
+        }
+        let g = b.build().unwrap();
+        let mut rng = Rng::new(3);
+        let s = greedy_graph_growing(&g, 4, &mut rng);
+        s.validate(&g).unwrap();
+        assert!(s.wgts[0] > 0 && s.wgts[1] > 0);
+    }
+
+    #[test]
+    fn ggg_single_vertex_and_edge() {
+        let g1 = generators::path(1, 1);
+        let s1 = greedy_graph_growing(&g1, 2, &mut Rng::new(4));
+        s1.validate(&g1).unwrap();
+        let g2 = generators::path(2, 1);
+        let s2 = greedy_graph_growing(&g2, 2, &mut Rng::new(4));
+        s2.validate(&g2).unwrap();
+        // All weight is accounted for and at most one vertex separates.
+        assert_eq!(s2.wgts.iter().sum::<i64>(), 2);
+        assert!(s2.sep_weight() <= 1);
+    }
+
+    #[test]
+    fn boundary_to_separator_keeps_invariant() {
+        let g = generators::grid2d(6, 6);
+        // Left half in P0, right half in P1 (crossing edges exist).
+        let part: Vec<u8> = (0..36).map(|v| if v % 6 < 3 { P0 } else { P1 }).collect();
+        let s = boundary_to_separator(&g, part);
+        s.validate(&g).unwrap();
+        assert_eq!(s.sep_weight(), 6); // one full column
+    }
+}

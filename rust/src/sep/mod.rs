@@ -1,0 +1,215 @@
+//! Vertex-separator computation (S5–S6): the sequential Scotch-like
+//! multilevel bisection pipeline, reused verbatim by the distributed layer
+//! in its multi-sequential phases (paper §3.2–§3.3).
+
+pub mod band;
+pub mod coarsen;
+pub mod diffusion;
+pub mod fm;
+pub mod initial;
+pub mod multilevel;
+
+pub use band::{extract_band, BandGraph};
+pub use coarsen::{coarsen_hem, Coarsening};
+pub use fm::{fm_refine, FmParams};
+pub use multilevel::multilevel_separator;
+
+use crate::graph::Graph;
+use crate::rng::Rng;
+use crate::{Error, Result};
+
+/// Part labels: the two separated parts and the separator itself.
+pub const P0: u8 = 0;
+/// Second part.
+pub const P1: u8 = 1;
+/// Separator label.
+pub const SEP: u8 = 2;
+
+/// A vertex-separator state over a graph: each vertex is in part 0,
+/// part 1 or the separator; `wgts` caches the three part weights.
+///
+/// Invariant: no edge joins a part-0 vertex to a part-1 vertex (every
+/// 0–1 path passes through the separator).
+#[derive(Clone, Debug)]
+pub struct SepState {
+    /// Per-vertex label among [`P0`], [`P1`], [`SEP`].
+    pub part: Vec<u8>,
+    /// Cached weights of part 0, part 1 and the separator.
+    pub wgts: [i64; 3],
+}
+
+impl SepState {
+    /// Build a state from labels, computing the cached weights.
+    pub fn from_parts(g: &Graph, part: Vec<u8>) -> SepState {
+        let mut wgts = [0i64; 3];
+        for (v, &p) in part.iter().enumerate() {
+            wgts[p as usize] += g.vwgt[v];
+        }
+        SepState { part, wgts }
+    }
+
+    /// Everything in part 0 (the trivial all-one-side state).
+    pub fn all_in_p0(g: &Graph) -> SepState {
+        SepState {
+            part: vec![P0; g.n()],
+            wgts: [g.total_vwgt(), 0, 0],
+        }
+    }
+
+    /// Weight of the separator.
+    #[inline]
+    pub fn sep_weight(&self) -> i64 {
+        self.wgts[2]
+    }
+
+    /// Absolute imbalance `|w0 - w1|`.
+    #[inline]
+    pub fn imbalance(&self) -> i64 {
+        (self.wgts[0] - self.wgts[1]).abs()
+    }
+
+    /// Number of separator vertices.
+    pub fn sep_count(&self) -> usize {
+        self.part.iter().filter(|&&p| p == SEP).count()
+    }
+
+    /// Indices of separator vertices.
+    pub fn sep_vertices(&self) -> Vec<usize> {
+        (0..self.part.len()).filter(|&v| self.part[v] == SEP).collect()
+    }
+
+    /// Lexicographic quality key: smaller separator first, then better
+    /// balance. Used everywhere a "best of k" decision is taken
+    /// (multi-sequential refinement, fold-dup best-pick, GGG tries).
+    #[inline]
+    pub fn quality_key(&self) -> (i64, i64) {
+        (self.sep_weight(), self.imbalance())
+    }
+
+    /// Recompute `wgts` from the labels (after a bulk label rewrite).
+    pub fn recompute_weights(&mut self, g: &Graph) {
+        let mut wgts = [0i64; 3];
+        for (v, &p) in self.part.iter().enumerate() {
+            wgts[p as usize] += g.vwgt[v];
+        }
+        self.wgts = wgts;
+    }
+
+    /// Validate the separator invariants against `g`:
+    /// labels in range, cached weights correct, and **no 0–1 edge**.
+    pub fn validate(&self, g: &Graph) -> Result<()> {
+        if self.part.len() != g.n() {
+            return Err(Error::InvalidGraph(format!(
+                "part length {} != n {}",
+                self.part.len(),
+                g.n()
+            )));
+        }
+        let mut wgts = [0i64; 3];
+        for (v, &p) in self.part.iter().enumerate() {
+            if p > SEP {
+                return Err(Error::InvalidGraph(format!("bad part label {p} at {v}")));
+            }
+            wgts[p as usize] += g.vwgt[v];
+        }
+        if wgts != self.wgts {
+            return Err(Error::InvalidGraph(format!(
+                "cached weights {:?} != actual {:?}",
+                self.wgts, wgts
+            )));
+        }
+        for v in 0..g.n() {
+            if self.part[v] == SEP {
+                continue;
+            }
+            for &u in g.neighbors(v) {
+                let u = u as usize;
+                if self.part[u] != SEP && self.part[u] != self.part[v] {
+                    return Err(Error::InvalidGraph(format!(
+                        "edge {v}({}) -- {u}({}) crosses parts",
+                        self.part[v], self.part[u]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A pluggable refiner for band graphs. The default is sequential vertex
+/// FM ([`FmRefiner`]); [`crate::runtime::DiffusionRefiner`] runs the
+/// AOT-compiled XLA diffusion kernel first and then polishes with FM
+/// (paper §3.3 / future-work §5: diffusion-based methods).
+pub trait BandRefiner: Sync {
+    /// Refine `band.state` in place; must preserve the separator
+    /// invariant and respect `band.locked` (anchors never move).
+    fn refine_band(&self, band: &mut BandGraph, rng: &mut Rng);
+    /// Human-readable name for logs and ablation benches.
+    fn name(&self) -> &'static str;
+}
+
+/// The standard sequential vertex-FM band refiner.
+#[derive(Clone, Debug)]
+pub struct FmRefiner {
+    /// FM tuning parameters.
+    pub params: FmParams,
+}
+
+impl Default for FmRefiner {
+    fn default() -> Self {
+        FmRefiner {
+            params: FmParams::default(),
+        }
+    }
+}
+
+impl BandRefiner for FmRefiner {
+    fn refine_band(&self, band: &mut BandGraph, rng: &mut Rng) {
+        fm_refine(&band.graph, &mut band.state, &band.locked, &self.params, rng);
+    }
+
+    fn name(&self) -> &'static str {
+        "fm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn from_parts_weights() {
+        let g = generators::path(4, 1);
+        let s = SepState::from_parts(&g, vec![P0, SEP, P1, P1]);
+        assert_eq!(s.wgts, [1, 2, 1]);
+        assert_eq!(s.sep_weight(), 1);
+        assert_eq!(s.imbalance(), 1);
+        assert_eq!(s.sep_count(), 1);
+        assert_eq!(s.sep_vertices(), vec![1]);
+        s.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn validate_catches_crossing_edge() {
+        let g = generators::path(3, 1);
+        let s = SepState::from_parts(&g, vec![P0, P1, P1]);
+        assert!(s.validate(&g).is_err());
+    }
+
+    #[test]
+    fn validate_catches_stale_weights() {
+        let g = generators::path(3, 1);
+        let mut s = SepState::from_parts(&g, vec![P0, SEP, P1]);
+        s.wgts = [3, 0, 0];
+        assert!(s.validate(&g).is_err());
+    }
+
+    #[test]
+    fn quality_key_orders_better_first() {
+        let g = generators::path(5, 1);
+        let a = SepState::from_parts(&g, vec![P0, P0, SEP, P1, P1]);
+        let b = SepState::from_parts(&g, vec![P0, SEP, SEP, P1, P1]);
+        assert!(a.quality_key() < b.quality_key());
+    }
+}

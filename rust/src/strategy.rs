@@ -1,0 +1,245 @@
+//! Strategy configuration — the knob set of the whole system, mirroring
+//! Scotch's "strategy strings" in spirit. Every paper-relevant parameter
+//! (band width 3, fold-dup threshold of 100 vertices/process, leaf
+//! threshold, FM tolerances, refiner choice) lives here so the benches and
+//! ablations can sweep them.
+
+use crate::sep::fm::FmParams;
+use crate::{Error, Result};
+
+/// Which band refiner the pipeline uses (ablation A5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefinerKind {
+    /// Sequential vertex FM only (the paper's default).
+    Fm,
+    /// CPU diffusion smoothing + FM polish (reference implementation).
+    DiffusionCpu,
+    /// AOT-compiled XLA diffusion kernel + FM polish (the three-layer
+    /// hot path; falls back to CPU when no artifact fits).
+    DiffusionXla,
+}
+
+/// Parameters of the multilevel separator computation.
+#[derive(Clone, Debug)]
+pub struct SepStrategy {
+    /// Coarsen until at most this many vertices (paper: "a few hundreds").
+    pub coarse_target: usize,
+    /// Stop coarsening when a level shrinks less than this ratio.
+    pub min_coarsen_ratio: f64,
+    /// Band width around the projected separator (paper: 3 is optimal).
+    pub band_width: u32,
+    /// Greedy-graph-growing tries at the coarsest level.
+    pub ggg_tries: usize,
+    /// FM refinement parameters.
+    pub fm: FmParams,
+}
+
+impl Default for SepStrategy {
+    fn default() -> Self {
+        SepStrategy {
+            coarse_target: 120,
+            min_coarsen_ratio: 0.85,
+            band_width: 3,
+            ggg_tries: 4,
+            fm: FmParams::default(),
+        }
+    }
+}
+
+/// Parameters of nested dissection.
+#[derive(Clone, Debug)]
+pub struct NdStrategy {
+    /// Subgraphs at most this large are ordered by minimum degree
+    /// (the paper couples ND with (halo) minimum-degree methods [10]).
+    pub leaf_threshold: usize,
+    /// Stop dissecting when the separator exceeds this fraction of the
+    /// subgraph (e.g. near-cliques) and fall back to minimum degree.
+    pub max_sep_fraction: f64,
+}
+
+impl Default for NdStrategy {
+    fn default() -> Self {
+        NdStrategy {
+            leaf_threshold: 120,
+            max_sep_fraction: 0.5,
+        }
+    }
+}
+
+/// Parameters of the distributed (PT-Scotch) layer.
+#[derive(Clone, Debug)]
+pub struct DistStrategy {
+    /// Fold-dup starts when the average number of vertices per process
+    /// drops below this (paper default strategy: 100).
+    pub folddup_threshold: usize,
+    /// Enable folding-with-duplication (vs plain centralization) —
+    /// ablation A3.
+    pub fold_dup: bool,
+    /// Overlap the two induced-subgraph builds with an extra thread per
+    /// process (§3.1; can be disabled like in the paper).
+    pub overlap_folds: bool,
+    /// Number of parallel matching rounds before giving up on the few
+    /// remaining unmatched vertices (paper: "usually converges in 5").
+    pub matching_rounds: usize,
+    /// Maximum band-graph size that may be centralized on one process for
+    /// multi-sequential refinement; larger bands are refined with the
+    /// scalable distributed fallback.
+    pub max_centralized_band: usize,
+}
+
+impl Default for DistStrategy {
+    fn default() -> Self {
+        DistStrategy {
+            folddup_threshold: 100,
+            fold_dup: true,
+            overlap_folds: true,
+            matching_rounds: 5,
+            max_centralized_band: 4_000_000,
+        }
+    }
+}
+
+/// Top-level strategy: everything the ordering pipeline needs.
+#[derive(Clone, Debug)]
+pub struct Strategy {
+    /// Root random seed (fixed by default for reproducibility, §4).
+    pub seed: u64,
+    /// Separator computation parameters.
+    pub sep: SepStrategy,
+    /// Nested dissection parameters.
+    pub nd: NdStrategy,
+    /// Distributed-layer parameters.
+    pub dist: DistStrategy,
+    /// Band refiner used during uncoarsening.
+    pub refiner: RefinerKind,
+}
+
+impl Default for Strategy {
+    fn default() -> Self {
+        Strategy {
+            seed: 1,
+            sep: SepStrategy::default(),
+            nd: NdStrategy::default(),
+            dist: DistStrategy::default(),
+            refiner: RefinerKind::Fm,
+        }
+    }
+}
+
+impl Strategy {
+    /// Parse `key=value` pairs (comma-separated) over the default
+    /// strategy, e.g. `band=3,folddup=1,leaf=120,refiner=xla,seed=42`.
+    pub fn parse(spec: &str) -> Result<Strategy> {
+        let mut s = Strategy::default();
+        for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| Error::InvalidStrategy(format!("expected key=value, got {tok}")))?;
+            let parse_usize = |v: &str| {
+                v.parse::<usize>()
+                    .map_err(|_| Error::InvalidStrategy(format!("bad integer {v} for {k}")))
+            };
+            match k {
+                "seed" => {
+                    s.seed = v
+                        .parse()
+                        .map_err(|_| Error::InvalidStrategy(format!("bad seed {v}")))?
+                }
+                "band" => s.sep.band_width = parse_usize(v)? as u32,
+                "coarse" => s.sep.coarse_target = parse_usize(v)?,
+                "ggg" => s.sep.ggg_tries = parse_usize(v)?,
+                "passes" => s.sep.fm.max_passes = parse_usize(v)?,
+                "neg" => s.sep.fm.max_neg_moves = parse_usize(v)?,
+                "eps" => {
+                    s.sep.fm.balance_eps = v
+                        .parse()
+                        .map_err(|_| Error::InvalidStrategy(format!("bad eps {v}")))?
+                }
+                "leaf" => s.nd.leaf_threshold = parse_usize(v)?,
+                "folddup" => s.dist.fold_dup = v != "0",
+                "foldthresh" => s.dist.folddup_threshold = parse_usize(v)?,
+                "overlap" => s.dist.overlap_folds = v != "0",
+                "rounds" => s.dist.matching_rounds = parse_usize(v)?,
+                "refiner" => {
+                    s.refiner = match v {
+                        "fm" => RefinerKind::Fm,
+                        "diffcpu" => RefinerKind::DiffusionCpu,
+                        "xla" | "diffxla" => RefinerKind::DiffusionXla,
+                        _ => {
+                            return Err(Error::InvalidStrategy(format!(
+                                "unknown refiner {v} (fm|diffcpu|xla)"
+                            )))
+                        }
+                    }
+                }
+                _ => return Err(Error::InvalidStrategy(format!("unknown key {k}"))),
+            }
+        }
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.sep.coarse_target < 2 {
+            return Err(Error::InvalidStrategy("coarse_target must be ≥ 2".into()));
+        }
+        if !(0.0..1.0).contains(&self.sep.fm.balance_eps) {
+            return Err(Error::InvalidStrategy("balance_eps must be in [0,1)".into()));
+        }
+        if self.sep.band_width == 0 {
+            return Err(Error::InvalidStrategy("band width must be ≥ 1".into()));
+        }
+        if self.nd.leaf_threshold < 1 {
+            return Err(Error::InvalidStrategy("leaf threshold must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let s = Strategy::default();
+        assert_eq!(s.sep.band_width, 3); // §3.3
+        assert_eq!(s.dist.folddup_threshold, 100); // §4 default strategy
+        assert!(s.dist.fold_dup);
+        assert_eq!(s.dist.matching_rounds, 5); // §3.2
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let s = Strategy::parse("band=5,leaf=60,refiner=xla,seed=9,folddup=0").unwrap();
+        assert_eq!(s.sep.band_width, 5);
+        assert_eq!(s.nd.leaf_threshold, 60);
+        assert_eq!(s.refiner, RefinerKind::DiffusionXla);
+        assert_eq!(s.seed, 9);
+        assert!(!s.dist.fold_dup);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_key() {
+        assert!(Strategy::parse("bogus=1").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_bad_value() {
+        assert!(Strategy::parse("band=abc").is_err());
+        assert!(Strategy::parse("refiner=quantum").is_err());
+        assert!(Strategy::parse("band").is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_band() {
+        assert!(Strategy::parse("band=0").is_err());
+    }
+
+    #[test]
+    fn parse_empty_is_default() {
+        let s = Strategy::parse("").unwrap();
+        assert_eq!(s.sep.coarse_target, Strategy::default().sep.coarse_target);
+    }
+}

@@ -1,0 +1,212 @@
+//! Property-based invariant tests (hand-rolled seed sweeps — the
+//! offline crate set has no proptest). Each property is exercised over
+//! many random graphs and seeds; failures print the generating seed.
+
+use ptscotch::comm;
+use ptscotch::dist::dgraph::DGraph;
+use ptscotch::dist::dsep::dist_validate_separator;
+use ptscotch::dist::matching::parallel_match;
+use ptscotch::graph::{generators, Graph, GraphBuilder};
+use ptscotch::order::{symbolic_cholesky, Ordering};
+use ptscotch::rng::Rng;
+use ptscotch::sep::band::extract_band;
+use ptscotch::sep::fm::{fm_refine, FmParams};
+use ptscotch::sep::initial::greedy_graph_growing;
+use ptscotch::sep::{multilevel_separator, FmRefiner, SepState, SEP};
+use ptscotch::strategy::{SepStrategy, Strategy};
+use std::sync::Arc;
+
+/// Random connected graph: a spanning path plus `extra` random edges.
+fn random_graph(seed: u64, n: usize, extra: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n {
+        b.add_edge(v - 1, v);
+    }
+    for _ in 0..extra {
+        let u = rng.below(n);
+        let v = rng.below(n);
+        if u != v {
+            b.add_edge_w(u, v, 1 + rng.below(3) as i64);
+        }
+    }
+    b.build().unwrap()
+}
+
+#[test]
+fn prop_fm_preserves_invariant_and_never_worsens() {
+    for seed in 0..30u64 {
+        let n = 40 + (seed as usize * 13) % 160;
+        let g = random_graph(seed, n, n);
+        let mut rng = Rng::new(seed ^ 0xF);
+        let mut s = greedy_graph_growing(&g, 2, &mut rng);
+        let before = s.quality_key();
+        fm_refine(&g, &mut s, &[], &FmParams::default(), &mut rng);
+        s.validate(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert!(s.quality_key() <= before, "seed {seed} worsened");
+    }
+}
+
+#[test]
+fn prop_multilevel_separator_valid_on_random_graphs() {
+    let strat = SepStrategy::default();
+    let refiner = FmRefiner::default();
+    for seed in 0..20u64 {
+        let n = 150 + (seed as usize * 37) % 400;
+        let g = random_graph(seed, n, n / 2);
+        let mut rng = Rng::new(seed);
+        let s = multilevel_separator(&g, &strat, &refiner, &mut rng);
+        s.validate(&g).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // Both sides nonempty unless the separator is huge (dense case).
+        assert!(
+            s.wgts[0] > 0 && s.wgts[1] > 0 || s.sep_weight() as usize > n / 2,
+            "seed {seed}: degenerate split {:?}",
+            s.wgts
+        );
+    }
+}
+
+#[test]
+fn prop_band_total_weight_conserved() {
+    for seed in 0..20u64 {
+        let g = generators::irregular_mesh(12 + (seed as usize % 6), 10, seed);
+        let mut rng = Rng::new(seed);
+        let s = greedy_graph_growing(&g, 2, &mut rng);
+        if s.sep_count() == 0 {
+            continue;
+        }
+        for width in 1..=4u32 {
+            let band = extract_band(&g, &s, width).unwrap();
+            band.graph
+                .validate()
+                .unwrap_or_else(|e| panic!("seed {seed} w{width}: {e}"));
+            // Band + anchors carry the whole weight (within the +1-per-
+            // empty-anchor slack).
+            let slack = 2;
+            assert!(
+                (band.graph.total_vwgt() - g.total_vwgt()).abs() <= slack,
+                "seed {seed} w{width}: weight drift"
+            );
+            // Separator weight unchanged by extraction.
+            assert_eq!(band.state.sep_weight(), s.sep_weight());
+        }
+    }
+}
+
+#[test]
+fn prop_symbolic_factorization_permutation_invariants() {
+    // NNZ and OPC must be ≥ the matrix itself, and identical orderings
+    // must give identical stats.
+    for seed in 0..15u64 {
+        let g = random_graph(seed, 60, 100);
+        let mut rng = Rng::new(seed);
+        let o = Ordering::from_iperm(rng.permutation(60)).unwrap();
+        let s1 = symbolic_cholesky(&g, &o);
+        let s2 = symbolic_cholesky(&g, &o);
+        assert_eq!(s1, s2);
+        assert!(s1.nnz >= (g.m() + g.n()) as u64);
+        assert!(s1.opc >= s1.nnz as f64);
+    }
+}
+
+#[test]
+fn prop_nd_ordering_is_permutation_on_random_graphs() {
+    let svc = ptscotch::coordinator::OrderingService::new_cpu_only();
+    for seed in 0..10u64 {
+        let g = random_graph(seed, 300 + seed as usize * 40, 500);
+        let strat = Strategy::parse(&format!("seed={seed}")).unwrap();
+        let rep = svc
+            .order(&g, ptscotch::coordinator::Engine::Sequential, &strat)
+            .unwrap();
+        rep.ordering
+            .validate()
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+#[test]
+fn prop_parallel_matching_symmetric_across_p_and_seeds() {
+    for seed in 0..6u64 {
+        for p in [2usize, 3, 5] {
+            let g = Arc::new(random_graph(seed, 240, 300));
+            let gref = g.clone();
+            let (res, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let mut rng = Rng::new(seed).derive(c.global_rank() as u64);
+                let mate = parallel_match(&c, &dg, 5, &mut rng);
+                (dg.base(), mate)
+            });
+            let n = gref.n();
+            let mut mate = vec![0u64; n];
+            for (base, m) in res {
+                for (i, &x) in m.iter().enumerate() {
+                    mate[base as usize + i] = x;
+                }
+            }
+            for v in 0..n {
+                let m = mate[v] as usize;
+                assert_eq!(
+                    mate[m] as usize, v,
+                    "seed {seed} p={p}: asymmetric at {v}"
+                );
+                if m != v {
+                    assert!(
+                        gref.neighbors(v).contains(&(m as u32)),
+                        "seed {seed} p={p}: non-adjacent pair"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_distributed_separator_valid_across_p() {
+    for (seed, p) in [(1u64, 2usize), (2, 3), (3, 4), (4, 5)] {
+        let g = Arc::new(random_graph(seed, 600, 900));
+        let (ok, _) = comm::run(p, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let strat = Strategy::default();
+            let refiner = FmRefiner::default();
+            let rng = Rng::new(strat.seed);
+            let mem = ptscotch::comm::MemTracker::new();
+            let part = ptscotch::dist::dsep::dist_separator(&c, &dg, &strat, &refiner, &rng, &mem);
+            dist_validate_separator(&c, &dg, &part)
+        });
+        assert!(ok.iter().all(|&x| x), "seed {seed} p={p}");
+    }
+}
+
+#[test]
+fn prop_engines_agree_on_fill_lower_bound() {
+    // Any valid ordering of the same graph has NNZ ≥ nnz(A) + n; engines
+    // differ in quality but never in validity.
+    let svc = ptscotch::coordinator::OrderingService::new_cpu_only();
+    let g = random_graph(9, 500, 700);
+    let lb = (g.m() + g.n()) as u64;
+    use ptscotch::coordinator::Engine;
+    for engine in [
+        Engine::Sequential,
+        Engine::PtScotch { p: 3 },
+        Engine::ParMetisLike { p: 4 },
+    ] {
+        let rep = svc.order(&g, engine, &Strategy::default()).unwrap();
+        assert!(rep.stats.nnz >= lb, "{engine:?}");
+    }
+}
+
+#[test]
+fn prop_sepstate_weights_always_consistent_after_pipeline() {
+    // Run the full multilevel machinery and re-derive weights from labels.
+    let strat = SepStrategy::default();
+    let refiner = FmRefiner::default();
+    for seed in 20..30u64 {
+        let g = generators::irregular_mesh(20, 16, seed);
+        let mut rng = Rng::new(seed);
+        let s = multilevel_separator(&g, &strat, &refiner, &mut rng);
+        let rebuilt = SepState::from_parts(&g, s.part.clone());
+        assert_eq!(rebuilt.wgts, s.wgts, "seed {seed}");
+        let sep_cnt = s.part.iter().filter(|&&p| p == SEP).count();
+        assert_eq!(sep_cnt, s.sep_count(), "seed {seed}");
+    }
+}

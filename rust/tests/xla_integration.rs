@@ -1,0 +1,246 @@
+//! End-to-end integration of the three-layer stack: Rust loads the
+//! AOT-compiled JAX/Pallas artifacts through PJRT and must reproduce the
+//! pure-Rust reference numerics exactly (same recurrence, f32).
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built — run `make artifacts` first; `make test` does so automatically.
+
+use ptscotch::graph::generators;
+use ptscotch::rng::Rng;
+use ptscotch::runtime::{load_shared, pack_ell, Bucket, DiffusionRefiner, XlaRuntime};
+use ptscotch::sep::band::extract_band;
+use ptscotch::sep::diffusion::{diffusion_iterations, initial_field};
+use ptscotch::sep::{BandRefiner, SepState, P0, P1, SEP};
+use std::path::PathBuf;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("PTSCOTCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            // Tests run from the crate root.
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        });
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifact_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: no artifacts (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+fn column_band(nx: usize, ny: usize, width: u32) -> ptscotch::sep::band::BandGraph {
+    let g = generators::grid2d(nx, ny);
+    let part: Vec<u8> = (0..nx * ny)
+        .map(|v| {
+            let x = v % nx;
+            use std::cmp::Ordering::*;
+            match x.cmp(&(nx / 2)) {
+                Less => P0,
+                Equal => SEP,
+                Greater => P1,
+            }
+        })
+        .collect();
+    let state = SepState::from_parts(&g, part);
+    extract_band(&g, &state, width).unwrap()
+}
+
+#[test]
+fn diffusion_artifact_matches_rust_reference() {
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).expect("load artifacts");
+    let band = column_band(17, 11, 3);
+    let g = &band.graph;
+    let bucket = rt
+        .fit_diffusion(g.n(), g.max_degree())
+        .expect("a bucket fits this band");
+    let ell = pack_ell(g, bucket.n, bucket.d).unwrap();
+
+    let x0 = initial_field(&band.state);
+    let mut x = vec![0f32; bucket.n];
+    x[..g.n()].copy_from_slice(&x0);
+    x[band.anchor0] = -1.0;
+    x[band.anchor1] = 1.0;
+    let mut mask = vec![0f32; bucket.n];
+    let mut vals = vec![0f32; bucket.n];
+    mask[band.anchor0] = 1.0;
+    vals[band.anchor0] = -1.0;
+    mask[band.anchor1] = 1.0;
+    vals[band.anchor1] = 1.0;
+
+    let got = rt
+        .diffusion_step(bucket, &x, &mask, &vals, &ell)
+        .expect("execute diffusion artifact");
+
+    let want = diffusion_iterations(
+        g,
+        x0,
+        band.anchor0,
+        band.anchor1,
+        rt.steps_per_call,
+        0.95,
+    );
+    for v in 0..g.n() {
+        assert!(
+            (got[v] - want[v]).abs() < 1e-5,
+            "vertex {v}: xla {} vs rust {}",
+            got[v],
+            want[v]
+        );
+    }
+    // Padded rows stay identically zero.
+    for v in g.n()..bucket.n {
+        assert_eq!(got[v], 0.0, "padded row {v}");
+    }
+}
+
+#[test]
+fn minplus_artifact_computes_bfs_layers() {
+    let dir = require_artifacts!();
+    let rt = XlaRuntime::load(&dir).expect("load artifacts");
+    let g = generators::cycle(64);
+    let bucket = rt.fit_minplus(64, 2).expect("bucket");
+    let ell = pack_ell(&g, bucket.n, bucket.d).unwrap();
+    const INF: f32 = 3.0e38;
+    let mut dist = vec![INF; bucket.n];
+    dist[0] = 0.0;
+    for _ in 0..32 {
+        dist = rt.minplus_step(bucket, &dist, &ell).expect("execute");
+    }
+    for v in 0..64usize {
+        let want = v.min(64 - v) as f32;
+        assert_eq!(dist[v], want, "vertex {v}");
+    }
+    // Unreached padded rows stay at +inf.
+    assert!(dist[100] > 1.0e38);
+}
+
+#[test]
+fn xla_refiner_improves_band_and_stays_valid() {
+    let dir = require_artifacts!();
+    let rt = load_shared(&dir).expect("load artifacts");
+    let refiner = DiffusionRefiner::new(rt);
+    // A wiggly separator on an irregular mesh the refiner must clean up.
+    let g = generators::irregular_mesh(20, 14, 3);
+    let nx = 20;
+    let mut part: Vec<u8> = (0..g.n())
+        .map(|v| {
+            let x = v % nx;
+            let wiggle = (v / nx) % 3;
+            let cut = 9 + wiggle;
+            use std::cmp::Ordering::*;
+            match x.cmp(&cut) {
+                Less => P0,
+                Equal => SEP,
+                Greater => P1,
+            }
+        })
+        .collect();
+    // The irregular mesh has diagonals; cover any crossing edge so the
+    // starting state satisfies the separator invariant.
+    for v in 0..g.n() {
+        if part[v] == SEP {
+            continue;
+        }
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if part[u] != SEP && part[u] != part[v] {
+                part[v] = SEP;
+                break;
+            }
+        }
+    }
+    let state = SepState::from_parts(&g, part);
+    state.validate(&g).unwrap();
+    let mut band = extract_band(&g, &state, 3).unwrap();
+    let before = band.state.quality_key();
+    let mut rng = Rng::new(11);
+    refiner.refine_band(&mut band, &mut rng);
+    band.state.validate(&band.graph).unwrap();
+    assert!(
+        band.state.quality_key() <= before,
+        "refiner worsened the band: {:?} -> {:?}",
+        before,
+        band.state.quality_key()
+    );
+    assert!(
+        refiner.xla_calls.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "the XLA path must actually execute"
+    );
+}
+
+#[test]
+fn bucket_fallback_on_oversize_band() {
+    let dir = require_artifacts!();
+    let rt = load_shared(&dir).expect("load artifacts");
+    let refiner = DiffusionRefiner::new(rt);
+    // Degree 120 > bucket width 32 → CPU fallback must kick in.
+    let g = generators::thread_like(300, 120, 5);
+    let part: Vec<u8> = (0..g.n())
+        .map(|v| {
+            use std::cmp::Ordering::*;
+            match v.cmp(&150) {
+                Less => P0,
+                Equal => SEP,
+                Greater => P1,
+            }
+        })
+        .collect();
+    let mut state = SepState::from_parts(&g, part);
+    // Make it a valid separator first: cover crossing edges.
+    for v in 0..g.n() {
+        if state.part[v] == SEP {
+            continue;
+        }
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if state.part[u] != SEP && state.part[u] != state.part[v] {
+                state.part[v] = SEP;
+                break;
+            }
+        }
+    }
+    let state = SepState::from_parts(&g, state.part);
+    state.validate(&g).unwrap();
+    if let Some(mut band) = extract_band(&g, &state, 2) {
+        let mut rng = Rng::new(3);
+        refiner.refine_band(&mut band, &mut rng);
+        band.state.validate(&band.graph).unwrap();
+        assert!(
+            refiner.fallbacks.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "oversize band must fall back to CPU"
+        );
+    }
+}
+
+#[test]
+fn full_parallel_ordering_with_xla_refiner() {
+    let dir = require_artifacts!();
+    use ptscotch::coordinator::{Engine, OrderingService};
+    use ptscotch::strategy::Strategy;
+    let svc = OrderingService::new(&dir);
+    assert!(svc.has_xla());
+    let strat = Strategy::parse("refiner=xla").unwrap();
+    let g = generators::grid2d(24, 24);
+    let rep = svc
+        .order(&g, Engine::PtScotch { p: 4 }, &strat)
+        .expect("xla-backed parallel ordering");
+    rep.ordering.validate().unwrap();
+    // Quality must stay in the same class as the FM-only pipeline.
+    let fm = svc
+        .order(&g, Engine::PtScotch { p: 4 }, &Strategy::default())
+        .unwrap();
+    assert!(
+        rep.stats.opc <= fm.stats.opc * 1.3,
+        "xla refiner opc {} vs fm {}",
+        rep.stats.opc,
+        fm.stats.opc
+    );
+}
