@@ -1,0 +1,28 @@
+# Build helpers referenced throughout the docs and runtime messages.
+#
+# `artifacts` lowers the JAX/Pallas kernels to HLO-text artifacts the
+# Rust runtime executes through PJRT (needs jax installed; see
+# python/compile/aot.py). Everything else is plain cargo.
+#
+# NOTE: with the default offline `xla` stub (rust/xla-stub/), building
+# artifacts makes the XLA integration tests *fail* rather than skip —
+# the stub cannot execute them. Only run `test-xla` after wiring the
+# real `xla` crate into Cargo.toml (see README.md).
+
+.PHONY: artifacts test test-xla bench clean
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+test:
+	cargo test --release -q
+
+# Full suite including the PJRT execution path (real xla crate + jax).
+test-xla: artifacts
+	cargo test --release -q
+
+bench:
+	cargo bench
+
+clean:
+	rm -rf artifacts bench_out target

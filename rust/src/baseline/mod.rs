@@ -27,18 +27,21 @@ use crate::comm::{Comm, MemTracker};
 use crate::dist::coarsen::{coarsen_dist, DistCoarsening};
 use crate::dist::dgraph::DGraph;
 use crate::dist::dnd::ParallelOrderResult;
-use crate::dist::fold::{fold_half, FoldTarget};
-use crate::dist::induce::induce_dist;
 use crate::dist::matching::parallel_match;
 use crate::graph::Graph;
-use crate::order::{assemble_fragments, nested_dissection, OrderFragment};
+use crate::order::OrderFragment;
 use crate::rng::Rng;
-use crate::sep::{multilevel_separator, FmRefiner, P0, P1, SEP};
+use crate::sep::{multilevel_separator, FmRefiner};
 use crate::strategy::Strategy;
 use crate::{Error, Result};
 
 /// Order `g` with the ParMETIS-like parallel nested dissection.
 /// Collective; fails unless `comm.size()` is a power of two.
+///
+/// Reuses the shared dissection driver of [`crate::dist::dnd`] — the
+/// engines differ only in the separator policy (and the baseline never
+/// overlaps the induced-subgraph builds), exactly how the paper frames
+/// the comparison.
 pub fn parmetis_like_order(
     comm: &Comm,
     g: &Graph,
@@ -53,32 +56,30 @@ pub fn parmetis_like_order(
     mem.grow(dg.footprint_bytes());
     let payload: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
     let base_rng = Rng::new(strat.seed);
-    let mut frags = Vec::new();
+    let mut frags: Vec<OrderFragment> = Vec::new();
     let mut dist_levels = 0usize;
-    recurse(
-        comm, dg, payload, 0, strat, &base_rng, &mem, &mut frags, &mut dist_levels, 0,
+    let leaf_refiner = FmRefiner {
+        params: strat.sep.fm.clone(),
+    };
+    let separator = |c: &Comm, d: &DGraph, r: &Rng, m: &MemTracker| {
+        baseline_separator(c, d, strat, r, m)
+    };
+    crate::dist::dnd::dissect(
+        comm,
+        dg,
+        payload,
+        0,
+        strat,
+        &leaf_refiner,
+        &separator,
+        false, // the comparator does not overlap the induced builds
+        &base_rng,
+        &mem,
+        &mut frags,
+        &mut dist_levels,
+        0,
     );
-    let mut blob: Vec<u64> = Vec::new();
-    for f in &frags {
-        blob.push(f.start as u64);
-        blob.push(f.verts.len() as u64);
-        blob.extend(f.verts.iter().map(|&v| v as u64));
-    }
-    let all = comm.allgatherv(blob);
-    let mut all_frags = Vec::new();
-    for b in &all {
-        let mut i = 0usize;
-        while i < b.len() {
-            let (start, len) = (b[i] as usize, b[i + 1] as usize);
-            i += 2;
-            all_frags.push(OrderFragment {
-                start,
-                verts: b[i..i + len].iter().map(|&v| v as usize).collect(),
-            });
-            i += len;
-        }
-    }
-    let ordering = assemble_fragments(g.n(), all_frags)?;
+    let ordering = crate::dist::dnd::gather_and_assemble(comm, g.n(), &frags)?;
     Ok(ParallelOrderResult {
         ordering,
         peak_mem: mem.peak(),
@@ -138,118 +139,6 @@ fn baseline_separator(
         pmrefine::strict_refine(comm, fine, &mut part, &strat.sep.fm, 8);
     }
     part
-}
-
-#[allow(clippy::too_many_arguments)]
-fn recurse(
-    comm: &Comm,
-    dg: DGraph,
-    payload: Vec<u64>,
-    start: usize,
-    strat: &Strategy,
-    base_rng: &Rng,
-    mem: &MemTracker,
-    frags: &mut Vec<OrderFragment>,
-    dist_levels: &mut usize,
-    depth: u64,
-) {
-    if comm.size() == 1 {
-        let local = dg.to_local();
-        mem.grow(local.footprint_bytes());
-        let mut rng = base_rng.derive(0x1EAF ^ (depth << 8));
-        let refiner = FmRefiner {
-            params: strat.sep.fm.clone(),
-        };
-        let ord = nested_dissection(&local, strat, &refiner, &mut rng);
-        frags.push(OrderFragment {
-            start,
-            verts: ord.iperm.iter().map(|&lv| payload[lv] as usize).collect(),
-        });
-        mem.shrink(local.footprint_bytes());
-        return;
-    }
-    if dg.nglb == 0 {
-        return;
-    }
-    *dist_levels += 1;
-    let part = baseline_separator(comm, &dg, strat, &base_rng.derive(depth), mem);
-    let counts = [
-        comm.allreduce_sum(part.iter().filter(|&&x| x == P0).count() as i64) as usize,
-        comm.allreduce_sum(part.iter().filter(|&&x| x == P1).count() as i64) as usize,
-        comm.allreduce_sum(part.iter().filter(|&&x| x == SEP).count() as i64) as usize,
-    ];
-    let degenerate = counts[0] == 0
-        || counts[1] == 0
-        || counts[2] as f64 > dg.nglb as f64 * strat.nd.max_sep_fraction;
-    if degenerate {
-        let central = dg.centralize_all(comm);
-        let all_payload = comm.allgatherv(payload.clone()).concat();
-        if comm.rank() == 0 {
-            let mut rng = base_rng.derive(0xD0 ^ depth);
-            let refiner = FmRefiner {
-                params: strat.sep.fm.clone(),
-            };
-            let ord = nested_dissection(&central, strat, &refiner, &mut rng);
-            frags.push(OrderFragment {
-                start,
-                verts: ord
-                    .iperm
-                    .iter()
-                    .map(|&lv| all_payload[lv] as usize)
-                    .collect(),
-            });
-        }
-        return;
-    }
-    let my_sep: Vec<usize> = (0..dg.nloc()).filter(|&v| part[v] == SEP).collect();
-    let sep_offset = comm.exscan_sum(my_sep.len() as u64) as usize;
-    if !my_sep.is_empty() {
-        frags.push(OrderFragment {
-            start: start + counts[0] + counts[1] + sep_offset,
-            verts: my_sep.iter().map(|&v| payload[v] as usize).collect(),
-        });
-    }
-    let keep0: Vec<bool> = part.iter().map(|&x| x == P0).collect();
-    let keep1: Vec<bool> = part.iter().map(|&x| x == P1).collect();
-    let ind0 = induce_dist(comm, &dg, &keep0, &payload);
-    let ind1 = induce_dist(comm, &dg, &keep1, &payload);
-    mem.grow(ind0.dg.footprint_bytes() + ind1.dg.footprint_bytes());
-    drop(dg);
-    drop(payload);
-    let p = comm.size();
-    let f0 = fold_half(comm, &ind0.dg, &ind0.orig, FoldTarget::low_half(p));
-    let f1 = fold_half(comm, &ind1.dg, &ind1.orig, FoldTarget::high_half(p));
-    let b0 = ind0.dg.footprint_bytes();
-    let b1 = ind1.dg.footprint_bytes();
-    drop(ind0);
-    drop(ind1);
-    mem.shrink(b0 + b1);
-    let in_low = FoldTarget::low_half(p).contains(comm.rank());
-    let sub = comm.split(if in_low { 0 } else { 1 });
-    match (in_low, f0, f1) {
-        (true, Some((dg0, pl0)), _) => {
-            mem.grow(dg0.footprint_bytes());
-            recurse(
-                &sub, dg0, pl0, start, strat, base_rng, mem, frags, dist_levels, depth * 2 + 1,
-            );
-        }
-        (false, _, Some((dg1, pl1))) => {
-            mem.grow(dg1.footprint_bytes());
-            recurse(
-                &sub,
-                dg1,
-                pl1,
-                start + counts[0],
-                strat,
-                base_rng,
-                mem,
-                frags,
-                dist_levels,
-                depth * 2 + 2,
-            );
-        }
-        _ => unreachable!(),
-    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,204 @@
+//! Distributed coarsening (paper §3.2).
+//!
+//! Given a matching from [`super::matching::parallel_match`], each
+//! matched pair (and each singleton) collapses into one coarse vertex
+//! owned by the rank of the pair's smaller global id. Coarse vertices
+//! are renumbered contiguously per rank (exclusive scan over per-rank
+//! counts, preserving the ascending-block invariant of
+//! [`super::dgraph::DGraph`]); fine→coarse edges are routed to the
+//! coarse owner with one personalized exchange and merged there,
+//! accumulating collapsed edge weights exactly like the sequential
+//! heavy-edge coarsening in [`crate::sep::coarsen`].
+
+use super::dgraph::DGraph;
+use crate::comm::Comm;
+use std::collections::BTreeMap;
+
+/// One distributed coarsening level: the coarse graph plus the mapping
+/// from fine local vertices to **global** coarse ids, used by the
+/// uncoarsening projection (`coarse.fetch_at(comm, &fine2coarse, …)`).
+#[derive(Clone, Debug)]
+pub struct DistCoarsening {
+    /// The coarse distributed graph.
+    pub coarse: DGraph,
+    /// Global coarse id of each fine local vertex.
+    pub fine2coarse: Vec<u64>,
+}
+
+/// Collapse the distributed graph along `mate` (global-id partner per
+/// local vertex, self when unmatched). Collective.
+pub fn coarsen_dist(comm: &Comm, dg: &DGraph, mate: &[u64]) -> DistCoarsening {
+    let p = comm.size();
+    let nloc = dg.nloc();
+    let base = dg.base();
+
+    // 1. A pair's representative is its smaller global id; singletons
+    //    represent themselves. Representatives get local coarse slots.
+    let mut rep_slot: Vec<u64> = vec![u64::MAX; nloc];
+    let mut ncoarse_loc = 0u64;
+    for v in 0..nloc {
+        if dg.glb(v) <= mate[v] {
+            rep_slot[v] = ncoarse_loc;
+            ncoarse_loc += 1;
+        }
+    }
+
+    // 2. Coarse vertex distribution: exclusive scan of per-rank counts.
+    let counts = comm.allgatherv(vec![ncoarse_loc]);
+    let mut cvtx = vec![0u64; p + 1];
+    for r in 0..p {
+        cvtx[r + 1] = cvtx[r] + counts[r][0];
+    }
+    let cbase = cvtx[comm.rank()];
+
+    // 3. fine2coarse. Representatives and locally paired vertices are
+    //    resolved in place; a vertex whose (smaller-id) partner lives
+    //    remotely fetches the coarse id from the partner's owner.
+    let mut fine2coarse: Vec<u64> = vec![u64::MAX; nloc];
+    let mut queries: Vec<u64> = Vec::new();
+    let mut qpos: Vec<usize> = Vec::new();
+    for v in 0..nloc {
+        if rep_slot[v] != u64::MAX {
+            fine2coarse[v] = cbase + rep_slot[v];
+        } else if mate[v] >= base && mate[v] < base + nloc as u64 {
+            fine2coarse[v] = cbase + rep_slot[(mate[v] - base) as usize];
+        } else {
+            queries.push(mate[v]);
+            qpos.push(v);
+        }
+    }
+    let my_coarse: Vec<u64> = (0..nloc)
+        .map(|v| {
+            if rep_slot[v] != u64::MAX {
+                cbase + rep_slot[v]
+            } else {
+                u64::MAX // never queried: only representatives are
+            }
+        })
+        .collect();
+    let answers = dg.fetch_at(comm, &queries, &my_coarse);
+    for (k, &v) in qpos.iter().enumerate() {
+        debug_assert_ne!(answers[k], u64::MAX);
+        fine2coarse[v] = answers[k];
+    }
+
+    // 4. Coarse ids of fine ghosts, via the halo.
+    let ghost_coarse = dg.halo_exchange(comm, &fine2coarse);
+
+    // 5. Route vertex-weight and arc contributions to the coarse owner.
+    //    Vertex records: (coarse id, weight); arc records:
+    //    (coarse src, coarse dst, weight). Pair-internal arcs vanish.
+    let owner_of = |c: u64| cvtx.partition_point(|&b| b <= c) - 1;
+    let mut vbuf: Vec<Vec<u64>> = vec![Vec::new(); p];
+    let mut ebuf: Vec<Vec<u64>> = vec![Vec::new(); p];
+    for v in 0..nloc {
+        let cv = fine2coarse[v];
+        let o = owner_of(cv);
+        vbuf[o].push(cv);
+        vbuf[o].push(dg.vwgt[v] as u64);
+        for (&a, &w) in dg.neighbors_gst(v).iter().zip(dg.edge_weights_gst(v)) {
+            let a = a as usize;
+            let cw = if a < nloc {
+                fine2coarse[a]
+            } else {
+                ghost_coarse[a - nloc]
+            };
+            if cw != cv {
+                ebuf[o].push(cv);
+                ebuf[o].push(cw);
+                ebuf[o].push(w as u64);
+            }
+        }
+    }
+    let vin = comm.alltoallv(vbuf);
+    let ein = comm.alltoallv(ebuf);
+
+    // 6. Aggregate on the owner: sum vertex weights, merge parallel
+    //    coarse arcs (collapsed fine edges accumulate weight).
+    let nc = (cvtx[comm.rank() + 1] - cbase) as usize;
+    let mut vwgt = vec![0i64; nc];
+    for b in &vin {
+        let mut i = 0usize;
+        while i < b.len() {
+            vwgt[(b[i] - cbase) as usize] += b[i + 1] as i64;
+            i += 2;
+        }
+    }
+    let mut nbrs: Vec<BTreeMap<u64, i64>> = vec![BTreeMap::new(); nc];
+    for b in &ein {
+        let mut i = 0usize;
+        while i < b.len() {
+            let (cv, cw, w) = (b[i], b[i + 1], b[i + 2] as i64);
+            *nbrs[(cv - cbase) as usize].entry(cw).or_insert(0) += w;
+            i += 3;
+        }
+    }
+    let rows: Vec<Vec<(u64, i64)>> = nbrs
+        .into_iter()
+        .map(|m| m.into_iter().collect())
+        .collect();
+    let coarse = DGraph::from_rows(cvtx, comm.rank(), vwgt, rows);
+    DistCoarsening { coarse, fine2coarse }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::dist::matching::parallel_match;
+    use crate::graph::generators;
+    use crate::rng::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn coarse_graph_conserves_weight_and_shrinks() {
+        let g = Arc::new(generators::grid2d(14, 10));
+        let total = g.total_vwgt();
+        for p in [2usize, 3] {
+            let g = g.clone();
+            let (res, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let mut rng = Rng::new(7).derive(c.global_rank() as u64);
+                let mate = parallel_match(&c, &dg, 5, &mut rng);
+                let dc = coarsen_dist(&c, &dg, &mate);
+                let central = dc.coarse.centralize_all(&c);
+                central.validate().unwrap();
+                (dc.coarse.nglb, central.total_vwgt())
+            });
+            for (nglb, tw) in &res {
+                assert_eq!(*tw, total, "p={p}: weight drift");
+                assert!(*nglb < 140, "p={p}: no shrink");
+                assert!(*nglb as usize >= 140 / 2, "p={p}: over-collapse");
+            }
+        }
+    }
+
+    #[test]
+    fn projection_map_is_consistent() {
+        // Every fine vertex maps to a live coarse id, and matched pairs
+        // map to the same coarse vertex.
+        let g = Arc::new(generators::grid3d(5, 5, 4));
+        let n = g.n();
+        let (res, _) = comm::run(4, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let mut rng = Rng::new(3).derive(c.global_rank() as u64);
+            let mate = parallel_match(&c, &dg, 5, &mut rng);
+            let dc = coarsen_dist(&c, &dg, &mate);
+            (dg.base(), mate, dc.fine2coarse.clone(), dc.coarse.nglb)
+        });
+        let mut mate = vec![0u64; n];
+        let mut f2c = vec![0u64; n];
+        let mut nglb = 0;
+        for (b, m, f, ng) in res {
+            for (i, (&mm, &ff)) in m.iter().zip(&f).enumerate() {
+                mate[b as usize + i] = mm;
+                f2c[b as usize + i] = ff;
+            }
+            nglb = ng;
+        }
+        for v in 0..n {
+            assert!(f2c[v] < nglb, "dangling coarse id at {v}");
+            assert_eq!(f2c[v], f2c[mate[v] as usize], "pair split at {v}");
+        }
+    }
+}

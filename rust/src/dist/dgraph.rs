@@ -1,0 +1,454 @@
+//! Distributed CSR graphs with ghost/halo indexing (paper §3.1).
+//!
+//! A [`DGraph`] is the PT-Scotch distributed graph structure: each rank
+//! owns a contiguous block of the global vertex range (recorded in
+//! `vtxdist`, exactly like the ParMETIS convention the paper's authors
+//! interoperate with) and stores its local adjacency in *ghost* ("gst")
+//! indexing — arc targets `< nloc` are local vertices, targets `≥ nloc`
+//! address the `ghosts` table of remote neighbors. The paper's
+//! halo-exchange primitive (§3.1: "a copy of the ghost vertices' data is
+//! maintained on every neighboring process") is [`DGraph::halo_exchange`];
+//! arbitrary remote reads (used by uncoarsening projection, §3.2) are
+//! [`DGraph::fetch_at`].
+//!
+//! All collective methods must be called by every rank of the
+//! communicator the graph lives on, in the same order — the same
+//! contract as the MPI code they model.
+
+use crate::comm::Comm;
+use crate::graph::Graph;
+
+/// A distributed graph: one rank's block of a globally numbered CSR
+/// graph, plus the ghost table addressing remote neighbors.
+///
+/// Invariants:
+/// * rank `r` owns global ids `vtxdist[r] .. vtxdist[r + 1]` (contiguous
+///   blocks, ascending with rank), so `glb(v) = base() + v`;
+/// * `ghosts` is sorted ascending and deduplicated — consequently ghost
+///   entries grouped by owner appear in ascending-rank order, which
+///   [`DGraph::halo_exchange`] exploits;
+/// * `adj` stores gst indices: `a < nloc()` is local vertex `a`, and
+///   `a ≥ nloc()` is remote vertex `ghosts[a - nloc()]`.
+#[derive(Clone, Debug)]
+pub struct DGraph {
+    /// Global-range boundaries per rank; length `p + 1`, `vtxdist[0] == 0`.
+    pub vtxdist: Vec<u64>,
+    /// This rank's index into `vtxdist` (its rank in the owning comm).
+    pub rank: usize,
+    /// Total number of global vertices (`vtxdist[p]`).
+    pub nglb: u64,
+    /// Local adjacency offsets; length `nloc() + 1`.
+    pub xadj: Vec<usize>,
+    /// Arc targets in gst indexing (local index or `nloc + ghost index`).
+    pub adj: Vec<u32>,
+    /// Local vertex weights.
+    pub vwgt: Vec<i64>,
+    /// Edge weights parallel to `adj`.
+    pub ewgt: Vec<i64>,
+    /// Global ids of ghost vertices, sorted ascending.
+    pub ghosts: Vec<u64>,
+}
+
+impl DGraph {
+    /// Number of local (owned) vertices.
+    #[inline]
+    pub fn nloc(&self) -> usize {
+        self.vwgt.len()
+    }
+
+    /// First global id owned by this rank.
+    #[inline]
+    pub fn base(&self) -> u64 {
+        self.vtxdist[self.rank]
+    }
+
+    /// Global id of local vertex `v`.
+    #[inline]
+    pub fn glb(&self, v: usize) -> u64 {
+        self.base() + v as u64
+    }
+
+    /// Owning rank of global id `g` (binary search over `vtxdist`).
+    #[inline]
+    pub fn owner(&self, g: u64) -> usize {
+        debug_assert!(g < self.nglb);
+        self.vtxdist.partition_point(|&b| b <= g) - 1
+    }
+
+    /// Neighbor list of local vertex `v` in gst indexing.
+    #[inline]
+    pub fn neighbors_gst(&self, v: usize) -> &[u32] {
+        &self.adj[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    /// Edge weights parallel to [`DGraph::neighbors_gst`].
+    #[inline]
+    pub fn edge_weights_gst(&self, v: usize) -> &[i64] {
+        &self.ewgt[self.xadj[v]..self.xadj[v + 1]]
+    }
+
+    /// Global id of a gst index (local or ghost).
+    #[inline]
+    pub fn gst_to_glb(&self, a: u32) -> u64 {
+        let a = a as usize;
+        if a < self.nloc() {
+            self.glb(a)
+        } else {
+            self.ghosts[a - self.nloc()]
+        }
+    }
+
+    /// Approximate heap footprint in bytes, for the per-rank memory
+    /// tracking that reproduces Figures 10–11.
+    pub fn footprint_bytes(&self) -> usize {
+        self.vtxdist.len() * std::mem::size_of::<u64>()
+            + self.xadj.len() * std::mem::size_of::<usize>()
+            + self.adj.len() * std::mem::size_of::<u32>()
+            + self.vwgt.len() * std::mem::size_of::<i64>()
+            + self.ewgt.len() * std::mem::size_of::<i64>()
+            + self.ghosts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Assemble a `DGraph` from per-local-vertex rows of
+    /// `(neighbor global id, edge weight)` pairs. Builds the sorted
+    /// ghost table and converts rows to gst indexing. `vwgt.len()` must
+    /// equal the size of this rank's `vtxdist` block.
+    pub(crate) fn from_rows(
+        vtxdist: Vec<u64>,
+        rank: usize,
+        vwgt: Vec<i64>,
+        rows: Vec<Vec<(u64, i64)>>,
+    ) -> DGraph {
+        let nglb = *vtxdist.last().expect("vtxdist non-empty");
+        let base = vtxdist[rank];
+        let nloc = vwgt.len();
+        debug_assert_eq!(nloc as u64, vtxdist[rank + 1] - base);
+        debug_assert_eq!(rows.len(), nloc);
+        let local = |g: u64| g >= base && g < base + nloc as u64;
+        let mut ghosts: Vec<u64> = rows
+            .iter()
+            .flatten()
+            .map(|&(g, _)| g)
+            .filter(|&g| !local(g))
+            .collect();
+        ghosts.sort_unstable();
+        ghosts.dedup();
+        let mut xadj = Vec::with_capacity(nloc + 1);
+        xadj.push(0usize);
+        let mut adj = Vec::new();
+        let mut ewgt = Vec::new();
+        for row in &rows {
+            for &(g, w) in row {
+                let idx = if local(g) {
+                    (g - base) as u32
+                } else {
+                    (nloc + ghosts.binary_search(&g).expect("ghost registered")) as u32
+                };
+                adj.push(idx);
+                ewgt.push(w);
+            }
+            xadj.push(adj.len());
+        }
+        DGraph {
+            vtxdist,
+            rank,
+            nglb,
+            xadj,
+            adj,
+            vwgt,
+            ewgt,
+            ghosts,
+        }
+    }
+
+    /// Block-distribute a centralized graph over the communicator: rank
+    /// `r` of `p` owns global ids `⌊r·n/p⌋ .. ⌊(r+1)·n/p⌋` (§3.1). Every
+    /// rank calls this with the same `g`.
+    pub fn from_global(comm: &Comm, g: &Graph) -> DGraph {
+        let p = comm.size();
+        let n = g.n() as u64;
+        let vtxdist: Vec<u64> = (0..=p).map(|r| n * r as u64 / p as u64).collect();
+        let rank = comm.rank();
+        let base = vtxdist[rank] as usize;
+        let nloc = (vtxdist[rank + 1] - vtxdist[rank]) as usize;
+        let vwgt: Vec<i64> = (0..nloc).map(|v| g.vwgt[base + v]).collect();
+        let rows: Vec<Vec<(u64, i64)>> = (0..nloc)
+            .map(|v| {
+                g.neighbors(base + v)
+                    .iter()
+                    .zip(g.edge_weights(base + v))
+                    .map(|(&u, &w)| (u as u64, w))
+                    .collect()
+            })
+            .collect();
+        DGraph::from_rows(vtxdist, rank, vwgt, rows)
+    }
+
+    /// Exchange one value per ghost vertex with the owners (§3.1's halo
+    /// update). `vals` holds this rank's local values; the result is
+    /// parallel to [`DGraph::ghosts`]. Collective.
+    pub fn halo_exchange<T: Clone + Send + 'static>(&self, comm: &Comm, vals: &[T]) -> Vec<T> {
+        debug_assert_eq!(vals.len(), self.nloc());
+        let p = comm.size();
+        // Ghosts are sorted and ownership blocks ascend with rank, so
+        // grouping by owner preserves the ghost order on concatenation.
+        let mut want: Vec<Vec<u64>> = vec![Vec::new(); p];
+        for &g in &self.ghosts {
+            want[self.owner(g)].push(g);
+        }
+        let reqs = comm.alltoallv(want);
+        let base = self.base();
+        let reply: Vec<Vec<T>> = reqs
+            .iter()
+            .map(|ids| {
+                ids.iter()
+                    .map(|&g| vals[(g - base) as usize].clone())
+                    .collect()
+            })
+            .collect();
+        let got = comm.alltoallv(reply);
+        got.concat()
+    }
+
+    /// Fetch `vals[local(idx[k])]` from the owner of each global id in
+    /// `idx` (remote reads for uncoarsening projection, §3.2). `vals` is
+    /// this rank's local value array; the result is parallel to `idx`.
+    /// Collective — ranks with empty `idx` still participate.
+    pub fn fetch_at<T: Clone + Send + 'static>(
+        &self,
+        comm: &Comm,
+        idx: &[u64],
+        vals: &[T],
+    ) -> Vec<T> {
+        debug_assert_eq!(vals.len(), self.nloc());
+        let p = comm.size();
+        let mut want: Vec<Vec<u64>> = vec![Vec::new(); p];
+        let mut pos: Vec<Vec<usize>> = vec![Vec::new(); p];
+        for (k, &g) in idx.iter().enumerate() {
+            let o = self.owner(g);
+            want[o].push(g);
+            pos[o].push(k);
+        }
+        let reqs = comm.alltoallv(want);
+        let base = self.base();
+        let reply: Vec<Vec<T>> = reqs
+            .iter()
+            .map(|ids| {
+                ids.iter()
+                    .map(|&g| vals[(g - base) as usize].clone())
+                    .collect()
+            })
+            .collect();
+        let got = comm.alltoallv(reply);
+        let mut out: Vec<Option<T>> = vec![None; idx.len()];
+        for r in 0..p {
+            for (j, &k) in pos[r].iter().enumerate() {
+                out[k] = Some(got[r][j].clone());
+            }
+        }
+        out.into_iter()
+            .map(|x| x.expect("every queried id answered"))
+            .collect()
+    }
+
+    /// Append local vertex `v`'s adjacency row to a wire blob as
+    /// `[deg, (nbr_glb, weight)*deg]` — the one row encoding shared by
+    /// every serializer in the `dist` layer (centralize, fold, band
+    /// gather), so the stride arithmetic lives in a single place.
+    pub(crate) fn encode_row(&self, v: usize, blob: &mut Vec<u64>) {
+        let row = self.neighbors_gst(v);
+        blob.push(row.len() as u64);
+        for (&a, &w) in row.iter().zip(self.edge_weights_gst(v)) {
+            blob.push(self.gst_to_glb(a));
+            blob.push(w as u64);
+        }
+    }
+
+    /// This rank's centralization blob: for each local v,
+    /// `[vwgt, deg, (nbr_glb, w)*deg]`.
+    fn central_blob(&self) -> Vec<u64> {
+        let mut blob: Vec<u64> = Vec::new();
+        for v in 0..self.nloc() {
+            blob.push(self.vwgt[v] as u64);
+            self.encode_row(v, &mut blob);
+        }
+        blob
+    }
+
+    /// Decode rank-ordered centralization blobs into a [`Graph`]. Ranks
+    /// own ascending contiguous blocks, so concatenating the blobs in
+    /// rank order yields the global vertex order.
+    fn decode_central(n: usize, all: &[Vec<u64>]) -> Graph {
+        let mut xadj = Vec::with_capacity(n + 1);
+        xadj.push(0usize);
+        let mut adj: Vec<u32> = Vec::new();
+        let mut vwgt = Vec::with_capacity(n);
+        let mut ewgt: Vec<i64> = Vec::new();
+        for b in all {
+            let mut i = 0usize;
+            while i < b.len() {
+                vwgt.push(b[i] as i64);
+                let deg = b[i + 1] as usize;
+                i += 2;
+                for _ in 0..deg {
+                    adj.push(b[i] as u32);
+                    ewgt.push(b[i + 1] as i64);
+                    i += 2;
+                }
+                xadj.push(adj.len());
+            }
+        }
+        debug_assert_eq!(vwgt.len(), n);
+        Graph {
+            xadj,
+            adj,
+            vwgt,
+            ewgt,
+        }
+    }
+
+    /// Gather the whole distributed graph on **every** rank as a
+    /// centralized [`Graph`] indexed by global id — the terminal state of
+    /// folding-with-duplication (§3.2), where each process holds a full
+    /// copy of the (small) coarsest graph. Collective.
+    pub fn centralize_all(&self, comm: &Comm) -> Graph {
+        let all = comm.allgatherv(self.central_blob());
+        Self::decode_central(self.nglb as usize, &all)
+    }
+
+    /// Like [`DGraph::centralize_all`], but only `root` reconstructs the
+    /// graph — the single-working-copy mode of the comparator and the
+    /// `folddup=0` ablation (§3.2). A true gather-to-root: non-roots
+    /// send their blob point-to-point and return `None`, so the traffic
+    /// telemetry shows the (cheaper) no-duplication communication
+    /// pattern instead of a broadcast-everywhere. Collective.
+    pub fn centralize_root(&self, comm: &Comm, root: usize) -> Option<Graph> {
+        const TAG: u64 = 0xCE27;
+        let blob = self.central_blob();
+        if comm.rank() != root {
+            comm.send(root, TAG, blob);
+            return None;
+        }
+        let p = comm.size();
+        let mut mine = Some(blob);
+        let mut all: Vec<Vec<u64>> = Vec::with_capacity(p);
+        for r in 0..p {
+            if r == root {
+                all.push(mine.take().expect("own blob"));
+            } else {
+                all.push(comm.recv(r, TAG));
+            }
+        }
+        Some(Self::decode_central(self.nglb as usize, &all))
+    }
+
+    /// Reinterpret a single-rank distributed graph (no ghosts) as a
+    /// centralized [`Graph`] — used when the nested-dissection recursion
+    /// bottoms out on a one-rank communicator (§3.1).
+    pub fn to_local(&self) -> Graph {
+        debug_assert!(
+            self.ghosts.is_empty(),
+            "to_local requires a fully local graph"
+        );
+        Graph {
+            xadj: self.xadj.clone(),
+            adj: self.adj.clone(),
+            vwgt: self.vwgt.clone(),
+            ewgt: self.ewgt.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::graph::generators;
+    use std::sync::Arc;
+
+    #[test]
+    fn global_local_index_inversion() {
+        let g = Arc::new(generators::grid2d(9, 7));
+        let (res, _) = comm::run(4, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            // glb/base/owner must invert each other on every local id.
+            for v in 0..dg.nloc() {
+                let gid = dg.glb(v);
+                assert_eq!(gid, dg.base() + v as u64);
+                assert_eq!(dg.owner(gid), c.rank());
+            }
+            // Ghost table is sorted, deduplicated and strictly remote.
+            for w in dg.ghosts.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            for &gh in &dg.ghosts {
+                assert_ne!(dg.owner(gh), c.rank());
+            }
+            dg.nloc()
+        });
+        assert_eq!(res.iter().sum::<usize>(), 63);
+    }
+
+    #[test]
+    fn halo_exchange_roundtrip_returns_ghost_ids() {
+        // Publishing each vertex's own global id through the halo must
+        // hand every rank exactly its ghost table back.
+        let g = Arc::new(generators::grid3d(5, 4, 3));
+        for p in [2usize, 3, 5] {
+            let g = g.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let mine: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
+                let got = dg.halo_exchange(&c, &mine);
+                got == dg.ghosts
+            });
+            assert!(ok.iter().all(|&x| x), "p={p}");
+        }
+    }
+
+    #[test]
+    fn centralize_all_reconstructs_original() {
+        let g = Arc::new(generators::irregular_mesh(8, 6, 3));
+        let gref = g.clone();
+        let (res, _) = comm::run(3, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            dg.centralize_all(&c)
+        });
+        for central in &res {
+            central.validate().unwrap();
+            assert_eq!(central.xadj, gref.xadj);
+            assert_eq!(central.adj, gref.adj);
+            assert_eq!(central.vwgt, gref.vwgt);
+            assert_eq!(central.ewgt, gref.ewgt);
+        }
+    }
+
+    #[test]
+    fn fetch_at_reads_remote_values() {
+        let g = Arc::new(generators::grid2d(10, 3));
+        let (ok, _) = comm::run(3, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            // Every rank asks for vertex weights scattered over all ranks.
+            let idx: Vec<u64> = (0..dg.nglb).step_by(3).collect();
+            let vals: Vec<i64> = (0..dg.nloc()).map(|v| dg.glb(v) as i64 * 10).collect();
+            let got = dg.fetch_at(&c, &idx, &vals);
+            got.iter()
+                .zip(&idx)
+                .all(|(&gv, &i)| gv == i as i64 * 10)
+        });
+        assert!(ok.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn single_rank_to_local_matches_source() {
+        let g = Arc::new(generators::grid2d(6, 6));
+        let gref = g.clone();
+        let (res, _) = comm::run(1, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            assert!(dg.ghosts.is_empty());
+            dg.to_local()
+        });
+        assert_eq!(res[0].xadj, gref.xadj);
+        assert_eq!(res[0].adj, gref.adj);
+    }
+}

@@ -1,0 +1,433 @@
+//! Distributed vertex-separator computation (paper §3.2–§3.3).
+//!
+//! The PT-Scotch separator pipeline, as opposed to the ParMETIS-like
+//! comparator in [`crate::baseline`]:
+//!
+//! 1. **distributed coarsening** with parallel probabilistic matching
+//!    until the graph has at most `folddup_threshold` vertices per
+//!    process (§3.2, default 100);
+//! 2. **folding with duplication** taken to its terminal state: every
+//!    rank receives a full copy of the coarsest graph
+//!    ([`crate::dist::dgraph::DGraph::centralize_all`]) and runs the
+//!    sequential multilevel separator on it with a decorrelated seed;
+//!    the best result by [`crate::sep::SepState::quality_key`] wins
+//!    (§3.2: independent multilevel runs "increase the final quality"
+//!    — disabled by `folddup=0`, which degrades to a single rank-0
+//!    working copy like the comparator);
+//! 3. **uncoarsening with multi-sequential band refinement** (§3.3): at
+//!    every level the projected separator is surrounded by a distributed
+//!    band of width `band_width`, the (small) band graph is centralized
+//!    on every rank with two anchor vertices standing for the excluded
+//!    parts, each rank refines its copy with a different seed, and the
+//!    best refined band — if it beats the projection — is committed
+//!    back to the distributed part array.
+
+use super::coarsen::{coarsen_dist, DistCoarsening};
+use super::dgraph::DGraph;
+use super::matching::parallel_match;
+use crate::comm::{Comm, MemTracker};
+use crate::graph::GraphBuilder;
+use crate::rng::Rng;
+use crate::sep::band::BandGraph;
+use crate::sep::{multilevel_separator, BandRefiner, SepState, P0, P1, SEP};
+use crate::strategy::Strategy;
+use std::collections::HashMap;
+
+/// Compute a vertex separator of the distributed graph; returns one
+/// part label ([`P0`]/[`P1`]/[`SEP`]) per local vertex. Collective.
+/// `rng` is a shared root — per-phase streams are derived from it mixed
+/// with the global rank, so sibling subgroups and ranks stay
+/// decorrelated while the whole run remains reproducible (§4).
+pub fn dist_separator(
+    comm: &Comm,
+    dg: &DGraph,
+    strat: &Strategy,
+    refiner: &dyn BandRefiner,
+    rng: &Rng,
+    mem: &MemTracker,
+) -> Vec<u8> {
+    let p = comm.size();
+    let grank = comm.global_rank() as u64;
+    if p == 1 {
+        let local = dg.to_local();
+        let mut r = rng.derive(0x5E0 ^ grank);
+        return multilevel_separator(&local, &strat.sep, refiner, &mut r).part;
+    }
+
+    // Phase 1: distributed coarsening (§3.2). The fine graph of level
+    // `i` is `dg` itself for i = 0 and `coarse_graphs[i - 1]` after —
+    // each level's graph is stored exactly once.
+    let stop_at = (strat.dist.folddup_threshold * p).max(2 * strat.sep.coarse_target) as u64;
+    let mut coarse_graphs: Vec<DGraph> = Vec::new();
+    let mut maps: Vec<Vec<u64>> = Vec::new();
+    loop {
+        let fine: &DGraph = coarse_graphs.last().unwrap_or(dg);
+        if fine.nglb <= stop_at {
+            break;
+        }
+        let round = coarse_graphs.len() as u64;
+        let mut r = rng.derive(0xC0A2 ^ (round << 16) ^ grank);
+        let mate = parallel_match(comm, fine, strat.dist.matching_rounds, &mut r);
+        let DistCoarsening { coarse, fine2coarse } = coarsen_dist(comm, fine, &mate);
+        if coarse.nglb as f64 > fine.nglb as f64 * 0.95 {
+            break; // matching stalled (near-clique); stop coarsening
+        }
+        mem.grow(coarse.footprint_bytes());
+        coarse_graphs.push(coarse);
+        maps.push(fine2coarse);
+    }
+
+    // Phase 2: multi-sequential initial separator on the duplicated
+    // coarsest graph (§3.2's fold-with-duplication endpoint).
+    let coarsest: &DGraph = coarse_graphs.last().unwrap_or(dg);
+    let seps: Vec<u8> = if strat.dist.fold_dup {
+        let central = coarsest.centralize_all(comm);
+        mem.grow(central.footprint_bytes());
+        let mut r = rng.derive(0xD00D ^ grank);
+        let s = multilevel_separator(&central, &strat.sep, refiner, &mut r);
+        mem.shrink(central.footprint_bytes());
+        best_pick(comm, s.quality_key(), s.part)
+    } else {
+        // Ablation A3 / comparator mode: one working copy on rank 0 —
+        // non-roots feed the gather but skip the reconstruction.
+        match coarsest.centralize_root(comm, 0) {
+            Some(central) => {
+                mem.grow(central.footprint_bytes());
+                let mut r = rng.derive(0xD00D);
+                let s = multilevel_separator(&central, &strat.sep, refiner, &mut r);
+                mem.shrink(central.footprint_bytes());
+                comm.bcast(0, Some(s.part))
+            }
+            None => comm.bcast(0, None),
+        }
+    };
+    let mut part: Vec<u8> = (0..coarsest.nloc())
+        .map(|v| seps[coarsest.glb(v) as usize])
+        .collect();
+
+    // Phase 3: uncoarsen, refining on distributed band graphs (§3.3).
+    for li in (0..maps.len()).rev() {
+        let coarse = &coarse_graphs[li];
+        let fine: &DGraph = if li == 0 { dg } else { &coarse_graphs[li - 1] };
+        let coarse_part = part;
+        part = coarse.fetch_at(comm, &maps[li], &coarse_part);
+        band_refine_dist(
+            comm,
+            fine,
+            &mut part,
+            strat,
+            refiner,
+            &rng.derive(0xBA2D ^ li as u64),
+            mem,
+        );
+    }
+    for g in &coarse_graphs {
+        mem.shrink(g.footprint_bytes());
+    }
+    debug_assert!(dist_validate_separator(comm, dg, &part));
+    part
+}
+
+/// Check the distributed separator invariant — no edge (local or
+/// crossing a rank boundary) joins a [`P0`] vertex to a [`P1`] vertex,
+/// and all labels are in range. Collective; returns the global verdict
+/// on every rank.
+pub fn dist_validate_separator(comm: &Comm, dg: &DGraph, part: &[u8]) -> bool {
+    let nloc = dg.nloc();
+    let mut ok = part.len() == nloc;
+    if ok {
+        let ghost_part = dg.halo_exchange(comm, part);
+        'outer: for v in 0..nloc {
+            if part[v] > SEP {
+                ok = false;
+                break;
+            }
+            if part[v] == SEP {
+                continue;
+            }
+            for &a in dg.neighbors_gst(v) {
+                let a = a as usize;
+                let pu = if a < nloc {
+                    part[a]
+                } else {
+                    ghost_part[a - nloc]
+                };
+                if pu != SEP && pu != part[v] {
+                    ok = false;
+                    break 'outer;
+                }
+            }
+        }
+    } else {
+        // Keep the collective call pattern aligned across ranks.
+        let _ = dg.halo_exchange(comm, &vec![0u8; nloc]);
+    }
+    comm.allreduce(ok, |a, b| a && b)
+}
+
+/// Pick the globally best `(quality key, part vector)` among the ranks'
+/// candidates: minimal key, ties to the lowest rank. Collective.
+fn best_pick(comm: &Comm, key: (i64, i64), part: Vec<u8>) -> Vec<u8> {
+    let keys = comm.allgatherv(vec![key]);
+    let winner = (0..comm.size())
+        .min_by_key(|&r| (keys[r][0], r))
+        .expect("at least one rank");
+    if comm.rank() == winner {
+        comm.bcast(winner, Some(part))
+    } else {
+        comm.bcast(winner, None)
+    }
+}
+
+/// One multi-sequential band refinement step (§3.3): extract the
+/// distributed band of vertices within `band_width` of the separator,
+/// centralize it on every rank with anchor vertices standing for the
+/// excluded parts, refine every copy with a decorrelated seed, and
+/// commit the best strictly-improving result. Collective.
+fn band_refine_dist(
+    comm: &Comm,
+    dg: &DGraph,
+    part: &mut Vec<u8>,
+    strat: &Strategy,
+    refiner: &dyn BandRefiner,
+    rng: &Rng,
+    mem: &MemTracker,
+) {
+    let nloc = dg.nloc();
+    let width = strat.sep.band_width;
+
+    // Cheap pre-gate: the global separator count is a lower bound on
+    // the band size, so the empty and hopelessly-oversized cases skip
+    // the BFS collectives entirely.
+    let sep_total =
+        comm.allreduce_sum(part.iter().filter(|&&x| x == SEP).count() as i64) as usize;
+    if sep_total == 0 || sep_total > strat.dist.max_centralized_band {
+        return;
+    }
+
+    // Distributed multi-source BFS from the separator, capped at
+    // `width`: one halo exchange per level (the distributed analog of
+    // `Graph::multi_source_bfs`).
+    let mut dist: Vec<u32> = part
+        .iter()
+        .map(|&x| if x == SEP { 0 } else { u32::MAX })
+        .collect();
+    for _ in 0..width {
+        let ghost_dist = dg.halo_exchange(comm, &dist);
+        let prev = dist.clone();
+        for v in 0..nloc {
+            if prev[v] != u32::MAX {
+                continue;
+            }
+            let mut best = u32::MAX;
+            for &a in dg.neighbors_gst(v) {
+                let a = a as usize;
+                let da = if a < nloc {
+                    prev[a]
+                } else {
+                    ghost_dist[a - nloc]
+                };
+                if da != u32::MAX && da + 1 < best {
+                    best = da + 1;
+                }
+            }
+            dist[v] = best;
+        }
+    }
+
+    // Exact gate on the global band size *before* shipping any
+    // adjacency (the pre-gate above only bounded it from below).
+    let band: Vec<usize> = (0..nloc).filter(|&v| dist[v] != u32::MAX).collect();
+    let global_band = comm.allreduce_sum(band.len() as i64) as usize;
+    if global_band > strat.dist.max_centralized_band {
+        // Scalable fallback: keep the projected separator as-is rather
+        // than centralizing an oversized band (strategy knob
+        // `max_centralized_band`; the projection is already valid).
+        return;
+    }
+
+    // Serialize this rank's band slice:
+    // [nband, excl0, excl1, then per band vertex:
+    //  gid, part, vwgt, deg, (nbr_gid, w)*deg].
+    let mut excl = [0i64; 2];
+    for v in 0..nloc {
+        if dist[v] == u32::MAX {
+            // Outside the band ⇒ not SEP (separator vertices have
+            // distance 0), so the label indexes a real part.
+            excl[part[v] as usize] += dg.vwgt[v];
+        }
+    }
+    let mut blob: Vec<u64> = vec![band.len() as u64, excl[0] as u64, excl[1] as u64];
+    for &v in &band {
+        blob.push(dg.glb(v));
+        blob.push(part[v] as u64);
+        blob.push(dg.vwgt[v] as u64);
+        dg.encode_row(v, &mut blob);
+    }
+    let all = comm.allgatherv(blob);
+
+    // First pass: the global band vertex list, in rank order (every
+    // rank reconstructs the identical band graph).
+    let mut gids: Vec<u64> = Vec::new();
+    let mut parts: Vec<u8> = Vec::new();
+    let mut vws: Vec<i64> = Vec::new();
+    let mut excl_g = [0i64; 2];
+    for b in &all {
+        let nb = b[0] as usize;
+        excl_g[0] += b[1] as i64;
+        excl_g[1] += b[2] as i64;
+        let mut i = 3usize;
+        for _ in 0..nb {
+            gids.push(b[i]);
+            parts.push(b[i + 1] as u8);
+            vws.push(b[i + 2] as i64);
+            let deg = b[i + 3] as usize;
+            i += 4 + 2 * deg;
+        }
+    }
+    let nb = gids.len();
+    debug_assert_eq!(nb, global_band);
+    let idx: HashMap<u64, u32> = gids
+        .iter()
+        .enumerate()
+        .map(|(i, &g)| (g, i as u32))
+        .collect();
+
+    // Second pass: edges. In-band pairs are added once (lower index
+    // side); arcs leaving the band attach to the anchor of the band
+    // vertex's part — the outside endpoint has the same part, since
+    // every vertex within `width ≥ 1` of the separator is in the band
+    // and parts only touch through the separator.
+    let anchor0 = nb;
+    let anchor1 = nb + 1;
+    let mut builder = GraphBuilder::new(nb + 2);
+    for (k, &w) in vws.iter().enumerate() {
+        builder.set_vwgt(k, w);
+    }
+    builder.set_vwgt(anchor0, excl_g[0].max(1));
+    builder.set_vwgt(anchor1, excl_g[1].max(1));
+    let mut k = 0usize;
+    for b in &all {
+        let nbr = b[0] as usize;
+        let mut i = 3usize;
+        for _ in 0..nbr {
+            let deg = b[i + 3] as usize;
+            for e in 0..deg {
+                let t = b[i + 4 + 2 * e];
+                let w = b[i + 5 + 2 * e] as i64;
+                match idx.get(&t) {
+                    Some(&j) if (j as usize) > k => builder.add_edge_w(k, j as usize, w),
+                    Some(_) => {} // added from the lower-index side
+                    None => {
+                        let a = if parts[k] == P0 { anchor0 } else { anchor1 };
+                        builder.add_edge_w(k, a, w);
+                    }
+                }
+            }
+            i += 4 + 2 * deg;
+            k += 1;
+        }
+    }
+    let graph = builder.build().expect("band graph is structurally valid");
+    mem.grow(graph.footprint_bytes());
+    let mut band_part = parts.clone();
+    band_part.push(P0);
+    band_part.push(P1);
+    let state = SepState::from_parts(&graph, band_part);
+    let before = state.quality_key();
+    let mut locked = vec![false; nb + 2];
+    locked[anchor0] = true;
+    locked[anchor1] = true;
+    let footprint = graph.footprint_bytes();
+    let mut bg = BandGraph {
+        graph,
+        orig: gids.iter().map(|&g| g as usize).collect(),
+        anchor0,
+        anchor1,
+        state,
+        locked,
+    };
+
+    // Multi-sequential refinement: every rank refines the same band
+    // with a different seed; the best strictly-improving copy wins.
+    let mut r = rng.derive(0xF17 ^ comm.global_rank() as u64);
+    refiner.refine_band(&mut bg, &mut r);
+    debug_assert!(bg.state.validate(&bg.graph).is_ok());
+    let keys = comm.allgatherv(vec![bg.state.quality_key()]);
+    let winner = (0..comm.size())
+        .min_by_key(|&rk| (keys[rk][0], rk))
+        .expect("at least one rank");
+    let wkey = keys[winner][0];
+    mem.shrink(footprint);
+    if wkey >= before {
+        return; // nobody beat the projected separator
+    }
+    let labels: Vec<u8> = if comm.rank() == winner {
+        comm.bcast(winner, Some(bg.state.part[..nb].to_vec()))
+    } else {
+        comm.bcast(winner, None)
+    };
+    let base = dg.base();
+    for (i, &gid) in gids.iter().enumerate() {
+        if gid >= base && gid < base + nloc as u64 {
+            part[(gid - base) as usize] = labels[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::graph::generators;
+    use crate::sep::FmRefiner;
+    use std::sync::Arc;
+
+    #[test]
+    fn separator_valid_and_balanced_on_grid() {
+        let g = Arc::new(generators::grid2d(20, 20));
+        let gref = g.clone();
+        for p in [2usize, 4] {
+            let g = g.clone();
+            let (res, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let strat = Strategy::default();
+                let refiner = FmRefiner::default();
+                let rng = Rng::new(1);
+                let mem = MemTracker::new();
+                let part = dist_separator(&c, &dg, &strat, &refiner, &rng, &mem);
+                assert!(dist_validate_separator(&c, &dg, &part));
+                (dg.base(), part)
+            });
+            let mut full = vec![0u8; gref.n()];
+            for (b, lp) in &res {
+                for (i, &x) in lp.iter().enumerate() {
+                    full[*b as usize + i] = x;
+                }
+            }
+            let state = SepState::from_parts(&gref, full);
+            state.validate(&gref).unwrap();
+            assert!(state.wgts[0] > 0 && state.wgts[1] > 0, "p={p}: empty side");
+            // A 20×20 grid separates with ~20–35 vertices at this scale.
+            assert!(
+                state.sep_weight() <= 60,
+                "p={p}: separator weight {}",
+                state.sep_weight()
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_crossing_edge() {
+        let g = Arc::new(generators::path(6, 1));
+        let (ok, _) = comm::run(2, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            // P0 | P1 split with no separator: the 2–3 edge crosses.
+            let part: Vec<u8> = (0..dg.nloc())
+                .map(|v| if dg.glb(v) < 3 { P0 } else { P1 })
+                .collect();
+            dist_validate_separator(&c, &dg, &part)
+        });
+        assert!(ok.iter().all(|&x| !x));
+    }
+}

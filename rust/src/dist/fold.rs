@@ -1,0 +1,168 @@
+//! Graph folding (paper §3.2).
+//!
+//! When the nested-dissection recursion splits the rank set, each
+//! induced subgraph is *folded* onto one half of the ranks: every
+//! vertex record (weight, payload, adjacency in global ids) is routed
+//! to its new owner under a block distribution over the target half.
+//! Unlike the ParMETIS comparator, whose "folding algorithm requires
+//! the number of sending processes to be even" (§3.2), this fold works
+//! for **any** rank count — the low half takes ⌈p/2⌉ ranks and the
+//! high half ⌊p/2⌋, matching [`crate::comm::Comm::split`]'s re-ranking.
+//!
+//! The same primitive implements folding-with-duplication: both halves
+//! receive a copy of the graph when the caller folds the *same* graph
+//! onto [`FoldTarget::low_half`] and [`FoldTarget::high_half`].
+
+use super::dgraph::DGraph;
+use crate::comm::Comm;
+
+/// A contiguous target range of ranks for one fold.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldTarget {
+    /// First rank of the target range (inclusive).
+    pub start: usize,
+    /// One past the last rank of the target range.
+    pub end: usize,
+}
+
+impl FoldTarget {
+    /// The low half of `p` ranks: `0 .. ⌈p/2⌉`.
+    pub fn low_half(p: usize) -> FoldTarget {
+        FoldTarget {
+            start: 0,
+            end: (p + 1) / 2,
+        }
+    }
+
+    /// The high half of `p` ranks: `⌈p/2⌉ .. p`.
+    pub fn high_half(p: usize) -> FoldTarget {
+        FoldTarget {
+            start: (p + 1) / 2,
+            end: p,
+        }
+    }
+
+    /// Does this target contain `rank` (in the folding communicator)?
+    pub fn contains(&self, rank: usize) -> bool {
+        rank >= self.start && rank < self.end
+    }
+
+    /// Number of ranks in the target.
+    pub fn size(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// Fold the distributed graph (and its per-vertex payload) onto
+/// `target`. Collective over the **current** communicator; member ranks
+/// receive `Some((graph, payload))` re-based on a `vtxdist` of
+/// `target.size()` blocks — ready for use on the sub-communicator
+/// obtained by `comm.split`, whose ranks are the target members in
+/// ascending order — and non-members receive `None`.
+pub fn fold_half(
+    comm: &Comm,
+    dg: &DGraph,
+    payload: &[u64],
+    target: FoldTarget,
+) -> Option<(DGraph, Vec<u64>)> {
+    debug_assert_eq!(payload.len(), dg.nloc());
+    assert!(target.size() > 0, "fold target must contain at least one rank");
+    let t = target.size();
+    let n = dg.nglb;
+    // Block distribution of the (unchanged) global range over t members.
+    let nvtx: Vec<u64> = (0..=t).map(|i| n * i as u64 / t as u64).collect();
+    let member_of = |g: u64| nvtx.partition_point(|&b| b <= g) - 1;
+
+    // Route each local vertex record to its new owner:
+    // [gid, vwgt, payload, deg, (nbr_gid, w)*deg].
+    let mut bufs: Vec<Vec<u64>> = vec![Vec::new(); comm.size()];
+    for v in 0..dg.nloc() {
+        let gid = dg.glb(v);
+        let b = &mut bufs[target.start + member_of(gid)];
+        b.push(gid);
+        b.push(dg.vwgt[v] as u64);
+        b.push(payload[v]);
+        dg.encode_row(v, b);
+    }
+    let got = comm.alltoallv(bufs);
+    if !target.contains(comm.rank()) {
+        return None;
+    }
+
+    let me = comm.rank() - target.start;
+    let nbase = nvtx[me];
+    let nl = (nvtx[me + 1] - nbase) as usize;
+    let mut vwgt = vec![0i64; nl];
+    let mut pl = vec![0u64; nl];
+    let mut rows: Vec<Vec<(u64, i64)>> = vec![Vec::new(); nl];
+    for b in &got {
+        let mut i = 0usize;
+        while i < b.len() {
+            let lv = (b[i] - nbase) as usize;
+            vwgt[lv] = b[i + 1] as i64;
+            pl[lv] = b[i + 2];
+            let deg = b[i + 3] as usize;
+            i += 4;
+            let mut row = Vec::with_capacity(deg);
+            for _ in 0..deg {
+                row.push((b[i], b[i + 1] as i64));
+                i += 2;
+            }
+            rows[lv] = row;
+        }
+    }
+    Some((DGraph::from_rows(nvtx, me, vwgt, rows), pl))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::graph::generators;
+    use std::sync::Arc;
+
+    #[test]
+    fn halves_partition_any_p() {
+        for p in [2usize, 3, 5, 8] {
+            let lo = FoldTarget::low_half(p);
+            let hi = FoldTarget::high_half(p);
+            assert_eq!(lo.size() + hi.size(), p);
+            for r in 0..p {
+                assert!(lo.contains(r) ^ hi.contains(r));
+            }
+            assert!(lo.size() >= hi.size());
+        }
+    }
+
+    #[test]
+    fn fold_preserves_graph_on_fewer_ranks() {
+        // Fold a 5-rank graph onto the 3-rank low half; centralizing on
+        // the subgroup must reproduce the original graph.
+        let g = Arc::new(generators::grid2d(9, 8));
+        let gref = g.clone();
+        let (res, _) = comm::run(5, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let payload: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
+            let f = fold_half(&c, &dg, &payload, FoldTarget::low_half(5));
+            let in_low = FoldTarget::low_half(5).contains(c.rank());
+            let sub = c.split(if in_low { 0 } else { 1 });
+            if in_low {
+                let (fdg, fpl) = f.expect("low ranks receive the fold");
+                // Payload rides along with the redistribution.
+                for (v, &plv) in fpl.iter().enumerate() {
+                    assert_eq!(plv, fdg.glb(v));
+                }
+                Some(fdg.centralize_all(&sub))
+            } else {
+                assert!(f.is_none());
+                None
+            }
+        });
+        for central in res.into_iter().flatten() {
+            central.validate().unwrap();
+            assert_eq!(central.xadj, gref.xadj);
+            assert_eq!(central.adj, gref.adj);
+            assert_eq!(central.ewgt, gref.ewgt);
+        }
+    }
+}

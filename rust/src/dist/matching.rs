@@ -1,0 +1,196 @@
+//! Parallel probabilistic matching (paper §3.2 / §4.2).
+//!
+//! PT-Scotch's distributed heavy-edge matching cannot use the sequential
+//! greedy algorithm (it is inherently serial), so the paper runs a
+//! probabilistic handshake: every unmatched vertex proposes to one of
+//! its heaviest unmatched neighbors, proposals crossing rank boundaries
+//! travel with the halo, and a pair is matched exactly when the two
+//! proposals are **mutual**. Symmetry is therefore structural — both
+//! sides observe the same pair of proposals — and randomized tie-breaks
+//! make mutual pairs form with constant probability per round, so the
+//! process "usually converges in 5 rounds" (§4.2, the default of
+//! [`crate::strategy::DistStrategy::matching_rounds`]).
+//!
+//! After the communication rounds, a purely local cleanup pass matches
+//! leftover unmatched vertices with unmatched *local* neighbors (no
+//! communication, trivially symmetric); anything still single coarsens
+//! as a singleton, as in Scotch.
+
+use super::dgraph::DGraph;
+use crate::comm::Comm;
+use crate::rng::Rng;
+
+/// Compute a symmetric matching of the distributed graph.
+///
+/// Returns `mate`, one entry per local vertex, holding the **global id**
+/// of the partner — or the vertex's own global id when unmatched.
+/// Guarantees, globally: `mate[mate[v]] == v` and matched pairs are
+/// adjacent. Collective; `rng` may differ freely across ranks.
+pub fn parallel_match(comm: &Comm, dg: &DGraph, rounds: usize, rng: &mut Rng) -> Vec<u64> {
+    let nloc = dg.nloc();
+    let base = dg.base();
+    const UNMATCHED: u64 = u64::MAX;
+    let mut mate: Vec<u64> = vec![UNMATCHED; nloc];
+
+    for _round in 0..rounds.max(1) {
+        // Round-start matched flags, mirrored onto the halo.
+        let matched: Vec<u8> = mate.iter().map(|&m| (m != UNMATCHED) as u8).collect();
+        let gmatched = dg.halo_exchange(comm, &matched);
+
+        // Each unmatched vertex proposes to a random heaviest unmatched
+        // neighbor (heavy-edge preference; the random tie-break is the
+        // probabilistic part that guarantees progress on regular graphs).
+        let mut prop: Vec<u64> = vec![UNMATCHED; nloc];
+        let mut cands: Vec<u64> = Vec::new();
+        for v in 0..nloc {
+            if mate[v] != UNMATCHED {
+                continue;
+            }
+            let mut best_w = i64::MIN;
+            cands.clear();
+            for (&a, &w) in dg
+                .neighbors_gst(v)
+                .iter()
+                .zip(dg.edge_weights_gst(v))
+            {
+                let a = a as usize;
+                let (gid, taken) = if a < nloc {
+                    (dg.glb(a), matched[a] != 0)
+                } else {
+                    (dg.ghosts[a - nloc], gmatched[a - nloc] != 0)
+                };
+                if taken {
+                    continue;
+                }
+                if w > best_w {
+                    best_w = w;
+                    cands.clear();
+                }
+                if w == best_w {
+                    cands.push(gid);
+                }
+            }
+            if !cands.is_empty() {
+                prop[v] = cands[rng.below(cands.len())];
+            }
+        }
+
+        // Mirror proposals onto the halo and keep the mutual ones.
+        let gprop = dg.halo_exchange(comm, &prop);
+        for v in 0..nloc {
+            let t = prop[v];
+            if t == UNMATCHED {
+                continue;
+            }
+            let t_prop = if t >= base && t < base + nloc as u64 {
+                prop[(t - base) as usize]
+            } else {
+                let gi = dg.ghosts.binary_search(&t).expect("proposal targets a neighbor");
+                gprop[gi]
+            };
+            if t_prop == dg.glb(v) {
+                mate[v] = t;
+            }
+        }
+    }
+
+    // Local cleanup: leftover unmatched vertices pair with unmatched
+    // local neighbors — no communication needed, symmetric within the
+    // rank by construction.
+    for v in 0..nloc {
+        if mate[v] != UNMATCHED {
+            continue;
+        }
+        for &a in dg.neighbors_gst(v) {
+            let a = a as usize;
+            if a < nloc && mate[a] == UNMATCHED {
+                mate[v] = dg.glb(a);
+                mate[a] = dg.glb(v);
+                break;
+            }
+        }
+    }
+
+    // Unmatched vertices coarsen as singletons: mate = self.
+    for v in 0..nloc {
+        if mate[v] == UNMATCHED {
+            mate[v] = dg.glb(v);
+        }
+    }
+    mate
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::graph::generators;
+    use std::sync::Arc;
+
+    /// Gather per-rank mate vectors into the global mate array.
+    fn run_matching(p: usize, g: Arc<crate::graph::Graph>, rounds: usize) -> Vec<u64> {
+        let n = g.n();
+        let (res, _) = comm::run(p, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let mut rng = Rng::new(42).derive(c.global_rank() as u64);
+            let mate = parallel_match(&c, &dg, rounds, &mut rng);
+            (dg.base(), mate)
+        });
+        let mut mate = vec![0u64; n];
+        for (b, m) in res {
+            for (i, &x) in m.iter().enumerate() {
+                mate[b as usize + i] = x;
+            }
+        }
+        mate
+    }
+
+    #[test]
+    fn matching_is_symmetric_and_adjacent_across_ranks() {
+        for p in [2usize, 4] {
+            let g = Arc::new(generators::grid2d(12, 11));
+            let gref = g.clone();
+            let mate = run_matching(p, g, 5);
+            for v in 0..gref.n() {
+                let m = mate[v] as usize;
+                assert_eq!(mate[m] as usize, v, "p={p}: asymmetric at {v}");
+                if m != v {
+                    assert!(
+                        gref.neighbors(v).contains(&(m as u32)),
+                        "p={p}: non-adjacent pair {v}-{m}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matching_is_maximal_ish() {
+        // On a grid, the probabilistic rounds plus local cleanup must
+        // match well over half of the vertices — enough that coarsening
+        // shrinks each level substantially (§3.2's stop ratio).
+        for p in [2usize, 4] {
+            let g = Arc::new(generators::grid2d(16, 16));
+            let n = g.n();
+            let mate = run_matching(p, g, 5);
+            let matched = (0..n).filter(|&v| mate[v] as usize != v).count();
+            assert!(
+                matched * 2 >= n,
+                "p={p}: only {matched}/{n} vertices matched"
+            );
+        }
+    }
+
+    #[test]
+    fn heavy_edges_preferred() {
+        // A path with one heavy edge: its endpoints must pair together.
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_edge_w(0, 1, 1);
+        b.add_edge_w(1, 2, 100);
+        b.add_edge_w(2, 3, 1);
+        let g = Arc::new(b.build().unwrap());
+        let mate = run_matching(2, g, 8);
+        assert_eq!(mate[1], 2);
+        assert_eq!(mate[2], 1);
+    }
+}

@@ -1,0 +1,41 @@
+//! The distributed layer (S10–S16): PT-Scotch's parallel ordering
+//! algorithms on the in-process rank fleet of [`crate::comm`].
+//!
+//! This module mirrors the paper's MPI code structure one-to-one
+//! (DESIGN.md §4):
+//!
+//! * [`dgraph`] — distributed CSR graphs with contiguous per-rank
+//!   blocks, ghost/halo indexing and the halo-exchange / remote-fetch /
+//!   centralize primitives (§3.1);
+//! * [`matching`] — parallel probabilistic heavy-edge matching via
+//!   mutual proposals (§3.2/§4.2);
+//! * [`coarsen`] — distributed coarsening along a matching, with
+//!   owner-routed edge merging (§3.2);
+//! * [`fold`] — folding onto either half of the rank range, for any
+//!   rank count; the building block of folding-with-duplication (§3.2);
+//! * [`induce`] — distributed induced subgraphs with payload carrying,
+//!   optionally built two-at-a-time by an overlap thread (§3.1);
+//! * [`dsep`] — the distributed separator pipeline: parallel
+//!   coarsening, multi-sequential initial separators on duplicated
+//!   coarsest graphs, and multi-sequential band refinement during
+//!   uncoarsening (§3.2–§3.3);
+//! * [`dnd`] — parallel nested dissection driving it all down to
+//!   sequential minimum-degree leaves (§3.1, re-exported here as
+//!   [`parallel_order`]).
+//!
+//! Every collective function in this module must be called by all ranks
+//! of its communicator in the same order — exactly the contract of the
+//! MPI routines it models. The ParMETIS-like comparator in
+//! [`crate::baseline`] reuses [`dgraph`], [`matching`], [`coarsen`],
+//! [`fold`] and [`induce`], differing only in the separator policy —
+//! which is precisely how the paper frames the comparison.
+
+pub mod coarsen;
+pub mod dgraph;
+pub mod dnd;
+pub mod dsep;
+pub mod fold;
+pub mod induce;
+pub mod matching;
+
+pub use dnd::{parallel_order, ParallelOrderResult};

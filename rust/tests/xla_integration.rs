@@ -3,7 +3,9 @@
 //! pure-Rust reference numerics exactly (same recurrence, f32).
 //!
 //! These tests are skipped (not failed) when `artifacts/` has not been
-//! built — run `make artifacts` first; `make test` does so automatically.
+//! built — run `make test-xla`, which builds them first. They require
+//! the real `xla` crate (not the offline stub in `rust/xla-stub/`);
+//! with the stub, leave `artifacts/` absent so the tests skip.
 
 use ptscotch::graph::generators;
 use ptscotch::rng::Rng;
