@@ -9,10 +9,20 @@
 # the stub cannot execute them. Only run `test-xla` after wiring the
 # real `xla` crate into Cargo.toml (see README.md).
 
-.PHONY: artifacts test test-xla bench clean
+.PHONY: artifacts check test test-xla bench bench-smoke clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
+
+# Everything CI gates on, in one local command: formatting, lints,
+# workspace tests, docs, and the bench smoke run (benches must run,
+# not just compile).
+check:
+	cargo fmt --all -- --check
+	cargo clippy --all-targets -- -D warnings
+	cargo test --release --workspace -q
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	cargo bench --bench perf_profile -- --smoke
 
 test:
 	cargo test --release -q
@@ -23,6 +33,10 @@ test-xla: artifacts
 
 bench:
 	cargo bench
+
+# Quick pass over the profile bench only (seconds; used by `check`/CI).
+bench-smoke:
+	cargo bench --bench perf_profile -- --smoke
 
 clean:
 	rm -rf artifacts bench_out target

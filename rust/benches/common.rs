@@ -27,6 +27,16 @@ pub fn bench_scale() -> usize {
         .unwrap_or(1)
 }
 
+/// True when the bench runs in smoke mode — `--smoke` (the CI bench
+/// smoke step and `make check`), `--test` (what `cargo bench -- --test`
+/// forwards), or `PTSCOTCH_BENCH_SMOKE=1`. Smoke mode shrinks the
+/// workload to seconds: it proves the bench still builds and runs, not
+/// that its numbers mean anything.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke" || a == "--test")
+        || std::env::var_os("PTSCOTCH_BENCH_SMOKE").is_some()
+}
+
 /// Append one CSV row (with header on first write) to `bench_out/<file>`.
 pub fn csv_row(file: &str, header: &str, row: &str) {
     let dir = Path::new("bench_out");

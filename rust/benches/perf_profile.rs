@@ -39,46 +39,84 @@ fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
 }
 
 fn main() {
+    // Smoke mode (CI / `make check`): a tiny graph and single reps —
+    // exercises every phase end-to-end in seconds so the bench can't
+    // silently rot, without pretending to measure anything.
+    let smoke = common::smoke_mode();
     let scale = common::bench_scale();
-    let g = generators::grid3d(24 * scale, 24 * scale, 24 * scale);
-    println!("perf graph: grid3d {0}^3 (|V|={1}, |E|={2})\n", 24 * scale, g.n(), g.m());
+    let side = if smoke { 8 } else { 24 * scale };
+    let reps = |r: usize| if smoke { 1 } else { r };
+    let g = generators::grid3d(side, side, side);
+    println!("perf graph: grid3d {side}^3 (|V|={}, |E|={})\n", g.n(), g.m());
 
     println!("-- L3 phases --");
     let mut rng = Rng::new(1);
-    time("coarsen_hem (1 level)", 5, || coarsen_hem(&g, &mut rng));
+    time("coarsen_hem (1 level)", reps(5), || coarsen_hem(&g, &mut rng));
     // Build the level-1 coarse graph once for downstream phases.
     let c1 = coarsen_hem(&g, &mut Rng::new(1)).coarse;
-    time("greedy_graph_growing (4 tries)", 5, || {
+    time("greedy_graph_growing (4 tries)", reps(5), || {
         greedy_graph_growing(&c1, 4, &mut rng)
     });
     let s0 = greedy_graph_growing(&g, 2, &mut Rng::new(2));
-    time("fm_refine (whole graph)", 3, || {
+    time("fm_refine (whole graph)", reps(3), || {
         let mut s = s0.clone();
         fm_refine(&g, &mut s, &[], &FmParams::default(), &mut rng)
     });
-    time("extract_band (w=3)", 5, || extract_band(&g, &s0, 3));
+    time("extract_band (w=3)", reps(5), || extract_band(&g, &s0, 3));
     let band = extract_band(&g, &s0, 3).unwrap();
     println!("   (band size {} of {})", band.band_n(), g.n());
-    time("fm_refine (band only)", 5, || {
+    time("fm_refine (band only)", reps(5), || {
         let mut b = band.clone();
         fm_refine(&b.graph, &mut b.state, &b.locked, &FmParams::default(), &mut rng)
     });
-    time("multilevel_separator (full)", 3, || {
+    time("multilevel_separator (full)", reps(3), || {
         multilevel_separator(&g, &SepStrategy::default(), &FmRefiner::default(), &mut rng)
     });
-    let leaf = generators::grid3d(5 * scale, 5 * scale, 5 * scale);
-    time("minimum_degree (leaf 125·s³)", 5, || minimum_degree(&leaf));
+    let leaf_side = if smoke { 4 } else { 5 * scale };
+    let leaf = generators::grid3d(leaf_side, leaf_side, leaf_side);
+    time("minimum_degree (leaf s³)", reps(5), || minimum_degree(&leaf));
     let svc = OrderingService::new(&XlaRuntime::default_dir());
     let rep = svc
         .order(&g, Engine::Sequential, &Strategy::default())
         .unwrap();
-    time("symbolic_cholesky (eval)", 3, || {
+    time("symbolic_cholesky (eval)", reps(3), || {
         symbolic_cholesky(&g, &rep.ordering)
     });
     time("nested_dissection (end-to-end)", 1, || {
         svc.order(&g, Engine::Sequential, &Strategy::default())
             .unwrap()
     });
+    // Distributed diffusion on an oversized band — the scalable path of
+    // `dist::dsep::band_refine_dist` (maxband forced tiny), kept in the
+    // profile so its halo-sweep cost stays visible.
+    {
+        use ptscotch::comm;
+        use std::sync::Arc;
+        let (nx, ny) = if smoke { (16usize, 16usize) } else { (64 * scale, 64 * scale) };
+        let g2 = Arc::new(generators::grid2d(nx, ny));
+        let proj = Arc::new(generators::column_separator_part(nx, ny, nx / 2, 2));
+        time("dist diffusion band refine (p=4)", 1, || {
+            let g2 = g2.clone();
+            let proj = proj.clone();
+            let strat = Strategy::parse("maxband=8,sweeps=16").unwrap();
+            let (res, _) = comm::run(4, move |c| {
+                use ptscotch::dist::dgraph::DGraph;
+                use ptscotch::sep::SEP;
+                let dg = DGraph::from_global(&c, &g2);
+                let mut part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| proj[dg.glb(v) as usize])
+                    .collect();
+                let refiner = ptscotch::sep::FmRefiner::default();
+                let rng = Rng::new(1);
+                let mem = ptscotch::comm::MemTracker::new();
+                ptscotch::dist::dsep::band_refine_dist(
+                    &c, &dg, &mut part, &strat, &refiner, &rng, &mem,
+                );
+                part.iter().filter(|&&x| x == SEP).count()
+            });
+            res.iter().sum::<usize>()
+        });
+    }
 
     println!("\n-- L1/L2 (XLA path) --");
     match XlaRuntime::load(&XlaRuntime::default_dir()) {
@@ -94,7 +132,9 @@ fn main() {
                 .max()
                 .unwrap_or(0);
             let bucket = rt.fit_diffusion(band.graph.n(), d_real);
-            match bucket.and_then(|b| pack_ell_clamped(&band.graph, b.n, b.d, &anchors).map(|e| (b, e))) {
+            let fit = bucket
+                .and_then(|b| pack_ell_clamped(&band.graph, b.n, b.d, &anchors).map(|e| (b, e)));
+            match fit {
                 None => println!("band does not fit a bucket (n={})", band.graph.n()),
                 Some((bucket, ell)) => {
                     println!(

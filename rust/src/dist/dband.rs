@@ -1,0 +1,345 @@
+//! Distributed band-graph extraction (paper §3.3, scalable regime).
+//!
+//! The multi-sequential refinement of [`crate::dist::dsep`] centralizes
+//! the band around the projected separator on every rank — fine while
+//! bands are small, but a scalability cliff once they are not. This
+//! module extracts the same width-`w` band as a [`DGraph`] *in its own
+//! right*, so the diffusion kernel of [`crate::dist::ddiffusion`] can
+//! refine it in place without ever centralizing:
+//!
+//! * band membership comes from a distributed multi-source BFS from the
+//!   separator, one halo exchange per level ([`band_distances`] — the
+//!   distributed analog of [`crate::graph::Graph::multi_source_bfs`]);
+//! * survivors are renumbered into a fresh contiguous global range by
+//!   an exclusive scan of per-rank counts, exactly like
+//!   [`crate::dist::induce::induce_dist`];
+//! * the two discarded sides are replaced by **two anchor vertices**
+//!   appended to the last rank's block, carrying the excluded part
+//!   weights and the collapsed boundary arcs — the same anchor
+//!   construction as the sequential [`crate::sep::band::extract_band`],
+//!   distributed.
+
+use super::dgraph::DGraph;
+use crate::comm::Comm;
+use crate::sep::{P0, P1, SEP};
+
+/// A distributed band graph: the band as a [`DGraph`] whose last two
+/// global vertices are the locked anchors, plus the bookkeeping needed
+/// to commit refined labels back to the parent graph.
+#[derive(Clone, Debug)]
+pub struct DistBand {
+    /// The band graph (fresh contiguous global ids; the two anchors are
+    /// the last two global vertices, owned by the last rank).
+    pub dg: DGraph,
+    /// Parent-graph *local* index of each local band vertex, in band
+    /// local order (anchors excluded — they map to no parent vertex).
+    pub orig_local: Vec<usize>,
+    /// Part labels ([`P0`]/[`P1`]/[`SEP`]) of the local band vertices,
+    /// including the anchors on the last rank (anchor 0 is [`P0`],
+    /// anchor 1 is [`P1`]).
+    pub part: Vec<u8>,
+    /// Number of non-anchor band vertices globally.
+    pub band_nglb: u64,
+}
+
+impl DistBand {
+    /// Global id of the part-0 anchor.
+    #[inline]
+    pub fn anchor0_gid(&self) -> u64 {
+        self.band_nglb
+    }
+
+    /// Global id of the part-1 anchor.
+    #[inline]
+    pub fn anchor1_gid(&self) -> u64 {
+        self.band_nglb + 1
+    }
+
+    /// Whether a band-graph global id is one of the two locked anchors.
+    #[inline]
+    pub fn is_anchor_gid(&self, gid: u64) -> bool {
+        gid >= self.band_nglb
+    }
+
+    /// Number of local band vertices owned by this rank, anchors
+    /// excluded.
+    #[inline]
+    pub fn nloc_band(&self) -> usize {
+        self.orig_local.len()
+    }
+}
+
+/// Distributed multi-source BFS from the separator of `part`, capped at
+/// `width` levels: one halo exchange per level. Returns one distance
+/// per local vertex (`u32::MAX` outside the band). Collective.
+pub fn band_distances(comm: &Comm, dg: &DGraph, part: &[u8], width: u32) -> Vec<u32> {
+    let nloc = dg.nloc();
+    debug_assert_eq!(part.len(), nloc);
+    let mut dist: Vec<u32> = part
+        .iter()
+        .map(|&x| if x == SEP { 0 } else { u32::MAX })
+        .collect();
+    for _ in 0..width {
+        let ghost_dist = dg.halo_exchange(comm, &dist);
+        let prev = dist.clone();
+        for v in 0..nloc {
+            if prev[v] != u32::MAX {
+                continue;
+            }
+            let mut best = u32::MAX;
+            for &a in dg.neighbors_gst(v) {
+                let a = a as usize;
+                let da = if a < nloc {
+                    prev[a]
+                } else {
+                    ghost_dist[a - nloc]
+                };
+                if da != u32::MAX && da + 1 < best {
+                    best = da + 1;
+                }
+            }
+            dist[v] = best;
+        }
+    }
+    dist
+}
+
+/// Extract the distributed band graph of vertices whose `dist` (from
+/// [`band_distances`]) is finite. Arcs leaving the band are collapsed
+/// onto the anchor of the band endpoint's part — the outside endpoint
+/// has the same part, since every vertex within `width ≥ 1` of the
+/// separator is in the band and parts only touch through the separator.
+/// Collective; every rank must pass the same global `part`/`dist`
+/// semantics (each rank its own slice).
+pub fn extract_dband(comm: &Comm, dg: &DGraph, part: &[u8], dist: &[u32]) -> DistBand {
+    let p = comm.size();
+    let nloc = dg.nloc();
+    debug_assert_eq!(part.len(), nloc);
+    debug_assert_eq!(dist.len(), nloc);
+
+    let kept: Vec<usize> = (0..nloc).filter(|&v| dist[v] != u32::MAX).collect();
+
+    // Fresh contiguous global numbering of the band vertices; the two
+    // anchors extend the last rank's block.
+    let counts = comm.allgatherv(vec![kept.len() as u64]);
+    let mut vtx = vec![0u64; p + 1];
+    for r in 0..p {
+        vtx[r + 1] = vtx[r] + counts[r][0];
+    }
+    let band_nglb = vtx[p];
+    vtx[p] += 2;
+    let anchor_gid = [band_nglb, band_nglb + 1];
+
+    let nbase = vtx[comm.rank()];
+    let mut newid: Vec<u64> = vec![u64::MAX; nloc];
+    for (i, &v) in kept.iter().enumerate() {
+        newid[v] = nbase + i as u64;
+    }
+    // New ids of the parent graph's ghosts (MAX when outside the band).
+    let ghost_newid = dg.halo_exchange(comm, &newid);
+
+    // Anchor weights: the total excluded weight per part (≥ 1 to keep
+    // the positive-weight invariant when a whole part fits in the band).
+    let mut excl = [0i64; 2];
+    for v in 0..nloc {
+        if dist[v] == u32::MAX {
+            // Outside the band ⇒ not SEP (separator vertices have
+            // distance 0), so the label indexes a real part.
+            excl[part[v] as usize] += dg.vwgt[v];
+        }
+    }
+    let excl_g = comm.allreduce(excl, |a, b| [a[0] + b[0], a[1] + b[1]]);
+
+    // Band rows; boundary arcs collapse per vertex onto one anchor arc.
+    let mut vwgt: Vec<i64> = kept.iter().map(|&v| dg.vwgt[v]).collect();
+    let mut band_part: Vec<u8> = kept.iter().map(|&v| part[v]).collect();
+    let mut rows: Vec<Vec<(u64, i64)>> = Vec::with_capacity(kept.len());
+    // Reciprocal arcs the anchors owe this rank's boundary vertices,
+    // encoded as `[band_gid, anchor_index, weight]` triples.
+    let mut anchor_arcs: Vec<u64> = Vec::new();
+    for (i, &v) in kept.iter().enumerate() {
+        let mut row: Vec<(u64, i64)> = Vec::with_capacity(dg.neighbors_gst(v).len());
+        let mut to_anchor = 0i64;
+        for (&a, &w) in dg.neighbors_gst(v).iter().zip(dg.edge_weights_gst(v)) {
+            let a = a as usize;
+            let nid = if a < nloc {
+                newid[a]
+            } else {
+                ghost_newid[a - nloc]
+            };
+            if nid != u64::MAX {
+                row.push((nid, w));
+            } else {
+                to_anchor += w;
+            }
+        }
+        if to_anchor > 0 {
+            // A boundary vertex is never SEP (distance 0 vertices keep
+            // all neighbors within width ≥ 1), so its part picks the
+            // anchor directly.
+            let side = band_part[i] as usize;
+            row.push((anchor_gid[side], to_anchor));
+            anchor_arcs.push(nbase + i as u64);
+            anchor_arcs.push(side as u64);
+            anchor_arcs.push(to_anchor as u64);
+        }
+        rows.push(row);
+    }
+
+    // The last rank owns the anchors: it alone needs the boundary
+    // contributions for the two reciprocal anchor rows, so gather them
+    // point-to-point (the `centralize_root` pattern) instead of
+    // replicating O(boundary) triples on every rank.
+    const TAG: u64 = 0xDBA2;
+    if comm.rank() != p - 1 {
+        comm.send(p - 1, TAG, anchor_arcs);
+    } else {
+        let mut row0: Vec<(u64, i64)> = Vec::new();
+        let mut row1: Vec<(u64, i64)> = Vec::new();
+        let mut mine = Some(anchor_arcs);
+        for r in 0..p {
+            let b: Vec<u64> = if r == p - 1 {
+                mine.take().expect("own contributions")
+            } else {
+                comm.recv(r, TAG)
+            };
+            for t in b.chunks_exact(3) {
+                let arc = (t[0], t[2] as i64);
+                if t[1] == 0 {
+                    row0.push(arc);
+                } else {
+                    row1.push(arc);
+                }
+            }
+        }
+        vwgt.push(excl_g[0].max(1));
+        vwgt.push(excl_g[1].max(1));
+        band_part.push(P0);
+        band_part.push(P1);
+        rows.push(row0);
+        rows.push(row1);
+    }
+
+    DistBand {
+        dg: DGraph::from_rows(vtx, comm.rank(), vwgt, rows),
+        orig_local: kept,
+        part: band_part,
+        band_nglb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::graph::generators;
+    use crate::sep::band::extract_band;
+    use crate::sep::SepState;
+    use std::sync::Arc;
+
+    /// The shared 2-thick column-separator fixture, centered.
+    fn thick_column_part(nx: usize, ny: usize) -> Vec<u8> {
+        generators::column_separator_part(nx, ny, nx / 2, 2)
+    }
+
+    #[test]
+    fn distances_match_sequential_bfs() {
+        let (nx, ny) = (17, 11);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let gref = g.clone();
+        let full = thick_column_part(nx, ny);
+        let fref = full.clone();
+        for p in [2usize, 3, 4] {
+            let g = g.clone();
+            let full = full.clone();
+            let (res, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| full[dg.glb(v) as usize])
+                    .collect();
+                let d = band_distances(&c, &dg, &part, 3);
+                (dg.base(), d)
+            });
+            let seps: Vec<usize> = (0..gref.n()).filter(|&v| fref[v] == SEP).collect();
+            let want = gref.multi_source_bfs(&seps, 3);
+            for (base, d) in &res {
+                for (i, &di) in d.iter().enumerate() {
+                    assert_eq!(di, want[*base as usize + i], "p={p} v={}", *base as usize + i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dband_matches_sequential_band_graph() {
+        // The centralized distributed band must be isomorphic (same
+        // sizes, same total weight, same anchor weights) to the
+        // sequential extraction from the same projection.
+        let (nx, ny) = (16, 9);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let gref = g.clone();
+        let full = thick_column_part(nx, ny);
+        let fref = full.clone();
+        let width = 3u32;
+        for p in [2usize, 4] {
+            let g = g.clone();
+            let full = full.clone();
+            let (res, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| full[dg.glb(v) as usize])
+                    .collect();
+                let dist = band_distances(&c, &dg, &part, width);
+                let band = extract_dband(&c, &dg, &part, &dist);
+                let central = band.dg.centralize_all(&c);
+                (band.band_nglb, band.nloc_band(), central)
+            });
+            let state = SepState::from_parts(&gref, fref.clone());
+            let seq = extract_band(&gref, &state, width).unwrap();
+            let nb: usize = res.iter().map(|(_, nl, _)| nl).sum();
+            assert_eq!(nb as u64, res[0].0, "p={p}");
+            assert_eq!(nb, seq.band_n(), "p={p}");
+            for (_, _, central) in &res {
+                central.validate().unwrap_or_else(|e| panic!("p={p}: {e}"));
+                assert_eq!(central.n(), seq.graph.n(), "p={p}");
+                assert_eq!(central.m(), seq.graph.m(), "p={p}");
+                assert_eq!(central.total_vwgt(), seq.graph.total_vwgt(), "p={p}");
+                // Anchors are the last two vertices in both layouts.
+                let na = central.n();
+                assert_eq!(central.vwgt[na - 2], seq.graph.vwgt[seq.anchor0], "p={p}");
+                assert_eq!(central.vwgt[na - 1], seq.graph.vwgt[seq.anchor1], "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn band_labels_and_origins_are_consistent() {
+        let (nx, ny) = (12, 12);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let full = thick_column_part(nx, ny);
+        let (ok, _) = comm::run(3, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let part: Vec<u8> = (0..dg.nloc())
+                .map(|v| full[dg.glb(v) as usize])
+                .collect();
+            let dist = band_distances(&c, &dg, &part, 2);
+            let band = extract_dband(&c, &dg, &part, &dist);
+            // Every local band vertex carries its parent label, and the
+            // anchors (last rank only) carry P0/P1.
+            let mut ok = band.part.len() == band.dg.nloc();
+            for (i, &pv) in band.orig_local.iter().enumerate() {
+                ok &= band.part[i] == part[pv];
+                ok &= dist[pv] != u32::MAX;
+            }
+            if c.rank() == c.size() - 1 {
+                let nl = band.dg.nloc();
+                ok &= nl == band.nloc_band() + 2;
+                ok &= band.part[nl - 2] == P0 && band.part[nl - 1] == P1;
+            } else {
+                ok &= band.dg.nloc() == band.nloc_band();
+            }
+            ok
+        });
+        assert!(ok.iter().all(|&x| x));
+    }
+}

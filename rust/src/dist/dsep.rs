@@ -14,15 +14,20 @@
 //!    (§3.2: independent multilevel runs "increase the final quality"
 //!    — disabled by `folddup=0`, which degrades to a single rank-0
 //!    working copy like the comparator);
-//! 3. **uncoarsening with multi-sequential band refinement** (§3.3): at
-//!    every level the projected separator is surrounded by a distributed
-//!    band of width `band_width`, the (small) band graph is centralized
-//!    on every rank with two anchor vertices standing for the excluded
-//!    parts, each rank refines its copy with a different seed, and the
-//!    best refined band — if it beats the projection — is committed
-//!    back to the distributed part array.
+//! 3. **uncoarsening with band refinement** (§3.3): at every level the
+//!    projected separator is surrounded by a distributed band of width
+//!    `band_width` ([`crate::dist::dband`]). Small bands (global size at
+//!    most `max_centralized_band`) are centralized on every rank with
+//!    two anchor vertices standing for the excluded parts, each rank
+//!    refines its copy with a different seed, and the best refined band
+//!    — if it beats the projection — is committed back to the
+//!    distributed part array. Larger bands are refined **in place** by
+//!    the distributed diffusion kernel ([`crate::dist::ddiffusion`]) —
+//!    no band is ever left as an unrefined projection.
 
 use super::coarsen::{coarsen_dist, DistCoarsening};
+use super::dband::{band_distances, extract_dband};
+use super::ddiffusion::{diffuse_band_dist, dist_quality_key, DIST_DIFFUSION_DAMPING};
 use super::dgraph::DGraph;
 use super::matching::parallel_match;
 use crate::comm::{Comm, MemTracker};
@@ -179,15 +184,18 @@ fn best_pick(comm: &Comm, key: (i64, i64), part: Vec<u8>) -> Vec<u8> {
     }
 }
 
-/// One multi-sequential band refinement step (§3.3): extract the
+/// One band refinement step during uncoarsening (§3.3): extract the
 /// distributed band of vertices within `band_width` of the separator,
-/// centralize it on every rank with anchor vertices standing for the
-/// excluded parts, refine every copy with a decorrelated seed, and
-/// commit the best strictly-improving result. Collective.
-fn band_refine_dist(
+/// then refine it — **multi-sequentially** on centralized copies when
+/// the band is small enough (at most `max_centralized_band` vertices
+/// globally), or **in place** with the distributed diffusion kernel
+/// when it is not. Either way the result is committed only when it
+/// strictly beats the projection, so the separator never degrades.
+/// Collective.
+pub fn band_refine_dist(
     comm: &Comm,
     dg: &DGraph,
-    part: &mut Vec<u8>,
+    part: &mut [u8],
     strat: &Strategy,
     refiner: &dyn BandRefiner,
     rng: &Rng,
@@ -196,55 +204,84 @@ fn band_refine_dist(
     let nloc = dg.nloc();
     let width = strat.sep.band_width;
 
-    // Cheap pre-gate: the global separator count is a lower bound on
-    // the band size, so the empty and hopelessly-oversized cases skip
-    // the BFS collectives entirely.
+    // Pre-gate: an empty separator (disconnected oddity) has no band.
     let sep_total =
         comm.allreduce_sum(part.iter().filter(|&&x| x == SEP).count() as i64) as usize;
-    if sep_total == 0 || sep_total > strat.dist.max_centralized_band {
+    if sep_total == 0 {
         return;
     }
 
     // Distributed multi-source BFS from the separator, capped at
-    // `width`: one halo exchange per level (the distributed analog of
-    // `Graph::multi_source_bfs`).
-    let mut dist: Vec<u32> = part
-        .iter()
-        .map(|&x| if x == SEP { 0 } else { u32::MAX })
-        .collect();
-    for _ in 0..width {
-        let ghost_dist = dg.halo_exchange(comm, &dist);
-        let prev = dist.clone();
-        for v in 0..nloc {
-            if prev[v] != u32::MAX {
-                continue;
-            }
-            let mut best = u32::MAX;
-            for &a in dg.neighbors_gst(v) {
-                let a = a as usize;
-                let da = if a < nloc {
-                    prev[a]
-                } else {
-                    ghost_dist[a - nloc]
-                };
-                if da != u32::MAX && da + 1 < best {
-                    best = da + 1;
-                }
-            }
-            dist[v] = best;
-        }
-    }
+    // `width`: one halo exchange per level.
+    let dist = band_distances(comm, dg, part, width);
 
-    // Exact gate on the global band size *before* shipping any
-    // adjacency (the pre-gate above only bounded it from below).
+    // Gate on the global band size *before* shipping any adjacency:
+    // small bands take the centralized multi-sequential path, large
+    // bands the scalable distributed diffusion path.
     let band: Vec<usize> = (0..nloc).filter(|&v| dist[v] != u32::MAX).collect();
     let global_band = comm.allreduce_sum(band.len() as i64) as usize;
     if global_band > strat.dist.max_centralized_band {
-        // Scalable fallback: keep the projected separator as-is rather
-        // than centralizing an oversized band (strategy knob
-        // `max_centralized_band`; the projection is already valid).
+        band_refine_diffusion_dist(comm, dg, part, strat, mem, &dist);
         return;
     }
+    band_refine_centralized(comm, dg, part, refiner, rng, mem, &band, &dist);
+}
+
+/// Scalable band refinement (§3.3 taken to large bands): extract the
+/// band as a distributed graph in its own right, run the diffusion
+/// kernel on it with halo exchanges of the scalar field, and commit the
+/// recovered separator when it strictly beats the projection. This is
+/// the path that replaces the old "keep the projection" fallback for
+/// bands exceeding `max_centralized_band`. Collective.
+fn band_refine_diffusion_dist(
+    comm: &Comm,
+    dg: &DGraph,
+    part: &mut [u8],
+    strat: &Strategy,
+    mem: &MemTracker,
+    dist: &[u32],
+) {
+    let band = extract_dband(comm, dg, part, dist);
+    let footprint = band.dg.footprint_bytes();
+    mem.grow(footprint);
+    let before = dist_quality_key(comm, &band.dg, &band.part);
+    let refined = diffuse_band_dist(
+        comm,
+        &band,
+        strat.dist.diffusion_sweeps,
+        DIST_DIFFUSION_DAMPING,
+    );
+    // Distributed repair/validation pass: the cover is valid by
+    // construction, but a refinement that cannot be proven valid (or
+    // does not strictly beat the projection) is discarded — the
+    // projection itself is always a valid state to keep.
+    let valid = dist_validate_separator(comm, &band.dg, &refined);
+    let after = dist_quality_key(comm, &band.dg, &refined);
+    mem.shrink(footprint);
+    if !valid || after >= before {
+        return;
+    }
+    for (i, &pv) in band.orig_local.iter().enumerate() {
+        part[pv] = refined[i];
+    }
+}
+
+/// Multi-sequential band refinement on small bands (§3.3): centralize
+/// the band on every rank with anchor vertices standing for the
+/// excluded parts, refine every copy with a decorrelated seed, and
+/// commit the best strictly-improving result. Collective.
+#[allow(clippy::too_many_arguments)]
+fn band_refine_centralized(
+    comm: &Comm,
+    dg: &DGraph,
+    part: &mut [u8],
+    refiner: &dyn BandRefiner,
+    rng: &Rng,
+    mem: &MemTracker,
+    band: &[usize],
+    dist: &[u32],
+) {
+    let nloc = dg.nloc();
 
     // Serialize this rank's band slice:
     // [nband, excl0, excl1, then per band vertex:
@@ -258,7 +295,7 @@ fn band_refine_dist(
         }
     }
     let mut blob: Vec<u64> = vec![band.len() as u64, excl[0] as u64, excl[1] as u64];
-    for &v in &band {
+    for &v in band {
         blob.push(dg.glb(v));
         blob.push(part[v] as u64);
         blob.push(dg.vwgt[v] as u64);
@@ -286,7 +323,6 @@ fn band_refine_dist(
         }
     }
     let nb = gids.len();
-    debug_assert_eq!(nb, global_band);
     let idx: HashMap<u64, u32> = gids
         .iter()
         .enumerate()
@@ -381,6 +417,7 @@ mod tests {
     use crate::comm;
     use crate::graph::generators;
     use crate::sep::FmRefiner;
+    use crate::strategy::DistStrategy;
     use std::sync::Arc;
 
     #[test]
@@ -413,6 +450,54 @@ mod tests {
                 state.sep_weight() <= 60,
                 "p={p}: separator weight {}",
                 state.sep_weight()
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_band_is_diffusion_refined_not_kept() {
+        // The acceptance case for the scalable path: on a 64×64 grid
+        // with `max_centralized_band` forced tiny, the old code kept the
+        // projection untouched; the diffusion path must now produce a
+        // valid separator no larger than the projected one — and
+        // actually shrink this deliberately 2-thick projection.
+        let (nx, ny) = (64usize, 64usize);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let proj = generators::column_separator_part(nx, ny, nx / 2, 2);
+        for p in [4usize, 5] {
+            let g = g.clone();
+            let proj = proj.clone();
+            let (res, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let mut part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| proj[dg.glb(v) as usize])
+                    .collect();
+                let strat = Strategy {
+                    dist: DistStrategy {
+                        max_centralized_band: 8, // band is ~8·64 ≫ 8
+                        ..DistStrategy::default()
+                    },
+                    ..Strategy::default()
+                };
+                let refiner = FmRefiner::default();
+                let rng = Rng::new(3);
+                let mem = MemTracker::new();
+                band_refine_dist(&c, &dg, &mut part, &strat, &refiner, &rng, &mem);
+                let valid = dist_validate_separator(&c, &dg, &part);
+                let sep_now =
+                    c.allreduce_sum(part.iter().filter(|&&x| x == SEP).count() as i64);
+                (valid, sep_now)
+            });
+            for &(valid, sep_now) in &res {
+                assert!(valid, "p={p}: refined separator invalid");
+                assert!(sep_now <= 2 * ny as i64, "p={p}: separator grew to {sep_now}");
+                assert!(sep_now > 0, "p={p}: separator vanished");
+            }
+            // The 2-thick projection (128 vertices) must actually shrink.
+            assert!(
+                res[0].1 < 2 * ny as i64,
+                "p={p}: diffusion did not improve the projection ({})",
+                res[0].1
             );
         }
     }

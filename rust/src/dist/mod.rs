@@ -15,10 +15,20 @@
 //!   rank count; the building block of folding-with-duplication (§3.2);
 //! * [`induce`] — distributed induced subgraphs with payload carrying,
 //!   optionally built two-at-a-time by an overlap thread (§3.1);
+//! * [`dband`] — distributed band-graph extraction: the width-`w` band
+//!   around a projected separator as a [`dgraph::DGraph`] in its own
+//!   right, with two anchor vertices standing for the excluded parts
+//!   (§3.3);
+//! * [`ddiffusion`] — the diffusion kernel on distributed bands: local
+//!   Jacobi sweeps interleaved with halo exchanges of the scalar field,
+//!   then a sign-change scan and a distributed separator-recovery cover
+//!   (§3.3/§5) — the scalable refinement used when a band is too large
+//!   to centralize;
 //! * [`dsep`] — the distributed separator pipeline: parallel
 //!   coarsening, multi-sequential initial separators on duplicated
-//!   coarsest graphs, and multi-sequential band refinement during
-//!   uncoarsening (§3.2–§3.3);
+//!   coarsest graphs, and band refinement during uncoarsening —
+//!   multi-sequential on small centralized bands, distributed diffusion
+//!   on large ones (§3.2–§3.3);
 //! * [`dnd`] — parallel nested dissection driving it all down to
 //!   sequential minimum-degree leaves (§3.1, re-exported here as
 //!   [`parallel_order`]).
@@ -31,6 +41,8 @@
 //! which is precisely how the paper frames the comparison.
 
 pub mod coarsen;
+pub mod dband;
+pub mod ddiffusion;
 pub mod dgraph;
 pub mod dnd;
 pub mod dsep;

@@ -60,6 +60,29 @@ pub fn grid2d(nx: usize, ny: usize) -> Graph {
     b.build().expect("grid2d is valid")
 }
 
+/// Part-label fixture for separator tests and benches: a vertical
+/// column separator on a [`grid2d`] — the `thickness` columns starting
+/// at `mid` are the separator (label 2, `sep::SEP`), columns left of it
+/// part 0 and columns right of it part 1 (`sep::P0`/`sep::P1`). A valid
+/// separator by construction, and deliberately suboptimal for
+/// `thickness > 1` — the canonical "refinable projection" input of the
+/// band-refinement tests.
+pub fn column_separator_part(nx: usize, ny: usize, mid: usize, thickness: usize) -> Vec<u8> {
+    assert!(mid + thickness < nx, "separator must leave part 1 nonempty");
+    (0..nx * ny)
+        .map(|v| {
+            let x = v % nx;
+            if x < mid {
+                0
+            } else if x < mid + thickness {
+                2
+            } else {
+                1
+            }
+        })
+        .collect()
+}
+
 /// 7-point 3D grid `nx × ny × nz` — the mesh family behind the paper's
 /// conesphere / coupole / brgm analogs (separators O(n^{2/3})).
 pub fn grid3d(nx: usize, ny: usize, nz: usize) -> Graph {

@@ -166,7 +166,8 @@ mod tests {
         let nb = band.graph.n();
         let e = pack_ell(&band.graph, 64, 16).unwrap();
         let x0 = crate::sep::diffusion::initial_field(&band.state);
-        let want = diffusion_iterations(&band.graph, x0.clone(), band.anchor0, band.anchor1, 4, 0.95);
+        let want =
+            diffusion_iterations(&band.graph, x0.clone(), band.anchor0, band.anchor1, 4, 0.95);
         // ELL loop with anchor clamping between steps.
         let mut x = vec![0f32; 64];
         x[..nb].copy_from_slice(&x0);

@@ -19,18 +19,75 @@ use super::{BandRefiner, SepState, P0, P1, SEP};
 use crate::graph::Graph;
 use crate::rng::Rng;
 
-/// Initial diffusion field for a band state: −1 on part 0, +1 on part 1,
-/// 0 on the separator.
-pub fn initial_field(state: &SepState) -> Vec<f32> {
-    state
-        .part
-        .iter()
+/// Initial diffusion field from raw part labels: −1 on part 0, +1 on
+/// part 1, 0 on the separator. Shared by the sequential path (over a
+/// [`SepState`]) and the distributed path (over one rank's label slice,
+/// `dist::ddiffusion`).
+pub fn field_from_labels(part: &[u8]) -> Vec<f32> {
+    part.iter()
         .map(|&p| match p {
             P0 => -1.0,
             P1 => 1.0,
             _ => 0.0,
         })
         .collect()
+}
+
+/// Initial diffusion field for a band state: −1 on part 0, +1 on part 1,
+/// 0 on the separator.
+pub fn initial_field(state: &SepState) -> Vec<f32> {
+    field_from_labels(&state.part)
+}
+
+/// One Jacobi update: the damped weighted average `damping · num / den`,
+/// decaying zero-degree vertices (`den == 0`) to 0. This is the single
+/// per-vertex rule of the diffusion kernel — the sequential sweep
+/// ([`diffusion_iterations`]), the distributed sweep
+/// (`dist::ddiffusion`) and the XLA artifact all apply exactly this
+/// f32 arithmetic.
+#[inline]
+pub fn damped_average(num: f32, den: f32, damping: f32) -> f32 {
+    if den > 0.0 {
+        damping * num / den
+    } else {
+        0.0
+    }
+}
+
+/// Sign rule of the diffusion bipartition: negative field values join
+/// part 0, the rest part 1 (the separator is re-grown by edge covering).
+#[inline]
+pub fn sign_label(x: f32) -> u8 {
+    if x < 0.0 {
+        P0
+    } else {
+        P1
+    }
+}
+
+/// Crossing-edge cover rule, shared by the sequential and distributed
+/// recovery passes: given a crossing edge, returns `true` when the
+/// *first* endpoint should join the separator. The weaker endpoint
+/// (smaller `|x|`) is chosen, ties broken by the smaller id; locked
+/// endpoints (anchors) never join. The rule is a pure antisymmetric
+/// function of per-endpoint data, so two ranks evaluating it from
+/// opposite ends of a halo edge always agree.
+#[inline]
+pub fn cover_prefers_first(
+    abs_a: f32,
+    abs_b: f32,
+    locked_a: bool,
+    locked_b: bool,
+    id_a: u64,
+    id_b: u64,
+) -> bool {
+    if locked_a {
+        false
+    } else if locked_b {
+        true
+    } else {
+        abs_a < abs_b || (abs_a == abs_b && id_a < id_b)
+    }
 }
 
 /// `k` damped weighted-averaging iterations with the anchor values
@@ -62,7 +119,7 @@ pub fn diffusion_iterations(
                 num += w * x[u as usize];
                 den += w;
             }
-            next[v] = if den > 0.0 { damping * num / den } else { 0.0 };
+            next[v] = damped_average(num, den, damping);
         }
         std::mem::swap(&mut x, &mut next);
     }
@@ -72,41 +129,58 @@ pub fn diffusion_iterations(
 }
 
 /// Convert a diffusion field into a valid separator state on the band:
-/// parts by sign, then a one-pass vertex cover of crossing edges (the
-/// endpoint with the smaller |x| joins the separator; locked vertices —
-/// the anchors — never do).
+/// parts by sign ([`sign_label`]), then a vertex cover of crossing edges
+/// via the antisymmetric [`cover_prefers_first`] rule (the endpoint with
+/// the smaller |x| joins the separator; locked vertices — the anchors —
+/// never do). Decisions are pure functions of the sign labeling, so the
+/// distributed recovery pass (`dist::ddiffusion`) produces the same
+/// cover when each rank evaluates only its own endpoints.
 pub fn field_to_separator(band: &BandGraph, x: &[f32]) -> SepState {
     let g = &band.graph;
     let n = g.n();
-    let mut part: Vec<u8> = (0..n)
-        .map(|v| if x[v] < 0.0 { P0 } else { P1 })
-        .collect();
-    part[band.anchor0] = P0;
-    part[band.anchor1] = P1;
+    let mut sign: Vec<u8> = x.iter().map(|&xv| sign_label(xv)).collect();
+    sign[band.anchor0] = P0;
+    sign[band.anchor1] = P1;
+    let mut part = sign.clone();
     for v in 0..n {
-        if part[v] == SEP {
+        if band.locked[v] {
             continue;
         }
         for &u in g.neighbors(v) {
             let u = u as usize;
-            if part[u] == SEP || part[u] == part[v] {
+            if sign[u] == sign[v] {
                 continue;
             }
-            // Crossing edge: cover it with the weaker endpoint.
-            let pick_v = if band.locked[v] {
-                false
-            } else if band.locked[u] {
-                true
-            } else {
-                let (av, au) = (x[v].abs(), x[u].abs());
-                av < au || (av == au && v < u)
-            };
-            if pick_v {
+            // Crossing edge in the sign labeling: cover it from this
+            // endpoint iff the shared rule prefers it.
+            if cover_prefers_first(
+                x[v].abs(),
+                x[u].abs(),
+                band.locked[v],
+                band.locked[u],
+                v as u64,
+                u as u64,
+            ) {
                 part[v] = SEP;
                 break;
-            } else {
-                part[u] = SEP;
             }
+        }
+    }
+    // Trim pass (sequential only): the pure rule over-covers chains of
+    // crossing edges — a covered vertex whose crossing edges are all
+    // guarded by a SEP neighbor can return to its side. Greedy in vertex
+    // order, so each revert sees the current labels and every crossing
+    // edge keeps at least one SEP endpoint.
+    for v in 0..n {
+        if part[v] != SEP {
+            continue;
+        }
+        let redundant = g.neighbors(v).iter().all(|&u| {
+            let u = u as usize;
+            sign[u] == sign[v] || part[u] == SEP
+        });
+        if redundant {
+            part[v] = sign[v];
         }
     }
     SepState::from_parts(g, part)

@@ -149,18 +149,10 @@ pub trait BandRefiner: Sync {
 }
 
 /// The standard sequential vertex-FM band refiner.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct FmRefiner {
     /// FM tuning parameters.
     pub params: FmParams,
-}
-
-impl Default for FmRefiner {
-    fn default() -> Self {
-        FmRefiner {
-            params: FmParams::default(),
-        }
-    }
 }
 
 impl BandRefiner for FmRefiner {

@@ -81,10 +81,15 @@ pub struct DistStrategy {
     /// Number of parallel matching rounds before giving up on the few
     /// remaining unmatched vertices (paper: "usually converges in 5").
     pub matching_rounds: usize,
-    /// Maximum band-graph size that may be centralized on one process for
-    /// multi-sequential refinement; larger bands are refined with the
-    /// scalable distributed fallback.
+    /// Maximum band-graph size (global vertex count) that may be
+    /// centralized on every process for multi-sequential refinement;
+    /// larger bands are refined in place by the scalable distributed
+    /// diffusion kernel (`dist::ddiffusion`).
     pub max_centralized_band: usize,
+    /// Number of damped Jacobi sweeps of the distributed diffusion
+    /// kernel on oversized bands (each sweep costs one halo exchange of
+    /// the scalar field; paper-scale bands converge within a few dozen).
+    pub diffusion_sweeps: usize,
 }
 
 impl Default for DistStrategy {
@@ -95,6 +100,7 @@ impl Default for DistStrategy {
             overlap_folds: true,
             matching_rounds: 5,
             max_centralized_band: 4_000_000,
+            diffusion_sweeps: 32,
         }
     }
 }
@@ -160,6 +166,8 @@ impl Strategy {
                 "foldthresh" => s.dist.folddup_threshold = parse_usize(v)?,
                 "overlap" => s.dist.overlap_folds = v != "0",
                 "rounds" => s.dist.matching_rounds = parse_usize(v)?,
+                "maxband" => s.dist.max_centralized_band = parse_usize(v)?,
+                "sweeps" => s.dist.diffusion_sweeps = parse_usize(v)?,
                 "refiner" => {
                     s.refiner = match v {
                         "fm" => RefinerKind::Fm,
@@ -192,6 +200,11 @@ impl Strategy {
         }
         if self.nd.leaf_threshold < 1 {
             return Err(Error::InvalidStrategy("leaf threshold must be ≥ 1".into()));
+        }
+        if self.dist.diffusion_sweeps == 0 {
+            return Err(Error::InvalidStrategy(
+                "diffusion sweeps must be ≥ 1".into(),
+            ));
         }
         Ok(())
     }
@@ -235,6 +248,14 @@ mod tests {
     #[test]
     fn validate_rejects_zero_band() {
         assert!(Strategy::parse("band=0").is_err());
+    }
+
+    #[test]
+    fn parse_distributed_band_knobs() {
+        let s = Strategy::parse("maxband=500,sweeps=12").unwrap();
+        assert_eq!(s.dist.max_centralized_band, 500);
+        assert_eq!(s.dist.diffusion_sweeps, 12);
+        assert!(Strategy::parse("sweeps=0").is_err());
     }
 
     #[test]

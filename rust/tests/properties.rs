@@ -161,6 +161,82 @@ fn prop_parallel_matching_symmetric_across_p_and_seeds() {
 }
 
 #[test]
+fn prop_dist_diffusion_refinement_never_worse_than_projection() {
+    // The scalable band path (global_band > max_centralized_band, which
+    // previously kept the projection untouched): on grid graphs across
+    // rank counts and seed-jittered separator positions, the
+    // diffusion-refined separator must always validate and never exceed
+    // the projected separator's size. Swept in both regimes — forced
+    // distributed (maxband=1) and default centralized — so the two
+    // paths stay mutually consistent.
+    use ptscotch::comm::MemTracker;
+    use ptscotch::dist::dsep::band_refine_dist;
+
+    for (seed, p, maxband) in [
+        (0u64, 4usize, 1usize),
+        (1, 4, 1),
+        (2, 5, 1),
+        (3, 3, 1),
+        (4, 4, usize::MAX),
+    ] {
+        let nx = 64 + (seed as usize * 7) % 17;
+        let ny = 64;
+        let g = Arc::new(generators::grid2d(nx, ny));
+        // A valid but deliberately suboptimal projection: a 2-thick
+        // column separator whose position jitters with the seed.
+        let mid = nx / 3 + (seed as usize * 5) % (nx / 3);
+        let proj = generators::column_separator_part(nx, ny, mid, 2);
+        let sep_before = proj.iter().filter(|&&x| x == SEP).count() as i64;
+        let (res, _) = comm::run(p, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let mut part: Vec<u8> = (0..dg.nloc())
+                .map(|v| proj[dg.glb(v) as usize])
+                .collect();
+            let strat = Strategy::parse(&format!(
+                "seed={seed},sweeps=24,maxband={}",
+                if maxband == usize::MAX { 4_000_000 } else { maxband }
+            ))
+            .unwrap();
+            let refiner = FmRefiner::default();
+            let rng = Rng::new(strat.seed);
+            let mem = MemTracker::new();
+            band_refine_dist(&c, &dg, &mut part, &strat, &refiner, &rng, &mem);
+            let valid = dist_validate_separator(&c, &dg, &part);
+            let sep_now = part.iter().filter(|&&x| x == SEP).count() as i64;
+            (valid, sep_now)
+        });
+        assert!(
+            res.iter().all(|&(valid, _)| valid),
+            "seed {seed} p={p} maxband={maxband}: invalid refined separator"
+        );
+        let sep_after: i64 = res.iter().map(|&(_, s)| s).sum();
+        assert!(
+            sep_after <= sep_before,
+            "seed {seed} p={p} maxband={maxband}: separator grew {sep_after} > {sep_before}"
+        );
+        assert!(sep_after > 0, "seed {seed} p={p}: separator vanished");
+    }
+}
+
+#[test]
+fn prop_parallel_order_valid_with_forced_distributed_bands() {
+    // End-to-end: the full parallel ordering pipeline with
+    // `max_centralized_band` forced tiny, so *every* uncoarsening level
+    // takes the distributed diffusion path instead of centralizing.
+    let svc = ptscotch::coordinator::OrderingService::new_cpu_only();
+    for (seed, p) in [(0u64, 4usize), (1, 5)] {
+        let g = generators::grid2d(40, 40);
+        let strat = Strategy::parse(&format!("seed={seed},maxband=8,sweeps=16")).unwrap();
+        let rep = svc
+            .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
+            .unwrap();
+        rep.ordering
+            .validate()
+            .unwrap_or_else(|e| panic!("seed {seed} p={p}: {e}"));
+    }
+}
+
+#[test]
 fn prop_distributed_separator_valid_across_p() {
     for (seed, p) in [(1u64, 2usize), (2, 3), (3, 4), (4, 5)] {
         let g = Arc::new(random_graph(seed, 600, 900));
