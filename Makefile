@@ -20,9 +20,11 @@ artifacts:
 check:
 	cargo fmt --all -- --check
 	cargo clippy --all-targets -- -D warnings
+	cargo build --release --examples
 	cargo test --release --workspace -q
+	cargo test --release --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
-	cargo bench --bench perf_profile -- --smoke
+	$(MAKE) bench-smoke
 
 test:
 	cargo test --release -q
@@ -34,9 +36,11 @@ test-xla: artifacts
 bench:
 	cargo bench
 
-# Quick pass over the profile bench only (seconds; used by `check`/CI).
+# Quick pass over the profile bench only (seconds; used by `check`/CI),
+# swept over both band-engine settings so the dispatch path stays green.
 bench-smoke:
-	cargo bench --bench perf_profile -- --smoke
+	cargo bench --bench perf_profile -- --smoke --engine cpu
+	cargo bench --bench perf_profile -- --smoke --engine xla
 
 clean:
 	rm -rf artifacts bench_out target

@@ -19,9 +19,14 @@ from jax._src.lib import xla_client as xc
 from . import model
 
 #: Size buckets emitted by default: (rows, max degree). Rows must be
-#: multiples of the kernel BLOCK (256). Band graphs bigger than the
-#: largest bucket fall back to the CPU reference at run time.
-BUCKETS = [(256, 32), (1024, 32), (4096, 32), (16384, 32)]
+#: multiples of the kernel BLOCK (256). Two consumers share them:
+#: the sequential refiner packs whole centralized bands, and the
+#: distributed path (``dist::ddiffusion``) packs one rank's band slice
+#: — local *plus ghost* rows — so the ladder includes small steps
+#: (256/512/1024) sized for per-rank slices of bands split over 2–16
+#: ranks, not just whole-band sizes. Graphs bigger than the largest
+#: bucket fall back to the CPU reference at run time.
+BUCKETS = [(256, 32), (512, 32), (1024, 32), (4096, 32), (16384, 32)]
 
 
 def to_hlo_text(lowered) -> str:

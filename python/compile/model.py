@@ -6,12 +6,25 @@ banded diffusion smoother. ``aot.py`` lowers one HLO text file per
 (model, bucket) pair; the Rust runtime loads and executes them from the
 band-refinement hot path.
 
-Semantics contract (shared with Rust ``sep::diffusion``):
-  * the anchor clamp ``x = mask·vals + (1-mask)·x`` runs **before** every
-    averaging step and once after the last — equivalent to clamping
-    after every step when the initial field already has anchors set;
+Semantics contract (shared with Rust ``sep::diffusion`` and pinned by
+``runtime::ell::ell_fused_reference`` on the Rust side):
+  * the fixed-value clamp ``x = mask·vals + (1-mask)·x`` runs **before**
+    every averaging step and once after the last — equivalent to
+    clamping after every step when the initial field already has the
+    clamped entries set;
   * padded rows/lanes carry weight 0 and decay to 0;
   * all arithmetic is f32.
+
+Clamping covers two row kinds, indistinguishable to the kernel:
+  * **anchors** (both call paths): ``vals`` ∓1, rows packed empty;
+  * **ghost rows** (distributed per-rank path, ``dist::ddiffusion``):
+    each rank packs its band slice as ``[local rows | ghost rows]`` and
+    sets ``mask`` 1 on every ghost row with ``vals`` holding the
+    neighbor values of the latest halo exchange. The kernel thus treats
+    ghosts as fixed boundary conditions for the ``STEPS_PER_CALL``
+    fused sweeps of one call; the caller re-fills them from a fresh
+    halo exchange between calls. Ghost rows are packed empty (weight
+    0), so their outputs are never computed — only gathered.
 """
 
 import jax.numpy as jnp

@@ -2,9 +2,11 @@
 //!
 //! Times the individual L3 phases (coarsening, initial separator, FM,
 //! band extraction, projection, minimum degree, symbolic evaluation) on
-//! a mid-size 3D mesh, plus the XLA (L1/L2) execution path when
-//! artifacts are present. Used to drive and document the optimization
-//! log in EXPERIMENTS.md §Perf.
+//! a mid-size 3D mesh, the distributed band refinement under both band
+//! engines (`--engine cpu|xla` pins one; see EXPERIMENTS.md §Perf.1),
+//! plus the XLA (L1/L2) execution path when artifacts are present.
+//! Used to drive and document the optimization log in EXPERIMENTS.md
+//! §Perf.
 
 #[path = "common.rs"]
 mod common;
@@ -22,6 +24,20 @@ use ptscotch::sep::initial::greedy_graph_growing;
 use ptscotch::sep::{multilevel_separator, FmRefiner};
 use ptscotch::strategy::{SepStrategy, Strategy};
 use std::time::Instant;
+
+/// Value of a `--engine <e>` / `--engine=<e>` argument, selecting which
+/// band engine(s) the distributed-band profile row runs under (the CI
+/// bench-smoke step sweeps both settings in separate invocations).
+fn engine_arg() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--engine")
+        .and_then(|i| args.get(i + 1).cloned())
+        .or_else(|| {
+            args.iter()
+                .find_map(|a| a.strip_prefix("--engine=").map(str::to_string))
+        })
+}
 
 fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
     let t0 = Instant::now();
@@ -88,34 +104,59 @@ fn main() {
     });
     // Distributed diffusion on an oversized band — the scalable path of
     // `dist::dsep::band_refine_dist` (maxband forced tiny), kept in the
-    // profile so its halo-sweep cost stays visible.
+    // profile so its halo-sweep cost stays visible. Run once per band
+    // engine (`engine=cpu` vs `engine=xla`, or only the engine named by
+    // `--engine <e>`): with artifacts present the xla row measures the
+    // per-rank fused-kernel path, without them it measures the dispatch
+    // overhead of the collectively-agreed fallback to the same CPU
+    // sweeps — either way the dispatch path cannot silently rot.
     {
         use ptscotch::comm;
+        use ptscotch::runtime::load_shared;
         use std::sync::Arc;
+        let engines: Vec<String> = match engine_arg() {
+            Some(e) => vec![e],
+            None => vec!["cpu".into(), "xla".into()],
+        };
+        let band_rt = load_shared(&XlaRuntime::default_dir()).ok();
         let (nx, ny) = if smoke { (16usize, 16usize) } else { (64 * scale, 64 * scale) };
         let g2 = Arc::new(generators::grid2d(nx, ny));
         let proj = Arc::new(generators::column_separator_part(nx, ny, nx / 2, 2));
-        time("dist diffusion band refine (p=4)", 1, || {
-            let g2 = g2.clone();
-            let proj = proj.clone();
-            let strat = Strategy::parse("maxband=8,sweeps=16").unwrap();
-            let (res, _) = comm::run(4, move |c| {
-                use ptscotch::dist::dgraph::DGraph;
-                use ptscotch::sep::SEP;
-                let dg = DGraph::from_global(&c, &g2);
-                let mut part: Vec<u8> = (0..dg.nloc())
-                    .map(|v| proj[dg.glb(v) as usize])
-                    .collect();
-                let refiner = ptscotch::sep::FmRefiner::default();
-                let rng = Rng::new(1);
-                let mem = ptscotch::comm::MemTracker::new();
-                ptscotch::dist::dsep::band_refine_dist(
-                    &c, &dg, &mut part, &strat, &refiner, &rng, &mem,
-                );
-                part.iter().filter(|&&x| x == SEP).count()
+        for eng in &engines {
+            let strat = Strategy::parse(&format!("maxband=8,sweeps=16,engine={eng}")).unwrap();
+            time(&format!("dist band refine (p=4, engine={eng})"), 1, || {
+                let g2 = g2.clone();
+                let proj = proj.clone();
+                let strat = strat.clone();
+                let rt = band_rt.clone();
+                let (res, _) = comm::run(4, move |c| {
+                    use ptscotch::dist::dgraph::DGraph;
+                    use ptscotch::sep::SEP;
+                    let dg = DGraph::from_global(&c, &g2);
+                    let mut part: Vec<u8> = (0..dg.nloc())
+                        .map(|v| proj[dg.glb(v) as usize])
+                        .collect();
+                    let refiner = ptscotch::sep::FmRefiner::default();
+                    let rng = Rng::new(1);
+                    let mem = ptscotch::comm::MemTracker::new();
+                    ptscotch::dist::dsep::band_refine_dist(
+                        &c,
+                        &dg,
+                        &mut part,
+                        &strat,
+                        &refiner,
+                        rt.as_ref(),
+                        &rng,
+                        &mem,
+                    );
+                    part.iter().filter(|&&x| x == SEP).count()
+                });
+                res.iter().sum::<usize>()
             });
-            res.iter().sum::<usize>()
-        });
+        }
+        if band_rt.is_none() && engines.iter().any(|e| e == "xla") {
+            println!("   (no artifacts loaded: engine=xla measured the CPU fallback)");
+        }
     }
 
     println!("\n-- L1/L2 (XLA path) --");

@@ -189,7 +189,7 @@ mod tests {
             let strat = Strategy::default();
             let pm = parmetis_like_order(&c, &g, &strat).unwrap().ordering;
             let refiner = FmRefiner::default();
-            let pts = crate::dist::parallel_order(&c, &g, &strat, &refiner).ordering;
+            let pts = crate::dist::parallel_order(&c, &g, &strat, &refiner, None).ordering;
             (pm, pts)
         });
         let (pm, pts) = &res[0];

@@ -19,7 +19,7 @@ use crate::rng::Rng;
 use crate::runtime::{load_shared, DiffusionRefiner, SharedRuntime};
 use crate::sep::diffusion::CpuDiffusionRefiner;
 use crate::sep::{BandRefiner, FmRefiner};
-use crate::strategy::{RefinerKind, Strategy};
+use crate::strategy::{BandEngine, RefinerKind, Strategy};
 use crate::{Error, Result};
 use std::path::Path;
 use std::sync::Arc;
@@ -104,8 +104,22 @@ impl OrderingService {
                     let strat2 = strat.clone();
                     let service_refiner: Arc<dyn BandRefiner + Send + Sync> =
                         Arc::from(self.refiner(strat)?);
+                    // Hand the loaded runtime to the rank fleet so the
+                    // distributed diffusion path can execute the fused
+                    // kernel per rank; `engine=cpu` pins the scalar
+                    // sweeps without consulting the runtime at all.
+                    let band_rt = match strat.dist.band_engine {
+                        BandEngine::Cpu => None,
+                        BandEngine::Auto | BandEngine::Xla => self.runtime.clone(),
+                    };
                     let (res, stats) = comm::run(p, move |c| {
-                        let r = parallel_order(&c, &ga, &strat2, service_refiner.as_ref());
+                        let r = parallel_order(
+                            &c,
+                            &ga,
+                            &strat2,
+                            service_refiner.as_ref(),
+                            band_rt.as_ref(),
+                        );
                         (r.ordering, r.peak_mem)
                     });
                     let mems = res.iter().map(|(_, m)| *m).collect();

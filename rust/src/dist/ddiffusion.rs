@@ -13,16 +13,43 @@
 //! cover applies [`crate::sep::diffusion::cover_prefers_first`], whose
 //! antisymmetry lets every rank decide only for its own endpoints while
 //! still covering every crossing halo edge exactly once.
+//!
+//! Two execution engines produce the diffusion field (DESIGN.md §4.2):
+//!
+//! * **CPU sweeps** ([`diffuse_band_dist`]) — the scalar reference: one
+//!   damped Jacobi sweep per halo exchange;
+//! * **per-rank XLA kernel** (via [`diffuse_band_dist_engine`]) — each
+//!   rank packs its local band slice plus ghost rows into a fixed ELL
+//!   bucket ([`crate::runtime::pack_ell_dist`]) and runs the same
+//!   AOT-compiled fused kernel the sequential refiner uses. Ghost rows
+//!   execute clamped to the boundary values of the previous halo
+//!   exchange, so one exchange covers `steps_per_call` fused sweeps.
+//!
+//! The engine choice is the `engine=` strategy knob
+//! ([`crate::strategy::BandEngine`]); the dispatcher agrees on the
+//! choice collectively (so the halo-exchange cadence can never split
+//! across ranks) and falls back to the CPU sweeps whenever artifacts
+//! are absent or some rank's slice fits no bucket.
 
 use super::dband::DistBand;
 use crate::comm::Comm;
 use crate::dist::dgraph::DGraph;
+use crate::runtime::{ell_fused_reference, pack_ell_dist, SharedRuntime};
 use crate::sep::diffusion::{cover_prefers_first, damped_average, field_from_labels, sign_label};
 use crate::sep::SEP;
+use crate::strategy::BandEngine;
 
 /// Damping factor of the distributed sweeps; matches the sequential
-/// reference default ([`crate::sep::diffusion::CpuDiffusionRefiner`]).
+/// reference default ([`crate::sep::diffusion::CpuDiffusionRefiner`])
+/// and the value baked into the AOT artifacts
+/// (`python/compile/model.py::DAMPING`).
 pub const DIST_DIFFUSION_DAMPING: f32 = 0.95;
+
+/// Minimum global band size (non-anchor vertices) for which
+/// [`BandEngine::Auto`] dispatches to the XLA kernel: one bucket row
+/// block. Below it, per-call dispatch overhead dominates the fused
+/// sweeps, so Auto keeps the CPU path; `engine=xla` overrides.
+pub const AUTO_XLA_MIN_BAND: u64 = 256;
 
 /// Global `(separator weight, imbalance)` quality key of a distributed
 /// part labeling — the distributed analog of
@@ -36,36 +63,33 @@ pub fn dist_quality_key(comm: &Comm, dg: &DGraph, part: &[u8]) -> (i64, i64) {
     (g[2], (g[0] - g[1]).abs())
 }
 
-/// Run `sweeps` damped Jacobi iterations of the two-liquid diffusion on
-/// the distributed band, re-clamping the anchors to ∓1 after every
-/// sweep, then recover a valid separator by sign bipartition plus the
-/// shared crossing-edge cover. Returns one refined label per local band
-/// vertex (anchors included on their owner, always [`crate::sep::P0`] /
-/// [`crate::sep::P1`]). Collective.
-pub fn diffuse_band_dist(comm: &Comm, band: &DistBand, sweeps: usize, damping: f32) -> Vec<u8> {
+/// Write the anchors' clamp values into a local field slice. The
+/// anchors are by construction the last two local vertices of the last
+/// rank (see `extract_dband`), so clamping is two direct writes.
+fn clamp_anchors(comm: &Comm, band: &DistBand, x: &mut [f32]) {
+    let nloc = band.dg.nloc();
+    if comm.rank() == comm.size() - 1 {
+        debug_assert!(nloc >= 2 && band.dg.glb(nloc - 2) == band.anchor0_gid());
+        debug_assert_eq!(band.dg.glb(nloc - 1), band.anchor1_gid());
+        x[nloc - 2] = -1.0;
+        x[nloc - 1] = 1.0;
+    }
+}
+
+/// CPU reference sweeps: `sweeps` damped Jacobi iterations, each one
+/// local weighted average plus one halo exchange of the scalar field,
+/// with the anchors re-clamped to ∓1 after every sweep. Returns the
+/// final local field (anchors clamped). Collective.
+fn cpu_sweeps(comm: &Comm, band: &DistBand, sweeps: usize, damping: f32) -> Vec<f32> {
     let dg = &band.dg;
     let nloc = dg.nloc();
-    // The anchors are by construction the last two local vertices of the
-    // last rank (see `extract_dband`), so clamping is two direct writes.
-    let owns_anchors = comm.rank() == comm.size() - 1;
-    if owns_anchors {
-        debug_assert!(nloc >= 2 && dg.glb(nloc - 2) == band.anchor0_gid());
-        debug_assert_eq!(dg.glb(nloc - 1), band.anchor1_gid());
-    }
-    let clamp = |x: &mut [f32]| {
-        if owns_anchors {
-            x[nloc - 2] = -1.0;
-            x[nloc - 1] = 1.0;
-        }
-    };
-
     // Local Jacobi sweeps interleaved with halo exchanges of the field —
     // the same f32 arithmetic as the sequential reference, reduction
     // order aside.
     let mut x = field_from_labels(&band.part);
     let mut next = vec![0f32; nloc];
     for _ in 0..sweeps {
-        clamp(&mut x);
+        clamp_anchors(comm, band, &mut x);
         let ghost_x = dg.halo_exchange(comm, &x);
         for v in 0..nloc {
             let mut num = 0f32;
@@ -81,14 +105,145 @@ pub fn diffuse_band_dist(comm: &Comm, band: &DistBand, sweeps: usize, damping: f
         }
         std::mem::swap(&mut x, &mut next);
     }
-    clamp(&mut x);
+    clamp_anchors(comm, band, &mut x);
+    x
+}
 
-    // Sign-change scan: bipartition by sign, then cover every crossing
-    // edge with its weaker endpoint. Each rank marks only its own
-    // vertices; the antisymmetric rule guarantees the remote endpoint of
-    // a halo edge is marked by its owner exactly when this side is not.
+/// Local clamp set and width requirement of this rank's band slice:
+/// anchor rows (owned by the last rank) execute clamped like ghosts, so
+/// only the *unclamped* local rows bound the bucket width.
+fn slice_requirements(band: &DistBand) -> (Vec<usize>, usize) {
+    let dg = &band.dg;
+    let nloc = dg.nloc();
+    let clamped: Vec<usize> = (0..nloc)
+        .filter(|&v| band.is_anchor_gid(dg.glb(v)))
+        .collect();
+    let d_real = (0..nloc)
+        .filter(|v| !clamped.contains(v))
+        .map(|v| dg.neighbors_gst(v).len())
+        .max()
+        .unwrap_or(0);
+    (clamped, d_real)
+}
+
+/// One rank's packed band slice plus the kernel's argument vectors —
+/// assembled once per band and reused across fused calls. Shared by the
+/// XLA execution path and the offline equivalence test, so the
+/// production assembly is exercised without artifacts.
+struct PackedSlice {
+    /// The `(n, d)` ELL block of the slice ([`pack_ell_dist`]).
+    ell: crate::runtime::EllPacked,
+    /// Field vector, laid out `[local | ghosts | padding]`.
+    x: Vec<f32>,
+    /// Fixed-value clamp mask: 1 on ghosts and anchors.
+    mask: Vec<f32>,
+    /// Clamp values: the anchors' ∓1, ghost slots refreshed per call.
+    vals: Vec<f32>,
+}
+
+/// Pack this rank's band slice into an `(n, d)` ELL block and build the
+/// kernel's initial field and clamp vectors: anchors clamped to their
+/// ∓1 labels, ghost rows clamped to boundary values that
+/// [`PackedSlice::refresh_ghosts`] re-fills from each halo exchange.
+fn pack_band_slice(band: &DistBand, n: usize, d: usize, clamped: &[usize]) -> Option<PackedSlice> {
+    let dg = &band.dg;
+    let nloc = dg.nloc();
+    let ell = pack_ell_dist(dg, n, d, clamped)?;
+    let mut x = vec![0f32; n];
+    let x0 = field_from_labels(&band.part);
+    x[..nloc].copy_from_slice(&x0);
+    let mut mask = vec![0f32; n];
+    let mut vals = vec![0f32; n];
+    for &v in clamped {
+        mask[v] = 1.0;
+        vals[v] = x0[v]; // the anchors' ∓1 (anchor labels are P0/P1)
+    }
+    mask[nloc..nloc + dg.ghosts.len()].fill(1.0);
+    Some(PackedSlice { ell, x, mask, vals })
+}
+
+impl PackedSlice {
+    /// Write freshly exchanged ghost boundary values into both the
+    /// field and the clamp-value slots (`nloc..nloc + ngst`).
+    fn refresh_ghosts(&mut self, nloc: usize, ghost_x: &[f32]) {
+        for (i, &gx) in ghost_x.iter().enumerate() {
+            self.x[nloc + i] = gx;
+            self.vals[nloc + i] = gx;
+        }
+    }
+}
+
+/// Per-rank XLA execution of the diffusion sweeps (DESIGN.md §4.2):
+/// pack this rank's band slice plus its ghost rows into the smallest
+/// fitting ELL bucket, then alternate halo exchanges of the field with
+/// fused `steps_per_call`-sweep kernel calls, ghosts and anchors
+/// executing clamped. Returns `None` — on **every** rank, the fit
+/// verdict is collective — when some rank's slice fits no bucket.
+/// Collective.
+fn xla_sweeps(comm: &Comm, band: &DistBand, sweeps: usize, rt: &SharedRuntime) -> Option<Vec<f32>> {
+    let dg = &band.dg;
+    let nloc = dg.nloc();
+    let ngst = dg.ghosts.len();
+    let (clamped, d_real) = slice_requirements(band);
+    // Never hold the runtime lock across a collective: rank threads
+    // share one mutex, and a holder waiting in an allreduce would
+    // deadlock against a peer waiting on the lock.
+    let (bucket, steps_per_call) = {
+        let guard = rt.lock().unwrap();
+        let rt = &guard.0;
+        (rt.fit_diffusion(nloc + ngst, d_real), rt.steps_per_call)
+    };
+    let packed = bucket.and_then(|b| pack_band_slice(band, b.n, b.d, &clamped));
+    let fits = comm.allreduce(packed.is_some(), |a, b| a && b);
+    let (bucket, mut s) = match (fits, bucket, packed) {
+        (true, Some(b), Some(s)) => (b, s),
+        _ => return None, // some rank missed every bucket → CPU everywhere
+    };
+
+    let calls = sweeps.div_ceil(steps_per_call.max(1)).max(1);
+    for _ in 0..calls {
+        // Re-fill the ghost boundary values from their owners, then run
+        // one fused call: the kernel clamps ghosts/anchors before every
+        // internal sweep and once after the last.
+        let ghost_x = dg.halo_exchange(comm, &s.x[..nloc]);
+        s.refresh_ghosts(nloc, &ghost_x);
+        let step = {
+            let guard = rt.lock().unwrap();
+            guard.0.diffusion_step(bucket, &s.x, &s.mask, &s.vals, &s.ell)
+        };
+        s.x = match step {
+            Ok(next) => next,
+            // A mid-run PJRT failure must not desynchronize the agreed
+            // halo cadence — substitute the bit-equivalent pure-Rust
+            // reference of the same fused call and stay in lockstep
+            // (outside the lock: other ranks' fallbacks stay parallel).
+            Err(_) => ell_fused_reference(
+                &s.ell,
+                &s.x,
+                &s.mask,
+                &s.vals,
+                steps_per_call,
+                DIST_DIFFUSION_DAMPING,
+            ),
+        };
+    }
+    let mut x = s.x;
+    x.truncate(nloc);
+    Some(x)
+}
+
+/// Recover a valid separator from a converged diffusion field: sign
+/// bipartition plus the shared crossing-edge cover. Each rank marks only
+/// its own vertices; the antisymmetric rule guarantees the remote
+/// endpoint of a halo edge is marked by its owner exactly when this side
+/// is not. Returns one label per local band vertex (anchors included on
+/// their owner, always [`crate::sep::P0`] / [`crate::sep::P1`]).
+/// Collective.
+fn recover_separator(comm: &Comm, band: &DistBand, x: &[f32]) -> Vec<u8> {
+    let dg = &band.dg;
+    let nloc = dg.nloc();
     let sign: Vec<u8> = x.iter().map(|&xv| sign_label(xv)).collect();
-    let ghost_x = dg.halo_exchange(comm, &x);
+    let ghost_x = dg.halo_exchange(comm, x);
     // Ghost signs follow from the ghost field — the owner's sign is
     // sign_label of the very value it published (anchors included:
     // their clamped ∓1 signs correctly), so no second exchange.
@@ -123,6 +278,54 @@ pub fn diffuse_band_dist(comm: &Comm, band: &DistBand, sweeps: usize, damping: f
         }
     }
     part
+}
+
+/// Run `sweeps` damped Jacobi iterations of the two-liquid diffusion on
+/// the distributed band with the scalar CPU engine, re-clamping the
+/// anchors to ∓1 after every sweep, then recover a valid separator by
+/// sign bipartition plus the shared crossing-edge cover. Returns one
+/// refined label per local band vertex. Collective.
+pub fn diffuse_band_dist(comm: &Comm, band: &DistBand, sweeps: usize, damping: f32) -> Vec<u8> {
+    let x = cpu_sweeps(comm, band, sweeps, damping);
+    recover_separator(comm, band, &x)
+}
+
+/// Engine-dispatching variant of [`diffuse_band_dist`]: run the sweeps
+/// on the engine `engine` selects, falling back down the ladder
+/// (per-rank XLA kernel → CPU sweeps) whenever the runtime is absent,
+/// the damping differs from the artifact-baked
+/// [`DIST_DIFFUSION_DAMPING`], or some rank's band slice fits no
+/// bucket. The engine verdict is agreed collectively before any
+/// engine-specific collective runs, so the halo-exchange cadence never
+/// splits across ranks. Returns the refined labels plus whether the XLA
+/// engine actually executed. Collective.
+pub fn diffuse_band_dist_engine(
+    comm: &Comm,
+    band: &DistBand,
+    sweeps: usize,
+    damping: f32,
+    engine: BandEngine,
+    rt: Option<&SharedRuntime>,
+) -> (Vec<u8>, bool) {
+    // The artifacts bake DIST_DIFFUSION_DAMPING in; a caller sweeping a
+    // different damping must get the CPU engine it can parameterize.
+    let damping_ok = damping == DIST_DIFFUSION_DAMPING;
+    let want_xla = damping_ok
+        && match engine {
+            BandEngine::Cpu => false,
+            BandEngine::Xla => rt.is_some(),
+            BandEngine::Auto => rt.is_some() && band.band_nglb >= AUTO_XLA_MIN_BAND,
+        };
+    // Collective agreement (a rank could in principle lack the runtime
+    // handle others hold — never let the sweep cadence diverge).
+    let use_xla = comm.allreduce(want_xla, |a, b| a && b);
+    if use_xla {
+        if let Some(x) = xla_sweeps(comm, band, sweeps, rt.expect("agreed runtime")) {
+            return (recover_separator(comm, band, &x), true);
+        }
+        // Collective fit miss: every rank got None; fall through to CPU.
+    }
+    (diffuse_band_dist(comm, band, sweeps, damping), false)
 }
 
 #[cfg(test)]
@@ -222,6 +425,88 @@ mod tests {
         // Columns 5 and 6 are SEP (20 vertices); P0 has 5 columns, P1 3.
         for key in &res {
             assert_eq!(*key, (20, 20));
+        }
+    }
+
+    #[test]
+    fn engine_dispatch_without_runtime_matches_cpu() {
+        // Offline (xla-stub / no artifacts) there is no runtime handle:
+        // every engine setting must take the CPU path and produce labels
+        // identical to calling `diffuse_band_dist` directly.
+        let (nx, ny) = (20, 14);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let full = thick_column_part(nx, ny);
+        for p in [2usize, 3] {
+            for engine in [BandEngine::Auto, BandEngine::Cpu, BandEngine::Xla] {
+                let g = g.clone();
+                let full = full.clone();
+                let (ok, _) = comm::run(p, move |c| {
+                    let dg = DGraph::from_global(&c, &g);
+                    let part: Vec<u8> = (0..dg.nloc())
+                        .map(|v| full[dg.glb(v) as usize])
+                        .collect();
+                    let dist = band_distances(&c, &dg, &part, 2);
+                    let band = extract_dband(&c, &dg, &part, &dist);
+                    let want = diffuse_band_dist(&c, &band, 12, DIST_DIFFUSION_DAMPING);
+                    let (got, used_xla) = diffuse_band_dist_engine(
+                        &c,
+                        &band,
+                        12,
+                        DIST_DIFFUSION_DAMPING,
+                        engine,
+                        None,
+                    );
+                    !used_xla && got == want
+                });
+                assert!(ok.iter().all(|&x| x), "p={p} engine={engine:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_slice_fused_reference_matches_cpu_sweeps() {
+        // The numeric core of the per-rank XLA path, without artifacts:
+        // the *production* slice assembly (`slice_requirements` +
+        // `pack_band_slice` + `refresh_ghosts`, exactly what
+        // `xla_sweeps` runs) driven by the fused-call reference at one
+        // step per call (one halo exchange per sweep, the CPU cadence)
+        // must reproduce `cpu_sweeps` bit-for-bit — same neighbor
+        // order, same f32 arithmetic.
+        let (nx, ny) = (18, 13);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let full = thick_column_part(nx, ny);
+        for p in [1usize, 2, 4] {
+            let g = g.clone();
+            let full = full.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| full[dg.glb(v) as usize])
+                    .collect();
+                let dist = band_distances(&c, &dg, &part, 3);
+                let band = extract_dband(&c, &dg, &part, &dist);
+                let bdg = &band.dg;
+                let nloc = bdg.nloc();
+                let ngst = bdg.ghosts.len();
+                let (clamped, d) = slice_requirements(&band);
+                let mut s = pack_band_slice(&band, nloc + ngst + 3, d, &clamped).unwrap();
+                let sweeps = 9usize;
+                let want = cpu_sweeps(&c, &band, sweeps, DIST_DIFFUSION_DAMPING);
+                for _ in 0..sweeps {
+                    let ghost_x = bdg.halo_exchange(&c, &s.x[..nloc]);
+                    s.refresh_ghosts(nloc, &ghost_x);
+                    s.x = ell_fused_reference(
+                        &s.ell,
+                        &s.x,
+                        &s.mask,
+                        &s.vals,
+                        1,
+                        DIST_DIFFUSION_DAMPING,
+                    );
+                }
+                s.x[..nloc] == want[..]
+            });
+            assert!(ok.iter().all(|&x| x), "p={p}");
         }
     }
 }

@@ -21,6 +21,7 @@ use crate::comm::{Comm, MemTracker};
 use crate::graph::Graph;
 use crate::order::{assemble_fragments, nested_dissection, OrderFragment, Ordering};
 use crate::rng::Rng;
+use crate::runtime::SharedRuntime;
 use crate::sep::{BandRefiner, P0, P1, SEP};
 use crate::strategy::Strategy;
 use crate::Result;
@@ -38,12 +39,15 @@ pub struct ParallelOrderResult {
 
 /// Order `g` with PT-Scotch parallel nested dissection on the ranks of
 /// `comm` (any count, including 1). Collective; every rank receives the
-/// same valid [`Ordering`].
+/// same valid [`Ordering`]. `xla` is the optional shared XLA runtime
+/// handle used by the distributed band-diffusion engine dispatch
+/// (DESIGN.md §4.2); pass `None` to pin the scalar CPU sweeps.
 pub fn parallel_order(
     comm: &Comm,
     g: &Graph,
     strat: &Strategy,
     refiner: &dyn BandRefiner,
+    xla: Option<&SharedRuntime>,
 ) -> ParallelOrderResult {
     let mem = MemTracker::new();
     let dg = DGraph::from_global(comm, g);
@@ -53,7 +57,7 @@ pub fn parallel_order(
     let mut frags = Vec::new();
     let mut dist_levels = 0usize;
     let separator = |c: &Comm, d: &DGraph, r: &Rng, m: &MemTracker| {
-        dist_separator(c, d, strat, refiner, r, m)
+        dist_separator(c, d, strat, refiner, xla, r, m)
     };
     dissect(
         comm,
@@ -303,7 +307,7 @@ mod tests {
         let strat = Strategy::parse(spec).unwrap();
         let (res, _) = comm::run(p, move |c| {
             let refiner = FmRefiner::default();
-            parallel_order(&c, &g, &strat, &refiner)
+            parallel_order(&c, &g, &strat, &refiner, None)
         });
         res
     }

@@ -27,12 +27,13 @@
 
 use super::coarsen::{coarsen_dist, DistCoarsening};
 use super::dband::{band_distances, extract_dband};
-use super::ddiffusion::{diffuse_band_dist, dist_quality_key, DIST_DIFFUSION_DAMPING};
+use super::ddiffusion::{diffuse_band_dist_engine, dist_quality_key, DIST_DIFFUSION_DAMPING};
 use super::dgraph::DGraph;
 use super::matching::parallel_match;
 use crate::comm::{Comm, MemTracker};
 use crate::graph::GraphBuilder;
 use crate::rng::Rng;
+use crate::runtime::SharedRuntime;
 use crate::sep::band::BandGraph;
 use crate::sep::{multilevel_separator, BandRefiner, SepState, P0, P1, SEP};
 use crate::strategy::Strategy;
@@ -43,11 +44,15 @@ use std::collections::HashMap;
 /// `rng` is a shared root — per-phase streams are derived from it mixed
 /// with the global rank, so sibling subgroups and ranks stay
 /// decorrelated while the whole run remains reproducible (§4).
+/// `xla` is the optional shared XLA runtime handle forwarded to the
+/// distributed band-diffusion engine dispatch (DESIGN.md §4.2).
+#[allow(clippy::too_many_arguments)]
 pub fn dist_separator(
     comm: &Comm,
     dg: &DGraph,
     strat: &Strategy,
     refiner: &dyn BandRefiner,
+    xla: Option<&SharedRuntime>,
     rng: &Rng,
     mem: &MemTracker,
 ) -> Vec<u8> {
@@ -122,6 +127,7 @@ pub fn dist_separator(
             &mut part,
             strat,
             refiner,
+            xla,
             &rng.derive(0xBA2D ^ li as u64),
             mem,
         );
@@ -189,15 +195,19 @@ fn best_pick(comm: &Comm, key: (i64, i64), part: Vec<u8>) -> Vec<u8> {
 /// then refine it — **multi-sequentially** on centralized copies when
 /// the band is small enough (at most `max_centralized_band` vertices
 /// globally), or **in place** with the distributed diffusion kernel
-/// when it is not. Either way the result is committed only when it
-/// strictly beats the projection, so the separator never degrades.
-/// Collective.
+/// when it is not (executed per rank on the XLA runtime `xla` when the
+/// `engine=` strategy knob and the bucket fit allow it — see
+/// `dist::ddiffusion::diffuse_band_dist_engine`). Either way the result
+/// is committed only when it strictly beats the projection, so the
+/// separator never degrades. Collective.
+#[allow(clippy::too_many_arguments)]
 pub fn band_refine_dist(
     comm: &Comm,
     dg: &DGraph,
     part: &mut [u8],
     strat: &Strategy,
     refiner: &dyn BandRefiner,
+    xla: Option<&SharedRuntime>,
     rng: &Rng,
     mem: &MemTracker,
 ) {
@@ -221,7 +231,7 @@ pub fn band_refine_dist(
     let band: Vec<usize> = (0..nloc).filter(|&v| dist[v] != u32::MAX).collect();
     let global_band = comm.allreduce_sum(band.len() as i64) as usize;
     if global_band > strat.dist.max_centralized_band {
-        band_refine_diffusion_dist(comm, dg, part, strat, mem, &dist);
+        band_refine_diffusion_dist(comm, dg, part, strat, xla, mem, &dist);
         return;
     }
     band_refine_centralized(comm, dg, part, refiner, rng, mem, &band, &dist);
@@ -229,15 +239,18 @@ pub fn band_refine_dist(
 
 /// Scalable band refinement (§3.3 taken to large bands): extract the
 /// band as a distributed graph in its own right, run the diffusion
-/// kernel on it with halo exchanges of the scalar field, and commit the
-/// recovered separator when it strictly beats the projection. This is
-/// the path that replaces the old "keep the projection" fallback for
-/// bands exceeding `max_centralized_band`. Collective.
+/// kernel on it with halo exchanges of the scalar field — per rank on
+/// the XLA runtime when the engine dispatch allows, scalar CPU sweeps
+/// otherwise — and commit the recovered separator when it strictly
+/// beats the projection. This is the path that replaces the old "keep
+/// the projection" fallback for bands exceeding `max_centralized_band`.
+/// Collective.
 fn band_refine_diffusion_dist(
     comm: &Comm,
     dg: &DGraph,
     part: &mut [u8],
     strat: &Strategy,
+    xla: Option<&SharedRuntime>,
     mem: &MemTracker,
     dist: &[u32],
 ) {
@@ -245,11 +258,13 @@ fn band_refine_diffusion_dist(
     let footprint = band.dg.footprint_bytes();
     mem.grow(footprint);
     let before = dist_quality_key(comm, &band.dg, &band.part);
-    let refined = diffuse_band_dist(
+    let (refined, _used_xla) = diffuse_band_dist_engine(
         comm,
         &band,
         strat.dist.diffusion_sweeps,
         DIST_DIFFUSION_DAMPING,
+        strat.dist.band_engine,
+        xla,
     );
     // Distributed repair/validation pass: the cover is valid by
     // construction, but a refinement that cannot be proven valid (or
@@ -432,7 +447,7 @@ mod tests {
                 let refiner = FmRefiner::default();
                 let rng = Rng::new(1);
                 let mem = MemTracker::new();
-                let part = dist_separator(&c, &dg, &strat, &refiner, &rng, &mem);
+                let part = dist_separator(&c, &dg, &strat, &refiner, None, &rng, &mem);
                 assert!(dist_validate_separator(&c, &dg, &part));
                 (dg.base(), part)
             });
@@ -482,7 +497,7 @@ mod tests {
                 let refiner = FmRefiner::default();
                 let rng = Rng::new(3);
                 let mem = MemTracker::new();
-                band_refine_dist(&c, &dg, &mut part, &strat, &refiner, &rng, &mem);
+                band_refine_dist(&c, &dg, &mut part, &strat, &refiner, None, &rng, &mem);
                 let valid = dist_validate_separator(&c, &dg, &part);
                 let sep_now =
                     c.allreduce_sum(part.iter().filter(|&&x| x == SEP).count() as i64);

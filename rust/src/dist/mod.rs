@@ -23,7 +23,10 @@
 //!   Jacobi sweeps interleaved with halo exchanges of the scalar field,
 //!   then a sign-change scan and a distributed separator-recovery cover
 //!   (§3.3/§5) — the scalable refinement used when a band is too large
-//!   to centralize;
+//!   to centralize. Sweeps execute on the scalar CPU path or, per rank,
+//!   on the AOT-compiled XLA diffusion kernel over the local band slice
+//!   (`engine=` knob; [`crate::runtime::pack_ell_dist`], DESIGN.md
+//!   §4.2);
 //! * [`dsep`] — the distributed separator pipeline: parallel
 //!   coarsening, multi-sequential initial separators on duplicated
 //!   coarsest graphs, and band refinement during uncoarsening —

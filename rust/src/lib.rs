@@ -50,7 +50,7 @@
 //! assert!(rep.stats.nnz >= g.n() as u64); // fill-in of the L factor
 //! ```
 
-#![warn(missing_docs)]
+#![deny(missing_docs)]
 
 pub mod baseline;
 pub mod comm;

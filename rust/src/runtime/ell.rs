@@ -5,7 +5,17 @@
 //! TPU-friendly layout chosen in DESIGN.md §Hardware-Adaptation: rows are
 //! unit-stride VMEM tiles, the gather never leaves the block, and padded
 //! lanes vanish under the weighted reduction.
+//!
+//! Two packings exist: [`pack_ell`]/[`pack_ell_clamped`] lay out a
+//! centralized [`Graph`] (the sequential hot path), and [`pack_ell_dist`]
+//! lays out one rank's slice of a [`DGraph`] — local rows first, then one
+//! row per ghost vertex, all in the graph's native gst indexing. Ghost
+//! rows are packed **empty** (weight 0) and executed **clamped**
+//! (`fixed_mask` 1), so the kernel treats them as fixed boundary values
+//! that the caller re-fills from a halo exchange between fused calls
+//! (DESIGN.md §4.2).
 
+use crate::dist::dgraph::DGraph;
 use crate::graph::Graph;
 
 /// A graph packed into a fixed `(n, d)` ELL block.
@@ -45,6 +55,30 @@ pub fn pack_ell(g: &Graph, n: usize, d: usize) -> Option<EllPacked> {
 /// its row never needs computing. Its value is still gathered correctly
 /// by its neighbors' rows. Without this, every mesh band fell back to
 /// the CPU path.
+///
+/// ```
+/// use ptscotch::graph::GraphBuilder;
+/// use ptscotch::runtime::{pack_ell, pack_ell_clamped};
+///
+/// // Two 2-paths plus a hub (vertex 4) adjacent to everything: the
+/// // hub's degree 4 exceeds the bucket width 2, so the plain packing
+/// // refuses…
+/// let mut b = GraphBuilder::new(5);
+/// b.add_edge(0, 1);
+/// b.add_edge(2, 3);
+/// for v in 0..4 {
+///     b.add_edge(4, v);
+/// }
+/// let g = b.build().unwrap();
+/// assert!(pack_ell(&g, 8, 2).is_none());
+///
+/// // …but clamping the hub (an anchor whose output is overwritten
+/// // anyway) packs its row empty and the bucket fits. Its neighbors
+/// // still gather its clamped value through their own rows.
+/// let e = pack_ell_clamped(&g, 8, 2, &[4]).unwrap();
+/// assert_eq!(e.w[4 * e.d..5 * e.d], [0.0, 0.0]); // hub row is empty
+/// assert!(e.nbr[..2].contains(&4)); // vertex 0 still points at the hub
+/// ```
 pub fn pack_ell_clamped(g: &Graph, n: usize, d: usize, clamped: &[usize]) -> Option<EllPacked> {
     if g.n() > n {
         return None;
@@ -72,6 +106,85 @@ pub fn pack_ell_clamped(g: &Graph, n: usize, d: usize, clamped: &[usize]) -> Opt
         }
     }
     Some(EllPacked { n, d, nbr, w })
+}
+
+/// Pack one rank's slice of a distributed band graph into an `(n, d)`
+/// ELL block: local rows `0..nloc` first, then one row per ghost vertex
+/// (`nloc..nloc + ngst`), exactly the graph's gst indexing — so the
+/// packed neighbor table needs **no renumbering** and the field vector
+/// is `[local values | ghost values | padding]`.
+///
+/// Ghost rows and the rows in `clamped` (the anchors, on their owner
+/// rank) are packed empty and excluded from the degree-fit check: both
+/// are executed under the kernel's fixed-value clamp, so their outputs
+/// are never computed — ghosts hold the boundary values the caller
+/// re-fills from a halo exchange between fused kernel calls, anchors
+/// hold ∓1. Returns `None` when the slice does not fit (too many rows
+/// or an unclamped local vertex whose degree exceeds `d`); the caller
+/// then falls back to the CPU sweep path on **every** rank (the fit
+/// verdict must be agreed collectively — see
+/// `dist::ddiffusion::diffuse_band_dist_engine`).
+pub fn pack_ell_dist(dg: &DGraph, n: usize, d: usize, clamped: &[usize]) -> Option<EllPacked> {
+    let nloc = dg.nloc();
+    let rows = nloc + dg.ghosts.len();
+    if rows > n {
+        return None;
+    }
+    let is_clamped = |v: usize| clamped.contains(&v);
+    let fit = (0..nloc).all(|v| is_clamped(v) || dg.neighbors_gst(v).len() <= d);
+    if !fit {
+        return None;
+    }
+    let mut nbr = vec![0i32; n * d];
+    let mut w = vec![0f32; n * d];
+    for v in 0..nloc {
+        if is_clamped(v) {
+            continue; // output overwritten by the clamp; row stays empty
+        }
+        let row = v * d;
+        for (k, (&a, &ew)) in dg
+            .neighbors_gst(v)
+            .iter()
+            .zip(dg.edge_weights_gst(v))
+            .enumerate()
+        {
+            nbr[row + k] = a as i32;
+            w[row + k] = ew as f32;
+        }
+    }
+    // Ghost rows stay all-zero: clamped boundary values, never computed.
+    Some(EllPacked { n, d, nbr, w })
+}
+
+/// Pure-Rust reference of one fused artifact call: `steps` rounds of the
+/// anchor clamp `x = mask·vals + (1−mask)·x` followed by the damped
+/// weighted average, then one final clamp — bit-for-bit the semantics of
+/// `python/compile/model.py::diffusion_steps` up to reduction order.
+///
+/// Used to keep a rank in collective lockstep when a PJRT execution
+/// fails mid-run (the fit verdict was already agreed, so bailing out
+/// unilaterally would desynchronize the halo-exchange cadence), and by
+/// the tests pinning the artifact contract.
+pub fn ell_fused_reference(
+    e: &EllPacked,
+    x: &[f32],
+    fixed_mask: &[f32],
+    fixed_vals: &[f32],
+    steps: usize,
+    damping: f32,
+) -> Vec<f32> {
+    let clamp = |x: &mut [f32]| {
+        for v in 0..e.n {
+            x[v] = fixed_mask[v] * fixed_vals[v] + (1.0 - fixed_mask[v]) * x[v];
+        }
+    };
+    let mut x = x.to_vec();
+    for _ in 0..steps {
+        clamp(&mut x);
+        x = ell_weighted_average(e, &x, damping);
+    }
+    clamp(&mut x);
+    x
 }
 
 /// Reference (pure-Rust) evaluation of the packed weighted-average
@@ -144,6 +257,71 @@ mod tests {
         for v in n..128 {
             assert_eq!(ell[v], 0.0);
         }
+    }
+
+    #[test]
+    fn pack_dist_slice_layout_and_fit() {
+        use crate::comm;
+        use std::sync::Arc;
+        let g = Arc::new(generators::grid2d(10, 8));
+        let (ok, _) = comm::run(3, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let nloc = dg.nloc();
+            let ngst = dg.ghosts.len();
+            let rows = nloc + ngst;
+            // Too few rows or too narrow a width must refuse (every grid
+            // vertex has degree ≥ 2, the interior 4).
+            let mut ok = pack_ell_dist(&dg, rows - 1, 8, &[]).is_none();
+            ok &= pack_ell_dist(&dg, rows + 4, 1, &[]).is_none();
+            let e = pack_ell_dist(&dg, rows + 4, 4, &[]).unwrap();
+            // Local rows carry the slice's arcs verbatim in gst
+            // indexing, zero-padded to the bucket width.
+            for v in 0..nloc {
+                let row = v * e.d;
+                let deg = dg.neighbors_gst(v).len();
+                for (k, (&a, &w)) in dg
+                    .neighbors_gst(v)
+                    .iter()
+                    .zip(dg.edge_weights_gst(v))
+                    .enumerate()
+                {
+                    ok &= e.nbr[row + k] == a as i32 && e.w[row + k] == w as f32;
+                }
+                ok &= e.w[row + deg..row + e.d].iter().all(|&w| w == 0.0);
+            }
+            // Ghost rows and padding are empty: fixed boundary values,
+            // never computed.
+            for r in nloc..e.n {
+                ok &= e.w[r * e.d..(r + 1) * e.d].iter().all(|&w| w == 0.0);
+            }
+            ok
+        });
+        assert!(ok.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn fused_reference_clamps_and_averages() {
+        // One fused call at steps=1 must equal: clamp, one weighted
+        // average, clamp — pinning the artifact's clamp placement.
+        let g = generators::grid2d(4, 3);
+        let e = pack_ell(&g, 16, 4).unwrap();
+        let mut x = vec![0f32; 16];
+        x[0] = -1.0;
+        x[11] = 1.0;
+        let mut mask = vec![0f32; 16];
+        let mut vals = vec![0f32; 16];
+        mask[0] = 1.0;
+        vals[0] = -1.0;
+        mask[11] = 1.0;
+        vals[11] = 1.0;
+        let got = ell_fused_reference(&e, &x, &mask, &vals, 1, 0.95);
+        let mut want = ell_weighted_average(&e, &x, 0.95);
+        want[0] = -1.0;
+        want[11] = 1.0;
+        assert_eq!(got, want);
+        // Clamped rows always exit at their fixed values.
+        assert_eq!(got[0], -1.0);
+        assert_eq!(got[11], 1.0);
     }
 
     #[test]

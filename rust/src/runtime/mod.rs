@@ -8,11 +8,18 @@
 //! `(kernel, size-bucket)`; band graphs are packed into the bucket's ELL
 //! layout ([`pack_ell`]) and padded rows carry zero weights, so the
 //! kernel needs no dynamic shapes. Python never runs at order time.
+//!
+//! Two call paths share the executables: the sequential band refiner
+//! ([`DiffusionRefiner`]) packs whole centralized bands, and the
+//! distributed diffusion path (`dist::ddiffusion`) packs **one rank's
+//! band slice** — local plus ghost rows ([`pack_ell_dist`]) — executing
+//! the same fused kernel per rank with ghost rows clamped to the halo
+//! boundary values (DESIGN.md §4.2).
 
 pub mod ell;
 pub mod refiner;
 
-pub use ell::{pack_ell, pack_ell_clamped, EllPacked};
+pub use ell::{ell_fused_reference, pack_ell, pack_ell_clamped, pack_ell_dist, EllPacked};
 pub use refiner::DiffusionRefiner;
 
 use crate::{Error, Result};
@@ -48,6 +55,31 @@ pub struct Bucket {
     pub n: usize,
     /// Padded neighbor-list width (columns of the ELL block).
     pub d: usize,
+}
+
+/// Smallest bucket of `buckets` that fits an `(n, d)` problem — the
+/// shared fit rule behind [`XlaRuntime::fit_diffusion`] and
+/// [`XlaRuntime::fit_minplus`]. `(n, d)` is the row/width requirement of
+/// the graph to pack: the vertex count (local + ghost rows for a
+/// distributed slice) and the maximum unclamped degree.
+///
+/// ```
+/// use ptscotch::runtime::{fit_bucket, Bucket};
+///
+/// let buckets = [Bucket { n: 256, d: 32 }, Bucket { n: 1024, d: 32 }];
+/// // The smallest fitting bucket wins…
+/// assert_eq!(fit_bucket(&buckets, 200, 6), Some(Bucket { n: 256, d: 32 }));
+/// assert_eq!(fit_bucket(&buckets, 300, 32), Some(Bucket { n: 1024, d: 32 }));
+/// // …and an oversize problem fits none (the caller falls back to CPU).
+/// assert_eq!(fit_bucket(&buckets, 2000, 6), None);
+/// assert_eq!(fit_bucket(&buckets, 64, 40), None);
+/// ```
+pub fn fit_bucket(buckets: &[Bucket], n: usize, d: usize) -> Option<Bucket> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|b| b.n >= n && b.d >= d)
+        .min()
 }
 
 /// A loaded artifact registry plus the PJRT CPU client.
@@ -132,13 +164,22 @@ impl XlaRuntime {
         self.diffusion.keys().copied().collect()
     }
 
-    /// Smallest diffusion bucket that fits `(n, d)`.
+    /// Smallest diffusion bucket that fits `(n, d)` (see [`fit_bucket`]
+    /// for the fit rule). `n` counts every packed row — for a
+    /// distributed band slice that is local **plus ghost** rows — and
+    /// `d` the maximum unclamped degree.
+    ///
+    /// ```no_run
+    /// use ptscotch::runtime::XlaRuntime;
+    ///
+    /// let rt = XlaRuntime::load(&XlaRuntime::default_dir()).unwrap();
+    /// if let Some(bucket) = rt.fit_diffusion(300, 8) {
+    ///     assert!(bucket.n >= 300 && bucket.d >= 8);
+    /// }
+    /// ```
     pub fn fit_diffusion(&self, n: usize, d: usize) -> Option<Bucket> {
-        self.diffusion
-            .keys()
-            .copied()
-            .filter(|b| b.n >= n && b.d >= d)
-            .min()
+        let buckets: Vec<Bucket> = self.diffusion.keys().copied().collect();
+        fit_bucket(&buckets, n, d)
     }
 
     /// Run `steps_per_call` diffusion iterations on a packed band graph.
@@ -214,13 +255,10 @@ impl XlaRuntime {
             .map_err(|e| Error::Runtime(format!("to_vec: {e:?}")))
     }
 
-    /// Smallest min-plus bucket that fits `(n, d)`.
+    /// Smallest min-plus bucket that fits `(n, d)` (see [`fit_bucket`]).
     pub fn fit_minplus(&self, n: usize, d: usize) -> Option<Bucket> {
-        self.minplus
-            .keys()
-            .copied()
-            .filter(|b| b.n >= n && b.d >= d)
-            .min()
+        let buckets: Vec<Bucket> = self.minplus.keys().copied().collect();
+        fit_bucket(&buckets, n, d)
     }
 
     /// Default artifact directory: `$PTSCOTCH_ARTIFACTS` or `artifacts/`.
@@ -250,16 +288,12 @@ mod tests {
     #[test]
     fn bucket_ordering_picks_smallest_fit() {
         // BTreeMap ordering: (n, d) lexicographic. fit must prefer the
-        // smallest n that fits.
+        // smallest n that fits, regardless of the listing order.
         let b1 = Bucket { n: 256, d: 32 };
         let b2 = Bucket { n: 1024, d: 32 };
         assert!(b1 < b2);
-        let buckets = [b2, b1];
-        let fit = buckets
-            .iter()
-            .copied()
-            .filter(|b| b.n >= 300 && b.d >= 16)
-            .min();
-        assert_eq!(fit, Some(b2));
+        assert_eq!(fit_bucket(&[b2, b1], 300, 16), Some(b2));
+        assert_eq!(fit_bucket(&[b2, b1], 100, 16), Some(b1));
+        assert_eq!(fit_bucket(&[b2, b1], 100, 64), None);
     }
 }

@@ -19,6 +19,45 @@ pub enum RefinerKind {
     DiffusionXla,
 }
 
+/// Which execution engine runs the *distributed* band-diffusion sweeps
+/// (`dist::ddiffusion`) — the `engine=` strategy knob.
+///
+/// The fallback ladder is always available underneath: per-rank XLA
+/// kernel execution when a size bucket fits every rank's band slice,
+/// scalar CPU sweeps when it does not (or when no artifacts are
+/// loaded), centralized multi-sequential FM for bands small enough to
+/// centralize (see `dist::dsep::band_refine_dist`).
+///
+/// ```
+/// use ptscotch::strategy::{BandEngine, Strategy};
+///
+/// // Default is Auto; `engine=cpu` pins the scalar sweeps.
+/// assert_eq!(Strategy::default().dist.band_engine, BandEngine::Auto);
+/// assert_eq!(
+///     Strategy::parse("engine=cpu").unwrap().dist.band_engine,
+///     BandEngine::Cpu,
+/// );
+/// assert_eq!(
+///     Strategy::parse("engine=xla").unwrap().dist.band_engine,
+///     BandEngine::Xla,
+/// );
+/// assert!(Strategy::parse("engine=quantum").is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BandEngine {
+    /// Use the per-rank XLA kernel when a runtime is loaded, a bucket
+    /// fits, and the band is large enough to amortize kernel dispatch
+    /// (`dist::ddiffusion::AUTO_XLA_MIN_BAND`); CPU sweeps otherwise.
+    #[default]
+    Auto,
+    /// Always the scalar CPU sweeps; the runtime is never consulted.
+    Cpu,
+    /// Attempt the per-rank XLA kernel on every distributed band,
+    /// regardless of size; still falls back to CPU sweeps when no
+    /// artifacts are loaded or no bucket fits some rank's slice.
+    Xla,
+}
+
 /// Parameters of the multilevel separator computation.
 #[derive(Clone, Debug)]
 pub struct SepStrategy {
@@ -90,6 +129,9 @@ pub struct DistStrategy {
     /// kernel on oversized bands (each sweep costs one halo exchange of
     /// the scalar field; paper-scale bands converge within a few dozen).
     pub diffusion_sweeps: usize,
+    /// Execution engine for the distributed diffusion sweeps
+    /// (`engine=auto|cpu|xla`).
+    pub band_engine: BandEngine,
 }
 
 impl Default for DistStrategy {
@@ -101,6 +143,7 @@ impl Default for DistStrategy {
             matching_rounds: 5,
             max_centralized_band: 4_000_000,
             diffusion_sweeps: 32,
+            band_engine: BandEngine::default(),
         }
     }
 }
@@ -134,7 +177,8 @@ impl Default for Strategy {
 
 impl Strategy {
     /// Parse `key=value` pairs (comma-separated) over the default
-    /// strategy, e.g. `band=3,folddup=1,leaf=120,refiner=xla,seed=42`.
+    /// strategy, e.g.
+    /// `band=3,folddup=1,leaf=120,refiner=xla,engine=auto,seed=42`.
     pub fn parse(spec: &str) -> Result<Strategy> {
         let mut s = Strategy::default();
         for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
@@ -168,6 +212,18 @@ impl Strategy {
                 "rounds" => s.dist.matching_rounds = parse_usize(v)?,
                 "maxband" => s.dist.max_centralized_band = parse_usize(v)?,
                 "sweeps" => s.dist.diffusion_sweeps = parse_usize(v)?,
+                "engine" => {
+                    s.dist.band_engine = match v {
+                        "auto" => BandEngine::Auto,
+                        "cpu" => BandEngine::Cpu,
+                        "xla" => BandEngine::Xla,
+                        _ => {
+                            return Err(Error::InvalidStrategy(format!(
+                                "unknown engine {v} (auto|cpu|xla)"
+                            )))
+                        }
+                    }
+                }
                 "refiner" => {
                     s.refiner = match v {
                         "fm" => RefinerKind::Fm,
@@ -256,6 +312,19 @@ mod tests {
         assert_eq!(s.dist.max_centralized_band, 500);
         assert_eq!(s.dist.diffusion_sweeps, 12);
         assert!(Strategy::parse("sweeps=0").is_err());
+    }
+
+    #[test]
+    fn parse_band_engine_knob() {
+        assert_eq!(Strategy::default().dist.band_engine, BandEngine::Auto);
+        for (spec, want) in [
+            ("engine=auto", BandEngine::Auto),
+            ("engine=cpu", BandEngine::Cpu),
+            ("engine=xla", BandEngine::Xla),
+        ] {
+            assert_eq!(Strategy::parse(spec).unwrap().dist.band_engine, want);
+        }
+        assert!(Strategy::parse("engine=gpuonly").is_err());
     }
 
     #[test]

@@ -200,7 +200,7 @@ fn prop_dist_diffusion_refinement_never_worse_than_projection() {
             let refiner = FmRefiner::default();
             let rng = Rng::new(strat.seed);
             let mem = MemTracker::new();
-            band_refine_dist(&c, &dg, &mut part, &strat, &refiner, &rng, &mem);
+            band_refine_dist(&c, &dg, &mut part, &strat, &refiner, None, &rng, &mem);
             let valid = dist_validate_separator(&c, &dg, &part);
             let sep_now = part.iter().filter(|&&x| x == SEP).count() as i64;
             (valid, sep_now)
@@ -215,6 +215,56 @@ fn prop_dist_diffusion_refinement_never_worse_than_projection() {
             "seed {seed} p={p} maxband={maxband}: separator grew {sep_after} > {sep_before}"
         );
         assert!(sep_after > 0, "seed {seed} p={p}: separator vanished");
+    }
+}
+
+#[test]
+fn prop_engine_dispatch_stub_fallback_matches_cpu_sweeps() {
+    // The engine-dispatch ladder under the offline `xla-stub`: no
+    // artifacts can load, so the dispatcher must fall back to the CPU
+    // sweeps under *every* engine setting and produce labels identical
+    // to calling `diffuse_band_dist` directly — for random graphs,
+    // seeds and rank counts.
+    use ptscotch::dist::dband::{band_distances, extract_dband};
+    use ptscotch::dist::ddiffusion::{
+        diffuse_band_dist, diffuse_band_dist_engine, DIST_DIFFUSION_DAMPING,
+    };
+    use ptscotch::strategy::BandEngine;
+
+    for (seed, p) in [(0u64, 2usize), (1, 3), (2, 4), (3, 5)] {
+        // A valid projected separator on a random graph, computed
+        // sequentially and block-distributed like the pipeline does.
+        let n = 300 + (seed as usize * 61) % 200;
+        let g = random_graph(seed, n, n / 2);
+        let mut rng = Rng::new(seed ^ 0xD15);
+        let s = multilevel_separator(&g, &SepStrategy::default(), &FmRefiner::default(), &mut rng);
+        if s.sep_count() == 0 {
+            continue;
+        }
+        let ga = Arc::new(g);
+        let proj = Arc::new(s.part);
+        for engine in [BandEngine::Auto, BandEngine::Cpu, BandEngine::Xla] {
+            let g = ga.clone();
+            let proj = proj.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| proj[dg.glb(v) as usize])
+                    .collect();
+                let dist = band_distances(&c, &dg, &part, 3);
+                let band = extract_dband(&c, &dg, &part, &dist);
+                let want = diffuse_band_dist(&c, &band, 16, DIST_DIFFUSION_DAMPING);
+                // No runtime handle exists offline — exactly what the
+                // coordinator passes when artifacts fail to load.
+                let (got, used_xla) =
+                    diffuse_band_dist_engine(&c, &band, 16, DIST_DIFFUSION_DAMPING, engine, None);
+                !used_xla && got == want
+            });
+            assert!(
+                ok.iter().all(|&x| x),
+                "seed {seed} p={p} engine={engine:?}: dispatch diverged from CPU sweeps"
+            );
+        }
     }
 }
 
@@ -246,7 +296,8 @@ fn prop_distributed_separator_valid_across_p() {
             let refiner = FmRefiner::default();
             let rng = Rng::new(strat.seed);
             let mem = ptscotch::comm::MemTracker::new();
-            let part = ptscotch::dist::dsep::dist_separator(&c, &dg, &strat, &refiner, &rng, &mem);
+            let part =
+                ptscotch::dist::dsep::dist_separator(&c, &dg, &strat, &refiner, None, &rng, &mem);
             dist_validate_separator(&c, &dg, &part)
         });
         assert!(ok.iter().all(|&x| x), "seed {seed} p={p}");
