@@ -37,10 +37,13 @@ bench:
 	cargo bench
 
 # Quick pass over the profile bench only (seconds; used by `check`/CI),
-# swept over both band-engine settings so the dispatch path stays green.
+# swept over both band-engine settings so the dispatch path stays green,
+# plus one `--json` run over both engines that regenerates the
+# machine-readable perf trajectory in bench_out/BENCH_PR4.json.
 bench-smoke:
 	cargo bench --bench perf_profile -- --smoke --engine cpu
 	cargo bench --bench perf_profile -- --smoke --engine xla
+	cargo bench --bench perf_profile -- --smoke --json
 
 clean:
 	rm -rf artifacts bench_out target

@@ -62,7 +62,24 @@ def diffusion_steps(x, fixed_mask, fixed_vals, nbr, w):
 
 
 def minplus_step(dist, nbr, w):
-    """One BFS/min-plus relaxation (L2 model around the L1 kernel)."""
+    """One BFS/min-plus relaxation (L2 model around the L1 kernel).
+
+    Semantics contract (pinned on the Rust side by
+    ``runtime::ell::ell_minplus_reference`` and consumed per rank by
+    ``dist::dband::bfs_band_dist_engine``):
+      * ``out[v] = min(dist[v], min over unpadded lanes of
+        dist[nbr[v,k]] + 1)`` — hop counts: the ``+1`` is per arc
+        regardless of weight; ``w > 0`` only gates padding;
+      * rows packed **empty** (all weights 0) keep their value — that is
+        how the distributed band BFS treats ghost rows as fixed boundary
+        distances between halo exchanges: each rank packs its slice as
+        ``[local rows | ghost rows]`` (``runtime::pack_ell_dist``), runs
+        several fused relaxations per call, and re-fills the ghost slots
+        from a fresh halo exchange between calls;
+      * unreached distances are ``3.0e38`` (≈ +inf, and ``+ 1.0`` is a
+        no-op at f32 precision, so relaxation through an unreached
+        neighbor can never win the min).
+    """
     return (ell_spmv.ell_minplus(dist, nbr, w),)
 
 

@@ -2,11 +2,13 @@
 //!
 //! Times the individual L3 phases (coarsening, initial separator, FM,
 //! band extraction, projection, minimum degree, symbolic evaluation) on
-//! a mid-size 3D mesh, the distributed band refinement under both band
-//! engines (`--engine cpu|xla` pins one; see EXPERIMENTS.md §Perf.1),
-//! plus the XLA (L1/L2) execution path when artifacts are present.
-//! Used to drive and document the optimization log in EXPERIMENTS.md
-//! §Perf.
+//! a mid-size 3D mesh, the distributed band BFS and band refinement
+//! under both band engines (`--engine cpu|xla` pins one; see
+//! EXPERIMENTS.md §Perf.1) with their bytes/messages on the wire, plus
+//! the XLA (L1/L2) execution path when artifacts are present. `--json`
+//! additionally writes the whole profile to `bench_out/BENCH_PR4.json`
+//! (run by the CI bench-smoke step). Used to drive and document the
+//! optimization log in EXPERIMENTS.md §Perf.
 
 #[path = "common.rs"]
 mod common;
@@ -23,10 +25,11 @@ use ptscotch::sep::fm::{fm_refine, FmParams};
 use ptscotch::sep::initial::greedy_graph_growing;
 use ptscotch::sep::{multilevel_separator, FmRefiner};
 use ptscotch::strategy::{SepStrategy, Strategy};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// Value of a `--engine <e>` / `--engine=<e>` argument, selecting which
-/// band engine(s) the distributed-band profile row runs under (the CI
+/// band engine(s) the distributed-band profile rows run under (the CI
 /// bench-smoke step sweeps both settings in separate invocations).
 fn engine_arg() -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
@@ -39,19 +42,78 @@ fn engine_arg() -> Option<String> {
         })
 }
 
+/// `--json` mode: also write every profiled row (wallclock plus, for
+/// the distributed phases, bytes/messages on the wire) to
+/// `bench_out/BENCH_PR4.json` — the machine-readable perf trajectory
+/// the EXPERIMENTS.md BENCH log points at. CI runs this in the
+/// bench-smoke step so the file regenerates on every push.
+fn json_mode() -> bool {
+    std::env::args().any(|a| a == "--json")
+}
+
+/// One profiled phase: wallclock plus the traffic counters of the rank
+/// fleet (zero for sequential phases).
+struct Row {
+    phase: String,
+    ms: f64,
+    bytes_sent: u64,
+    msgs_sent: u64,
+}
+
+/// Rows accumulated for `--json` (the bench is single-threaded; the
+/// mutex only satisfies `static`).
+static ROWS: Mutex<Vec<Row>> = Mutex::new(Vec::new());
+
+fn record(name: &str, ms: f64, bytes_sent: u64, msgs_sent: u64) {
+    println!("{name:<34} {:>10.2} ms", ms);
+    common::csv_row("perf_profile.csv", "phase,ms", &format!("{name},{ms:.4}"));
+    ROWS.lock().unwrap().push(Row {
+        phase: name.to_string(),
+        ms,
+        bytes_sent,
+        msgs_sent,
+    });
+}
+
 fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
     let t0 = Instant::now();
     for _ in 0..reps {
         std::hint::black_box(f());
     }
     let dt = t0.elapsed().as_secs_f64() / reps as f64;
-    println!("{name:<34} {:>10.2} ms", dt * 1e3);
-    common::csv_row(
-        "perf_profile.csv",
-        "phase,ms",
-        &format!("{name},{:.4}", dt * 1e3),
-    );
+    record(name, dt * 1e3, 0, 0);
     dt
+}
+
+/// Serialize the accumulated rows as `bench_out/BENCH_PR4.json`. Phase
+/// names contain no quotes or backslashes, so the literal embedding is
+/// valid JSON.
+fn write_json(smoke: bool, scale: usize) {
+    let rows = ROWS.lock().unwrap();
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"perf_profile\",\n");
+    s.push_str(&format!("  \"smoke\": {smoke},\n"));
+    s.push_str(&format!("  \"scale\": {scale},\n"));
+    s.push_str(&format!("  \"unix_time\": {unix_time},\n"));
+    s.push_str("  \"phases\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"ms\": {:.4}, \"bytes_sent\": {}, \
+             \"msgs_sent\": {}}}{sep}\n",
+            r.phase, r.ms, r.bytes_sent, r.msgs_sent
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let dir = std::path::Path::new("bench_out");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join("BENCH_PR4.json");
+    std::fs::write(&path, s).expect("write BENCH_PR4.json");
+    println!("\nwrote {}", path.display());
 }
 
 fn main() {
@@ -122,14 +184,68 @@ fn main() {
         let (nx, ny) = if smoke { (16usize, 16usize) } else { (64 * scale, 64 * scale) };
         let g2 = Arc::new(generators::grid2d(nx, ny));
         let proj = Arc::new(generators::column_separator_part(nx, ny, nx / 2, 2));
+        // Construction baseline (distribution + HaloPlan want-list
+        // round), measured as its own row so the bfs/refine rows below
+        // can report the traffic of their phase alone — the byte/msg
+        // subtraction is exact because construction is deterministic.
+        let (build_ms, build_bytes, build_msgs) = {
+            let g2 = g2.clone();
+            let t0 = Instant::now();
+            let (res, stats) = comm::run(4, move |c| {
+                use ptscotch::dist::dgraph::DGraph;
+                DGraph::from_global(&c, &g2).nloc()
+            });
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            std::hint::black_box(res.iter().sum::<usize>());
+            record("dist graph build (p=4)", ms, stats.total_bytes(), stats.total_msgs());
+            (ms, stats.total_bytes(), stats.total_msgs())
+        };
         for eng in &engines {
             let strat = Strategy::parse(&format!("maxband=8,sweeps=16,engine={eng}")).unwrap();
-            time(&format!("dist band refine (p=4, engine={eng})"), 1, || {
+            // Band BFS alone (the frontier / fused min-plus engine):
+            // timed with its traffic, which the plan-based halo keeps to
+            // one data alltoallv (or sparse frontier exchange) per level.
+            {
                 let g2 = g2.clone();
                 let proj = proj.clone();
-                let strat = strat.clone();
+                let strat2 = strat.clone();
                 let rt = band_rt.clone();
-                let (res, _) = comm::run(4, move |c| {
+                let t0 = Instant::now();
+                let (res, stats) = comm::run(4, move |c| {
+                    use ptscotch::dist::dband::bfs_band_dist_engine;
+                    use ptscotch::dist::dgraph::DGraph;
+                    let dg = DGraph::from_global(&c, &g2);
+                    let part: Vec<u8> = (0..dg.nloc())
+                        .map(|v| proj[dg.glb(v) as usize])
+                        .collect();
+                    let (dist, _) = bfs_band_dist_engine(
+                        &c,
+                        &dg,
+                        &part,
+                        3,
+                        strat2.dist.band_engine,
+                        rt.as_ref(),
+                    );
+                    dist.iter().filter(|&&x| x != u32::MAX).count()
+                });
+                let dt = t0.elapsed().as_secs_f64();
+                std::hint::black_box(res.iter().sum::<usize>());
+                record(
+                    &format!("dist band bfs (p=4, engine={eng})"),
+                    (dt * 1e3 - build_ms).max(0.0),
+                    stats.total_bytes().saturating_sub(build_bytes),
+                    stats.total_msgs().saturating_sub(build_msgs),
+                );
+            }
+            // Full oversized-band refinement — the scalable path of
+            // `dist::dsep::band_refine_dist` (maxband forced tiny).
+            {
+                let g2 = g2.clone();
+                let proj = proj.clone();
+                let strat2 = strat.clone();
+                let rt = band_rt.clone();
+                let t0 = Instant::now();
+                let (res, stats) = comm::run(4, move |c| {
                     use ptscotch::dist::dgraph::DGraph;
                     use ptscotch::sep::SEP;
                     let dg = DGraph::from_global(&c, &g2);
@@ -143,7 +259,7 @@ fn main() {
                         &c,
                         &dg,
                         &mut part,
-                        &strat,
+                        &strat2,
                         &refiner,
                         rt.as_ref(),
                         &rng,
@@ -151,8 +267,15 @@ fn main() {
                     );
                     part.iter().filter(|&&x| x == SEP).count()
                 });
-                res.iter().sum::<usize>()
-            });
+                let dt = t0.elapsed().as_secs_f64();
+                std::hint::black_box(res.iter().sum::<usize>());
+                record(
+                    &format!("dist band refine (p=4, engine={eng})"),
+                    (dt * 1e3 - build_ms).max(0.0),
+                    stats.total_bytes().saturating_sub(build_bytes),
+                    stats.total_msgs().saturating_sub(build_msgs),
+                );
+            }
         }
         if band_rt.is_none() && engines.iter().any(|e| e == "xla") {
             println!("   (no artifacts loaded: engine=xla measured the CPU fallback)");
@@ -207,5 +330,9 @@ fn main() {
                 }
             }
         }
+    }
+
+    if json_mode() {
+        write_json(smoke, scale);
     }
 }

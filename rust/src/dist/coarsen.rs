@@ -12,7 +12,6 @@
 
 use super::dgraph::DGraph;
 use crate::comm::Comm;
-use std::collections::BTreeMap;
 
 /// One distributed coarsening level: the coarse graph plus the mapping
 /// from fine local vertices to **global** coarse ids, used by the
@@ -113,8 +112,12 @@ pub fn coarsen_dist(comm: &Comm, dg: &DGraph, mate: &[u64]) -> DistCoarsening {
     let vin = comm.alltoallv(vbuf);
     let ein = comm.alltoallv(ebuf);
 
-    // 6. Aggregate on the owner: sum vertex weights, merge parallel
-    //    coarse arcs (collapsed fine edges accumulate weight).
+    // 6. Aggregate on the owner: sum vertex weights, then merge
+    //    parallel coarse arcs with one flat sort over all received
+    //    triples — runs of equal (src, dst) accumulate the collapsed
+    //    fine-edge weights. Same deterministic dst-ascending rows as
+    //    the per-vertex BTreeMaps this replaces, without the map
+    //    allocation per coarse vertex.
     let nc = (cvtx[comm.rank() + 1] - cbase) as usize;
     let mut vwgt = vec![0i64; nc];
     for b in &vin {
@@ -124,20 +127,22 @@ pub fn coarsen_dist(comm: &Comm, dg: &DGraph, mate: &[u64]) -> DistCoarsening {
             i += 2;
         }
     }
-    let mut nbrs: Vec<BTreeMap<u64, i64>> = vec![BTreeMap::new(); nc];
+    let narcs: usize = ein.iter().map(|b| b.len() / 3).sum();
+    let mut arcs: Vec<(u32, u64, i64)> = Vec::with_capacity(narcs);
     for b in &ein {
-        let mut i = 0usize;
-        while i < b.len() {
-            let (cv, cw, w) = (b[i], b[i + 1], b[i + 2] as i64);
-            *nbrs[(cv - cbase) as usize].entry(cw).or_insert(0) += w;
-            i += 3;
+        for t in b.chunks_exact(3) {
+            arcs.push(((t[0] - cbase) as u32, t[1], t[2] as i64));
         }
     }
-    let rows: Vec<Vec<(u64, i64)>> = nbrs
-        .into_iter()
-        .map(|m| m.into_iter().collect())
-        .collect();
-    let coarse = DGraph::from_rows(cvtx, comm.rank(), vwgt, rows);
+    arcs.sort_unstable_by_key(|&(s, d, _)| (s, d));
+    let mut rows: Vec<Vec<(u64, i64)>> = vec![Vec::new(); nc];
+    for &(s, d, w) in &arcs {
+        match rows[s as usize].last_mut() {
+            Some(last) if last.0 == d => last.1 += w,
+            _ => rows[s as usize].push((d, w)),
+        }
+    }
+    let coarse = DGraph::from_rows(comm, cvtx, vwgt, rows);
     DistCoarsening { coarse, fine2coarse }
 }
 
@@ -171,6 +176,27 @@ mod tests {
                 assert!(*nglb as usize >= 140 / 2, "p={p}: over-collapse");
             }
         }
+    }
+
+    #[test]
+    fn merged_rows_are_sorted_and_deduplicated() {
+        // The flat sort-then-merge must leave every coarse row strictly
+        // ascending in neighbor id (the order the BTreeMap merge it
+        // replaced produced) with parallel arcs fully accumulated.
+        let g = Arc::new(generators::irregular_mesh(12, 9, 11));
+        let (ok, _) = comm::run(3, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let mut rng = Rng::new(5).derive(c.global_rank() as u64);
+            let mate = parallel_match(&c, &dg, 5, &mut rng);
+            let dc = coarsen_dist(&c, &dg, &mate);
+            let cg = &dc.coarse;
+            (0..cg.nloc()).all(|v| {
+                let row = cg.neighbors_gst(v);
+                let ids: Vec<u64> = row.iter().map(|&a| cg.gst_to_glb(a)).collect();
+                ids.windows(2).all(|w| w[0] < w[1])
+            })
+        });
+        assert!(ok.iter().all(|&x| x));
     }
 
     #[test]

@@ -8,8 +8,17 @@
 //! refine it in place without ever centralizing:
 //!
 //! * band membership comes from a distributed multi-source BFS from the
-//!   separator, one halo exchange per level ([`band_distances`] — the
-//!   distributed analog of [`crate::graph::Graph::multi_source_bfs`]);
+//!   separator ([`band_distances`] — the distributed analog of
+//!   [`crate::graph::Graph::multi_source_bfs`]), **frontier-driven**:
+//!   each level exchanges only the frontier's boundary membership
+//!   ([`DGraph::halo_frontier`], a few bytes per crossing vertex) and
+//!   relaxes only frontier neighbors, instead of shipping and
+//!   rescanning the full distance vector. [`bfs_band_dist_engine`]
+//!   alternatively runs the levels as fused min-plus relaxations of the
+//!   AOT-compiled artifact on each rank's packed slice
+//!   ([`crate::runtime::pack_ell_dist`]), with the same collectively
+//!   agreed verdict and CPU fallback ladder as the diffusion engine
+//!   dispatch (DESIGN.md §4.2);
 //! * survivors are renumbered into a fresh contiguous global range by
 //!   an exclusive scan of per-rank counts, exactly like
 //!   [`crate::dist::induce::induce_dist`];
@@ -19,9 +28,12 @@
 //!   construction as the sequential [`crate::sep::band::extract_band`],
 //!   distributed.
 
+use super::ddiffusion::{agree_engine, AUTO_XLA_MIN_BAND};
 use super::dgraph::DGraph;
 use crate::comm::Comm;
+use crate::runtime::{ell_minplus_reference, pack_ell_dist, EllPacked, SharedRuntime, MINPLUS_INF};
 use crate::sep::{P0, P1, SEP};
+use crate::strategy::BandEngine;
 
 /// A distributed band graph: the band as a [`DGraph`] whose last two
 /// global vertices are the locked anchors, plus the bookkeeping needed
@@ -70,8 +82,15 @@ impl DistBand {
 }
 
 /// Distributed multi-source BFS from the separator of `part`, capped at
-/// `width` levels: one halo exchange per level. Returns one distance
-/// per local vertex (`u32::MAX` outside the band). Collective.
+/// `width` levels — the scalar CPU engine, **frontier-driven**: each
+/// level exchanges only the frontier membership of boundary vertices
+/// ([`DGraph::halo_frontier`], one `u32` per crossing vertex instead of
+/// one value per ghost) and relaxes only the neighbors of frontier
+/// vertices, local and ghost, through a ghost→local reverse adjacency
+/// built once per call. No full-vector clone, no full-row rescan per
+/// level. Returns one distance per local vertex (`u32::MAX` outside the
+/// band), identical to the level-synchronous scan it replaces.
+/// Collective.
 pub fn band_distances(comm: &Comm, dg: &DGraph, part: &[u8], width: u32) -> Vec<u32> {
     let nloc = dg.nloc();
     debug_assert_eq!(part.len(), nloc);
@@ -79,29 +98,231 @@ pub fn band_distances(comm: &Comm, dg: &DGraph, part: &[u8], width: u32) -> Vec<
         .iter()
         .map(|&x| if x == SEP { 0 } else { u32::MAX })
         .collect();
-    for _ in 0..width {
-        let ghost_dist = dg.halo_exchange(comm, &dist);
-        let prev = dist.clone();
-        for v in 0..nloc {
-            if prev[v] != u32::MAX {
-                continue;
-            }
-            let mut best = u32::MAX;
-            for &a in dg.neighbors_gst(v) {
-                let a = a as usize;
-                let da = if a < nloc {
-                    prev[a]
-                } else {
-                    ghost_dist[a - nloc]
-                };
-                if da != u32::MAX && da + 1 < best {
-                    best = da + 1;
-                }
-            }
-            dist[v] = best;
+
+    // Ghost→local reverse adjacency (CSR over ghost slots): the local
+    // vertices a remote frontier vertex can relax. Built in one O(m)
+    // pass; ghost rows themselves store no adjacency.
+    let ngst = dg.ghosts.len();
+    let mut rev_off = vec![0usize; ngst + 1];
+    for &a in &dg.adj {
+        if a as usize >= nloc {
+            rev_off[a as usize - nloc + 1] += 1;
         }
     }
+    for i in 0..ngst {
+        rev_off[i + 1] += rev_off[i];
+    }
+    let mut rev = vec![0u32; rev_off[ngst]];
+    let mut cursor = rev_off.clone();
+    for v in 0..nloc {
+        for &a in dg.neighbors_gst(v) {
+            let a = a as usize;
+            if a >= nloc {
+                rev[cursor[a - nloc]] = v as u32;
+                cursor[a - nloc] += 1;
+            }
+        }
+    }
+
+    let mut frontier: Vec<u32> = (0..nloc as u32).filter(|&v| dist[v as usize] == 0).collect();
+    let mut in_frontier = vec![false; nloc];
+    for level in 0..width {
+        // Publish this level's frontier; learn which ghosts are remote
+        // frontier. Every rank runs all `width` levels even with an
+        // empty frontier — the exchange is collective.
+        for &v in &frontier {
+            in_frontier[v as usize] = true;
+        }
+        let ghost_front = dg.halo_frontier(comm, &in_frontier);
+        for &v in &frontier {
+            in_frontier[v as usize] = false;
+        }
+        let mut next: Vec<u32> = Vec::new();
+        for &v in &frontier {
+            for &a in dg.neighbors_gst(v as usize) {
+                let a = a as usize;
+                if a < nloc && dist[a] == u32::MAX {
+                    dist[a] = level + 1;
+                    next.push(a as u32);
+                }
+            }
+        }
+        for &gs in &ghost_front {
+            for &v in &rev[rev_off[gs as usize]..rev_off[gs as usize + 1]] {
+                if dist[v as usize] == u32::MAX {
+                    dist[v as usize] = level + 1;
+                    next.push(v);
+                }
+            }
+        }
+        frontier = next;
+    }
     dist
+}
+
+/// One rank's slice of the parent graph packed for the min-plus
+/// artifact: the ELL block plus the `f32` distance vector laid out
+/// `[local | ghost | padding]`. Ghost rows are packed empty, so the
+/// kernel leaves them at the boundary values `refresh_ghosts` re-fills
+/// from each halo exchange. Shared by the XLA execution path and the
+/// offline equivalence test, so the production assembly is exercised
+/// without artifacts.
+struct MinPlusSlice {
+    /// The `(n, d)` ELL block ([`pack_ell_dist`], no clamped rows —
+    /// min-plus has no anchors; empty rows keep their value natively).
+    ell: EllPacked,
+    /// Distances, `[local | ghosts | padding]`; [`MINPLUS_INF`] marks
+    /// unreached.
+    x: Vec<f32>,
+}
+
+/// Pack this rank's slice for fused min-plus levels: separator vertices
+/// at distance 0, everything else (ghosts and padding included) at
+/// [`MINPLUS_INF`]. Returns `None` when the slice fits no `(n, d)`
+/// block — the caller then falls back to the CPU frontier BFS on
+/// **every** rank (the fit verdict is agreed collectively).
+fn pack_bfs_slice(dg: &DGraph, part: &[u8], n: usize, d: usize) -> Option<MinPlusSlice> {
+    let ell = pack_ell_dist(dg, n, d, &[])?;
+    let mut x = vec![MINPLUS_INF; n];
+    for (v, &pv) in part.iter().enumerate() {
+        if pv == SEP {
+            x[v] = 0.0;
+        }
+    }
+    Some(MinPlusSlice { ell, x })
+}
+
+impl MinPlusSlice {
+    /// Write freshly exchanged ghost boundary distances into the slots
+    /// `nloc..nloc + ngst`.
+    fn refresh_ghosts(&mut self, nloc: usize, ghost_x: &[f32]) {
+        self.x[nloc..nloc + ghost_x.len()].copy_from_slice(ghost_x);
+    }
+
+    /// Freeze relaxation beyond the band: computed values past `width`
+    /// go back to [`MINPLUS_INF`] on the local slots. Distances ≤
+    /// `width` are unaffected (a shortest path to a vertex at distance
+    /// ≤ width only passes through smaller distances), while deep
+    /// local propagation — which fused levels would otherwise run past
+    /// the cap — stops changing, so the fixpoint test below converges
+    /// within `width` exchange rounds.
+    fn clamp_beyond(&mut self, nloc: usize, width: u32) {
+        for xv in &mut self.x[..nloc] {
+            if *xv > width as f32 {
+                *xv = MINPLUS_INF;
+            }
+        }
+    }
+}
+
+/// Convert a converged min-plus field back to the BFS contract:
+/// exact distances ≤ `width`, `u32::MAX` outside the band.
+fn minplus_to_dist(x: &[f32], width: u32) -> Vec<u32> {
+    x.iter()
+        .map(|&xv| if xv <= width as f32 { xv as u32 } else { u32::MAX })
+        .collect()
+}
+
+/// Per-rank XLA execution of the band BFS (DESIGN.md §4.2 applied to
+/// the min-plus kernel): pack this rank's slice of the parent graph
+/// into the smallest fitting min-plus bucket, then alternate halo
+/// exchanges of the distance field with `width` fused min-plus levels
+/// per call, ghost rows acting as fixed boundary values. Each exchange
+/// round guarantees at least one synchronous BFS level of global
+/// progress, so `width` rounds suffice for exactness; the
+/// `clamp_beyond` freeze lets the collectively agreed fixpoint test
+/// stop earlier when the band converges before that.
+/// Returns `None` — on **every** rank, the fit verdict is collective —
+/// when some rank's slice fits no bucket. Collective.
+fn xla_levels(
+    comm: &Comm,
+    dg: &DGraph,
+    part: &[u8],
+    width: u32,
+    rt: &SharedRuntime,
+) -> Option<Vec<u32>> {
+    let nloc = dg.nloc();
+    let ngst = dg.ghosts.len();
+    let d_real = (0..nloc)
+        .map(|v| dg.neighbors_gst(v).len())
+        .max()
+        .unwrap_or(0);
+    // Never hold the runtime lock across a collective: rank threads
+    // share one mutex, and a holder waiting in an allreduce would
+    // deadlock against a peer waiting on the lock.
+    let bucket = {
+        let guard = rt.lock().unwrap();
+        guard.0.fit_minplus(nloc + ngst, d_real)
+    };
+    let packed = bucket.and_then(|b| pack_bfs_slice(dg, part, b.n, b.d));
+    let fits = comm.allreduce(packed.is_some(), |a, b| a && b);
+    let (bucket, mut s) = match (fits, bucket, packed) {
+        (true, Some(b), Some(s)) => (b, s),
+        _ => return None, // some rank missed every bucket → CPU everywhere
+    };
+
+    for _ in 0..width {
+        let ghost_x = dg.halo_exchange(comm, &s.x[..nloc]);
+        s.refresh_ghosts(nloc, &ghost_x);
+        let before = s.x[..nloc].to_vec();
+        for _ in 0..width {
+            let step = {
+                let guard = rt.lock().unwrap();
+                guard.0.minplus_step(bucket, &s.x, &s.ell)
+            };
+            s.x = match step {
+                Ok(next) => next,
+                // A mid-run PJRT failure must not desynchronize the
+                // agreed exchange cadence — substitute the
+                // bit-equivalent pure-Rust reference of the same call
+                // and stay in lockstep.
+                Err(_) => ell_minplus_reference(&s.ell, &s.x),
+            };
+        }
+        s.clamp_beyond(nloc, width);
+        // Collective fixpoint test: when no rank changed a (clamped)
+        // local value this round, another exchange would reproduce the
+        // same inputs — the capped region is exact, stop early.
+        let changed = s.x[..nloc] != before[..];
+        if !comm.allreduce(changed, |a, b| a || b) {
+            break;
+        }
+    }
+    Some(minplus_to_dist(&s.x[..nloc], width))
+}
+
+/// Engine-dispatching variant of [`band_distances`]: run the BFS levels
+/// on the engine `engine` selects, falling back down the same ladder as
+/// the diffusion dispatch (per-rank fused min-plus artifact → CPU
+/// frontier BFS) whenever the runtime is absent or some rank's slice
+/// fits no min-plus bucket, with the verdict agreed by allreduce before
+/// any engine-specific collective runs
+/// ([`super::ddiffusion::diffuse_band_dist_engine`]'s contract).
+/// [`BandEngine::Auto`] gates on this rank's packed slice size (local
+/// plus ghost rows) reaching [`AUTO_XLA_MIN_BAND`] — one bucket row
+/// block, below which per-call dispatch overhead dominates; the
+/// allreduce inside [`super::ddiffusion::agree_engine`] turns the
+/// per-rank verdicts into "every rank's slice is worth it", mirroring
+/// how the bucket-fit verdict is agreed. Returns the distances plus
+/// whether the XLA engine actually executed; the distances are
+/// identical to [`band_distances`] on every path. Collective.
+pub fn bfs_band_dist_engine(
+    comm: &Comm,
+    dg: &DGraph,
+    part: &[u8],
+    width: u32,
+    engine: BandEngine,
+    rt: Option<&SharedRuntime>,
+) -> (Vec<u32>, bool) {
+    let slice_rows = (dg.nloc() + dg.ghosts.len()) as u64;
+    let use_xla = agree_engine(comm, engine, rt.is_some(), slice_rows >= AUTO_XLA_MIN_BAND);
+    if use_xla {
+        if let Some(d) = xla_levels(comm, dg, part, width, rt.expect("agreed runtime")) {
+            return (d, true);
+        }
+        // Collective fit miss: every rank got None; fall through to CPU.
+    }
+    (band_distances(comm, dg, part, width), false)
 }
 
 /// Extract the distributed band graph of vertices whose `dist` (from
@@ -221,7 +442,7 @@ pub fn extract_dband(comm: &Comm, dg: &DGraph, part: &[u8], dist: &[u32]) -> Dis
     }
 
     DistBand {
-        dg: DGraph::from_rows(vtx, comm.rank(), vwgt, rows),
+        dg: DGraph::from_rows(comm, vtx, vwgt, rows),
         orig_local: kept,
         part: band_part,
         band_nglb,
@@ -266,6 +487,81 @@ mod tests {
                 for (i, &di) in d.iter().enumerate() {
                     assert_eq!(di, want[*base as usize + i], "p={p} v={}", *base as usize + i);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_engine_dispatch_without_runtime_matches_frontier_bfs() {
+        // Offline (xla-stub / no artifacts) there is no runtime handle:
+        // every engine setting must take the CPU frontier BFS and
+        // produce distances identical to calling `band_distances`
+        // directly, with the verdict agreed by allreduce.
+        let (nx, ny) = (15, 13);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let full = thick_column_part(nx, ny);
+        for p in [2usize, 3] {
+            for engine in [BandEngine::Auto, BandEngine::Cpu, BandEngine::Xla] {
+                let g = g.clone();
+                let full = full.clone();
+                let (ok, _) = comm::run(p, move |c| {
+                    let dg = DGraph::from_global(&c, &g);
+                    let part: Vec<u8> = (0..dg.nloc())
+                        .map(|v| full[dg.glb(v) as usize])
+                        .collect();
+                    let want = band_distances(&c, &dg, &part, 3);
+                    let (got, used_xla) = bfs_band_dist_engine(&c, &dg, &part, 3, engine, None);
+                    !used_xla && got == want
+                });
+                assert!(ok.iter().all(|&x| x), "p={p} engine={engine:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_minplus_reference_matches_frontier_bfs() {
+        // The numeric core of the per-rank XLA BFS path, without
+        // artifacts: the *production* slice assembly (`pack_bfs_slice`
+        // + `refresh_ghosts` + `clamp_beyond`, exactly what
+        // `xla_levels` runs) driven by the min-plus reference in the
+        // same exchange/fixpoint cadence must reproduce the CPU
+        // frontier BFS exactly.
+        let (nx, ny) = (17, 12);
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let full = thick_column_part(nx, ny);
+        for p in [1usize, 2, 4] {
+            for width in [1u32, 2, 3] {
+                let g = g.clone();
+                let full = full.clone();
+                let (ok, _) = comm::run(p, move |c| {
+                    let dg = DGraph::from_global(&c, &g);
+                    let part: Vec<u8> = (0..dg.nloc())
+                        .map(|v| full[dg.glb(v) as usize])
+                        .collect();
+                    let want = band_distances(&c, &dg, &part, width);
+                    let nloc = dg.nloc();
+                    let ngst = dg.ghosts.len();
+                    let d = (0..nloc)
+                        .map(|v| dg.neighbors_gst(v).len())
+                        .max()
+                        .unwrap_or(0);
+                    let mut s = pack_bfs_slice(&dg, &part, nloc + ngst + 2, d).unwrap();
+                    for _ in 0..width {
+                        let ghost_x = dg.halo_exchange(&c, &s.x[..nloc]);
+                        s.refresh_ghosts(nloc, &ghost_x);
+                        let before = s.x[..nloc].to_vec();
+                        for _ in 0..width {
+                            s.x = ell_minplus_reference(&s.ell, &s.x);
+                        }
+                        s.clamp_beyond(nloc, width);
+                        let changed = s.x[..nloc] != before[..];
+                        if !c.allreduce(changed, |a, b| a || b) {
+                            break;
+                        }
+                    }
+                    minplus_to_dist(&s.x[..nloc], width) == want
+                });
+                assert!(ok.iter().all(|&x| x), "p={p} width={width}");
             }
         }
     }

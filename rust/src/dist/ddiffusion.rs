@@ -45,11 +45,37 @@ use crate::strategy::BandEngine;
 /// (`python/compile/model.py::DAMPING`).
 pub const DIST_DIFFUSION_DAMPING: f32 = 0.95;
 
-/// Minimum global band size (non-anchor vertices) for which
-/// [`BandEngine::Auto`] dispatches to the XLA kernel: one bucket row
-/// block. Below it, per-call dispatch overhead dominates the fused
-/// sweeps, so Auto keeps the CPU path; `engine=xla` overrides.
+/// Minimum problem size for which [`BandEngine::Auto`] dispatches to
+/// the XLA kernel: one bucket row block. Below it, per-call dispatch
+/// overhead dominates the fused work, so Auto keeps the CPU path;
+/// `engine=xla` overrides. The diffusion dispatch measures the global
+/// band (non-anchor vertices); the BFS dispatch
+/// ([`crate::dist::dband::bfs_band_dist_engine`]) measures each rank's
+/// packed slice (local + ghost rows), every rank having to clear the
+/// bar for the collective verdict.
 pub const AUTO_XLA_MIN_BAND: u64 = 256;
+
+/// Collectively agree whether the XLA engine runs: `xla_ready` is this
+/// rank's "a runtime is loaded (and any artifact-baked constants
+/// match)", `auto_size_ok` the problem-size gate [`BandEngine::Auto`]
+/// applies on top of it. The allreduce makes the verdict identical on
+/// every rank, so no engine-specific collective can ever split the
+/// exchange cadence — the rule shared by
+/// [`diffuse_band_dist_engine`] and
+/// [`crate::dist::dband::bfs_band_dist_engine`]. Collective.
+pub(crate) fn agree_engine(
+    comm: &Comm,
+    engine: BandEngine,
+    xla_ready: bool,
+    auto_size_ok: bool,
+) -> bool {
+    let want = match engine {
+        BandEngine::Cpu => false,
+        BandEngine::Xla => xla_ready,
+        BandEngine::Auto => xla_ready && auto_size_ok,
+    };
+    comm.allreduce(want, |a, b| a && b)
+}
 
 /// Global `(separator weight, imbalance)` quality key of a distributed
 /// part labeling — the distributed analog of
@@ -309,16 +335,14 @@ pub fn diffuse_band_dist_engine(
 ) -> (Vec<u8>, bool) {
     // The artifacts bake DIST_DIFFUSION_DAMPING in; a caller sweeping a
     // different damping must get the CPU engine it can parameterize.
-    let damping_ok = damping == DIST_DIFFUSION_DAMPING;
-    let want_xla = damping_ok
-        && match engine {
-            BandEngine::Cpu => false,
-            BandEngine::Xla => rt.is_some(),
-            BandEngine::Auto => rt.is_some() && band.band_nglb >= AUTO_XLA_MIN_BAND,
-        };
     // Collective agreement (a rank could in principle lack the runtime
     // handle others hold — never let the sweep cadence diverge).
-    let use_xla = comm.allreduce(want_xla, |a, b| a && b);
+    let use_xla = agree_engine(
+        comm,
+        engine,
+        rt.is_some() && damping == DIST_DIFFUSION_DAMPING,
+        band.band_nglb >= AUTO_XLA_MIN_BAND,
+    );
     if use_xla {
         if let Some(x) = xla_sweeps(comm, band, sweeps, rt.expect("agreed runtime")) {
             return (recover_separator(comm, band, &x), true);

@@ -11,12 +11,112 @@
 //! arbitrary remote reads (used by uncoarsening projection, §3.2) are
 //! [`DGraph::fetch_at`].
 //!
+//! The halo update is a *persistent* communication structure: which of a
+//! rank's vertices are ghosted on which neighbor is fixed the moment
+//! `ghosts`/`vtxdist` are, so the exchange schedule ([`HaloPlan`]) is
+//! derived **once per graph** — one collective want-list round at
+//! construction — and every subsequent [`DGraph::halo_exchange`] is a
+//! single data `alltoallv` with no per-call request wave and no per-call
+//! want-list allocation (DESIGN.md §3.1).
+//!
 //! All collective methods must be called by every rank of the
 //! communicator the graph lives on, in the same order — the same
 //! contract as the MPI code they model.
 
 use crate::comm::Comm;
 use crate::graph::Graph;
+
+/// Precomputed halo-exchange schedule of one [`DGraph`] (DESIGN.md
+/// §3.1): for every peer rank, the local indices this rank must send
+/// (owner side) and the number of ghost slots it will receive (ghost
+/// side). Invariants:
+///
+/// * `send_idx[r]` lists this rank's local vertices ghosted on rank
+///   `r`, **in the order rank `r`'s ghost table lists them** — ghosts
+///   are sorted ascending and this rank's block is contiguous, so that
+///   order is ascending local index;
+/// * `recv_counts[r]` is the size of this rank's ghost sub-block owned
+///   by rank `r`; the blocks are contiguous and ascend with `r`, so
+///   concatenating the received vectors in rank order *is* the ghost
+///   order — no scatter pass needed;
+/// * ranks are those of the communicator the plan was built on; after a
+///   [`Comm::split`], a plan built through the parent communicator with
+///   the target-relative rank mapping (see `fold_half`) stays valid on
+///   the sub-communicator, whose re-ranking is exactly that mapping.
+#[derive(Clone, Debug)]
+pub struct HaloPlan {
+    /// Per peer rank: local indices whose values this rank sends.
+    send_idx: Vec<Vec<u32>>,
+    /// Per peer rank: number of ghost values received (ghost sub-block
+    /// sizes, in rank order).
+    recv_counts: Vec<usize>,
+}
+
+impl HaloPlan {
+    /// Build the schedule with one collective want-list round: each
+    /// rank tells every owner which global ids it ghosts, and owners
+    /// record the matching local indices. `comm` spans the (possibly
+    /// larger) rank set actually communicating — graph rank `r` maps to
+    /// comm rank `start + r`, which is how `fold_half` builds plans for
+    /// a target sub-range through the parent communicator before the
+    /// `Comm::split` that re-ranks exactly along that mapping. Ranks
+    /// without a block of the graph (fold non-members) pass `graph:
+    /// None`, contribute empty want lists and get `None` back.
+    /// Collective over `comm`.
+    pub(crate) fn build(
+        comm: &Comm,
+        start: usize,
+        vtxdist: &[u64],
+        graph: Option<(usize, &[u64])>,
+    ) -> Option<HaloPlan> {
+        let t = vtxdist.len() - 1;
+        let p = comm.size();
+        debug_assert!(start + t <= p);
+        let mut want: Vec<Vec<u64>> = vec![Vec::new(); p];
+        let mut recv_counts = vec![0usize; t];
+        if let Some((_, ghosts)) = graph {
+            for &g in ghosts {
+                let o = vtxdist.partition_point(|&b| b <= g) - 1;
+                want[start + o].push(g);
+            }
+            for (r, c) in recv_counts.iter_mut().enumerate() {
+                *c = want[start + r].len();
+            }
+        }
+        let reqs = comm.alltoallv(want);
+        graph.map(|(rank, _)| {
+            let base = vtxdist[rank];
+            let send_idx = (0..t)
+                .map(|r| reqs[start + r].iter().map(|&g| (g - base) as u32).collect())
+                .collect();
+            HaloPlan {
+                send_idx,
+                recv_counts,
+            }
+        })
+    }
+
+    /// Local indices sent to rank `r`, in rank `r`'s ghost order.
+    #[inline]
+    pub fn send_indices(&self, r: usize) -> &[u32] {
+        &self.send_idx[r]
+    }
+
+    /// Number of ghost values received from rank `r`.
+    #[inline]
+    pub fn recv_count(&self, r: usize) -> usize {
+        self.recv_counts[r]
+    }
+
+    /// Approximate heap footprint of the schedule in bytes.
+    pub fn footprint_bytes(&self) -> usize {
+        self.send_idx
+            .iter()
+            .map(|v| v.len() * std::mem::size_of::<u32>())
+            .sum::<usize>()
+            + self.recv_counts.len() * std::mem::size_of::<usize>()
+    }
+}
 
 /// A distributed graph: one rank's block of a globally numbered CSR
 /// graph, plus the ghost table addressing remote neighbors.
@@ -47,6 +147,11 @@ pub struct DGraph {
     pub ewgt: Vec<i64>,
     /// Global ids of ghost vertices, sorted ascending.
     pub ghosts: Vec<u64>,
+    /// Persistent halo-exchange schedule. Always present on graphs
+    /// returned by the constructors; `Option` only stages construction
+    /// in `fold_half`, where the plan is built through the parent
+    /// communicator after assembly.
+    plan: Option<HaloPlan>,
 }
 
 impl DGraph {
@@ -98,6 +203,18 @@ impl DGraph {
         }
     }
 
+    /// The persistent halo-exchange schedule of this graph.
+    #[inline]
+    pub fn halo_plan(&self) -> &HaloPlan {
+        self.plan.as_ref().expect("halo plan built at construction")
+    }
+
+    /// Install the halo plan built for this graph (the `fold_half`
+    /// staging step; every other constructor builds it inline).
+    pub(crate) fn set_plan(&mut self, plan: HaloPlan) {
+        self.plan = Some(plan);
+    }
+
     /// Approximate heap footprint in bytes, for the per-rank memory
     /// tracking that reproduces Figures 10–11.
     pub fn footprint_bytes(&self) -> usize {
@@ -107,13 +224,33 @@ impl DGraph {
             + self.vwgt.len() * std::mem::size_of::<i64>()
             + self.ewgt.len() * std::mem::size_of::<i64>()
             + self.ghosts.len() * std::mem::size_of::<u64>()
+            + self.plan.as_ref().map_or(0, HaloPlan::footprint_bytes)
     }
 
     /// Assemble a `DGraph` from per-local-vertex rows of
-    /// `(neighbor global id, edge weight)` pairs. Builds the sorted
-    /// ghost table and converts rows to gst indexing. `vwgt.len()` must
-    /// equal the size of this rank's `vtxdist` block.
+    /// `(neighbor global id, edge weight)` pairs and build its halo
+    /// plan with the one collective want-list round of
+    /// [`HaloPlan::build`]. `vwgt.len()` must equal the size of this
+    /// rank's `vtxdist` block. Collective.
     pub(crate) fn from_rows(
+        comm: &Comm,
+        vtxdist: Vec<u64>,
+        vwgt: Vec<i64>,
+        rows: Vec<Vec<(u64, i64)>>,
+    ) -> DGraph {
+        debug_assert_eq!(comm.size() + 1, vtxdist.len());
+        let mut dg = DGraph::assemble(vtxdist, comm.rank(), vwgt, rows);
+        let plan = HaloPlan::build(comm, 0, &dg.vtxdist, Some((dg.rank, dg.ghosts.as_slice())))
+            .expect("every rank owns a block");
+        dg.set_plan(plan);
+        dg
+    }
+
+    /// The communication-free part of [`DGraph::from_rows`]: build the
+    /// ghost table and gst-indexed adjacency, leaving the halo plan
+    /// unset. `fold_half` uses this to stage target-member graphs
+    /// before the plan round on the parent communicator.
+    pub(crate) fn assemble(
         vtxdist: Vec<u64>,
         rank: usize,
         vwgt: Vec<i64>,
@@ -158,6 +295,7 @@ impl DGraph {
             vwgt,
             ewgt,
             ghosts,
+            plan: None,
         }
     }
 
@@ -181,40 +319,73 @@ impl DGraph {
                     .collect()
             })
             .collect();
-        DGraph::from_rows(vtxdist, rank, vwgt, rows)
+        DGraph::from_rows(comm, vtxdist, vwgt, rows)
     }
 
     /// Exchange one value per ghost vertex with the owners (§3.1's halo
     /// update). `vals` holds this rank's local values; the result is
-    /// parallel to [`DGraph::ghosts`]. Collective.
+    /// parallel to [`DGraph::ghosts`]. Runs on the precomputed
+    /// [`HaloPlan`]: exactly **one** data `alltoallv` per call — owners
+    /// already know what to send, so there is no request wave and no
+    /// per-call want-list allocation. Collective.
     pub fn halo_exchange<T: Clone + Send + 'static>(&self, comm: &Comm, vals: &[T]) -> Vec<T> {
         debug_assert_eq!(vals.len(), self.nloc());
-        let p = comm.size();
-        // Ghosts are sorted and ownership blocks ascend with rank, so
-        // grouping by owner preserves the ghost order on concatenation.
-        let mut want: Vec<Vec<u64>> = vec![Vec::new(); p];
-        for &g in &self.ghosts {
-            want[self.owner(g)].push(g);
-        }
-        let reqs = comm.alltoallv(want);
-        let base = self.base();
-        let reply: Vec<Vec<T>> = reqs
+        let plan = self.halo_plan();
+        debug_assert_eq!(plan.send_idx.len(), comm.size());
+        let out: Vec<Vec<T>> = plan
+            .send_idx
             .iter()
-            .map(|ids| {
-                ids.iter()
-                    .map(|&g| vals[(g - base) as usize].clone())
+            .map(|idx| idx.iter().map(|&v| vals[v as usize].clone()).collect())
+            .collect();
+        // Received blocks land in rank order = ghost order (plan
+        // invariant), so concatenation is the whole scatter.
+        comm.alltoallv(out).concat()
+    }
+
+    /// Sparse companion of [`DGraph::halo_exchange`] for frontier
+    /// algorithms: publish only the *membership* of local vertices in
+    /// `in_frontier` and learn which **ghost indices** are frontier on
+    /// their owner. On the wire each boundary frontier vertex costs one
+    /// `u32` (its position in the owner's send list) instead of every
+    /// ghost costing a full value — the level-by-level exchange of the
+    /// frontier-driven band BFS (`dist::dband::band_distances`).
+    /// Collective.
+    pub fn halo_frontier(&self, comm: &Comm, in_frontier: &[bool]) -> Vec<u32> {
+        debug_assert_eq!(in_frontier.len(), self.nloc());
+        let plan = self.halo_plan();
+        debug_assert_eq!(plan.send_idx.len(), comm.size());
+        let out: Vec<Vec<u32>> = plan
+            .send_idx
+            .iter()
+            .map(|idx| {
+                idx.iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| in_frontier[v as usize])
+                    .map(|(j, _)| j as u32)
                     .collect()
             })
             .collect();
-        let got = comm.alltoallv(reply);
-        got.concat()
+        let got = comm.alltoallv(out);
+        // Position j in rank r's send list is ghost slot off_r + j:
+        // send lists are parallel to this rank's per-owner ghost blocks.
+        let mut res = Vec::new();
+        let mut off = 0u32;
+        for (r, js) in got.into_iter().enumerate() {
+            res.extend(js.into_iter().map(|j| off + j));
+            off += plan.recv_counts[r] as u32;
+        }
+        res
     }
 
     /// Fetch `vals[local(idx[k])]` from the owner of each global id in
     /// `idx` (remote reads for uncoarsening projection, §3.2). `vals` is
     /// this rank's local value array; the result is parallel to `idx`.
-    /// Collective — ranks with empty `idx` still participate.
-    pub fn fetch_at<T: Clone + Send + 'static>(
+    /// Unlike the halo, the queried ids are call-specific, so the
+    /// request wave cannot be precomputed — but replies scatter straight
+    /// into the output through the per-owner position lists, with no
+    /// intermediate `Option` staging. Collective — ranks with empty
+    /// `idx` still participate.
+    pub fn fetch_at<T: Clone + Default + Send + 'static>(
         &self,
         comm: &Comm,
         idx: &[u64],
@@ -240,15 +411,19 @@ impl DGraph {
             })
             .collect();
         let got = comm.alltoallv(reply);
-        let mut out: Vec<Option<T>> = vec![None; idx.len()];
-        for r in 0..p {
-            for (j, &k) in pos[r].iter().enumerate() {
-                out[k] = Some(got[r][j].clone());
+        // Every k ∈ 0..idx.len() appears in exactly one position list,
+        // so full-length replies imply each slot is written exactly
+        // once (moves, not clones). The per-owner length check keeps
+        // the old "every queried id answered" guarantee in release
+        // builds — a short reply must panic, not leave defaults behind.
+        let mut out: Vec<T> = vec![T::default(); idx.len()];
+        for (r, vals_r) in got.into_iter().enumerate() {
+            assert_eq!(vals_r.len(), pos[r].len(), "rank {r} answered short");
+            for (&k, v) in pos[r].iter().zip(vals_r) {
+                out[k] = v;
             }
         }
-        out.into_iter()
-            .map(|x| x.expect("every queried id answered"))
-            .collect()
+        out
     }
 
     /// Append local vertex `v`'s adjacency row to a wire blob as
@@ -437,6 +612,73 @@ mod tests {
                 .all(|(&gv, &i)| gv == i as i64 * 10)
         });
         assert!(ok.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn halo_exchange_is_one_alltoallv_per_call() {
+        // The HaloPlan acceptance check: construction pays exactly one
+        // want-list alltoallv, and every halo_exchange after it exactly
+        // one data alltoallv — (p-1) messages per rank each, nothing
+        // else on the wire.
+        let g = Arc::new(generators::grid2d(12, 9));
+        for p in [2usize, 4] {
+            let g = g.clone();
+            let calls = 7u64;
+            let (_, stats) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let vals: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
+                for _ in 0..calls {
+                    let got = dg.halo_exchange(&c, &vals);
+                    assert_eq!(got, dg.ghosts);
+                }
+            });
+            let per_a2av = (p * (p - 1)) as u64;
+            assert_eq!(stats.total_msgs(), (calls + 1) * per_a2av, "p={p}");
+        }
+    }
+
+    #[test]
+    fn halo_plan_schedule_invariants() {
+        let g = Arc::new(generators::irregular_mesh(9, 8, 5));
+        let (ok, _) = comm::run(4, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let plan = dg.halo_plan();
+            // Receive blocks tile the ghost table exactly.
+            let mut ok = (0..4).map(|r| plan.recv_count(r)).sum::<usize>() == dg.ghosts.len();
+            for r in 0..4 {
+                // Send lists address local vertices, strictly ascending
+                // (the order the peer's sorted ghost table lists this
+                // rank's contiguous block), and never this rank itself.
+                let idx = plan.send_indices(r);
+                ok &= idx.windows(2).all(|w| w[0] < w[1]);
+                ok &= idx.iter().all(|&v| (v as usize) < dg.nloc());
+                ok &= r != c.rank() || idx.is_empty();
+                ok &= r != c.rank() || plan.recv_count(r) == 0;
+            }
+            ok
+        });
+        assert!(ok.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn halo_frontier_reports_remote_frontier_ghosts() {
+        // Publishing an arbitrary membership must hand back exactly the
+        // ghost indices whose owner vertex is a member, ascending.
+        let g = Arc::new(generators::grid3d(5, 4, 3));
+        for p in [2usize, 3, 5] {
+            let g = g.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let member = |gid: u64| gid % 3 == 0;
+                let flags: Vec<bool> = (0..dg.nloc()).map(|v| member(dg.glb(v))).collect();
+                let got = dg.halo_frontier(&c, &flags);
+                let want: Vec<u32> = (0..dg.ghosts.len() as u32)
+                    .filter(|&i| member(dg.ghosts[i as usize]))
+                    .collect();
+                got == want
+            });
+            assert!(ok.iter().all(|&x| x), "p={p}");
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //!    no band is ever left as an unrefined projection.
 
 use super::coarsen::{coarsen_dist, DistCoarsening};
-use super::dband::{band_distances, extract_dband};
+use super::dband::{bfs_band_dist_engine, extract_dband};
 use super::ddiffusion::{diffuse_band_dist_engine, dist_quality_key, DIST_DIFFUSION_DAMPING};
 use super::dgraph::DGraph;
 use super::matching::parallel_match;
@@ -222,8 +222,12 @@ pub fn band_refine_dist(
     }
 
     // Distributed multi-source BFS from the separator, capped at
-    // `width`: one halo exchange per level.
-    let dist = band_distances(comm, dg, part, width);
+    // `width`: frontier-driven on the CPU engine (one sparse frontier
+    // exchange per level), or fused min-plus levels of the AOT artifact
+    // per rank when the `engine=` knob and the bucket fit allow it —
+    // the verdict is collective, like the diffusion dispatch below.
+    let (dist, _used_xla) =
+        bfs_band_dist_engine(comm, dg, part, width, strat.dist.band_engine, xla);
 
     // Gate on the global band size *before* shipping any adjacency:
     // small bands take the centralized multi-sequential path, large

@@ -13,7 +13,7 @@
 //! receive a copy of the graph when the caller folds the *same* graph
 //! onto [`FoldTarget::low_half`] and [`FoldTarget::high_half`].
 
-use super::dgraph::DGraph;
+use super::dgraph::{DGraph, HaloPlan};
 use crate::comm::Comm;
 
 /// A contiguous target range of ranks for one fold.
@@ -85,33 +85,48 @@ pub fn fold_half(
         dg.encode_row(v, b);
     }
     let got = comm.alltoallv(bufs);
-    if !target.contains(comm.rank()) {
-        return None;
-    }
-
-    let me = comm.rank() - target.start;
-    let nbase = nvtx[me];
-    let nl = (nvtx[me + 1] - nbase) as usize;
-    let mut vwgt = vec![0i64; nl];
-    let mut pl = vec![0u64; nl];
-    let mut rows: Vec<Vec<(u64, i64)>> = vec![Vec::new(); nl];
-    for b in &got {
-        let mut i = 0usize;
-        while i < b.len() {
-            let lv = (b[i] - nbase) as usize;
-            vwgt[lv] = b[i + 1] as i64;
-            pl[lv] = b[i + 2];
-            let deg = b[i + 3] as usize;
-            i += 4;
-            let mut row = Vec::with_capacity(deg);
-            for _ in 0..deg {
-                row.push((b[i], b[i + 1] as i64));
-                i += 2;
+    let assembled = if target.contains(comm.rank()) {
+        let me = comm.rank() - target.start;
+        let nbase = nvtx[me];
+        let nl = (nvtx[me + 1] - nbase) as usize;
+        let mut vwgt = vec![0i64; nl];
+        let mut pl = vec![0u64; nl];
+        let mut rows: Vec<Vec<(u64, i64)>> = vec![Vec::new(); nl];
+        for b in &got {
+            let mut i = 0usize;
+            while i < b.len() {
+                let lv = (b[i] - nbase) as usize;
+                vwgt[lv] = b[i + 1] as i64;
+                pl[lv] = b[i + 2];
+                let deg = b[i + 3] as usize;
+                i += 4;
+                let mut row = Vec::with_capacity(deg);
+                for _ in 0..deg {
+                    row.push((b[i], b[i + 1] as i64));
+                    i += 2;
+                }
+                rows[lv] = row;
             }
-            rows[lv] = row;
         }
-    }
-    Some((DGraph::from_rows(nvtx, me, vwgt, rows), pl))
+        Some((DGraph::assemble(nvtx.clone(), me, vwgt, rows), pl))
+    } else {
+        None
+    };
+    // Build the folded graph's halo plan through the *parent*
+    // communicator — graph rank r maps to parent rank target.start + r,
+    // and non-members merely feed the collective with empty want lists.
+    // The later `Comm::split` re-ranks the target members along exactly
+    // that ascending mapping, so the plan survives the split unchanged.
+    let plan = HaloPlan::build(
+        comm,
+        target.start,
+        &nvtx,
+        assembled.as_ref().map(|(dg, _)| (dg.rank, dg.ghosts.as_slice())),
+    );
+    assembled.map(|(mut dg, pl)| {
+        dg.set_plan(plan.expect("target members receive a plan"));
+        (dg, pl)
+    })
 }
 
 #[cfg(test)]
@@ -131,6 +146,32 @@ mod tests {
                 assert!(lo.contains(r) ^ hi.contains(r));
             }
             assert!(lo.size() >= hi.size());
+        }
+    }
+
+    #[test]
+    fn folded_plan_survives_split() {
+        // The halo plan built through the parent communicator must
+        // drive exchanges on the sub-communicator obtained by the split
+        // that follows every fold in the dissection recursion.
+        let g = Arc::new(generators::grid2d(11, 7));
+        for p in [3usize, 5] {
+            let g = g.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let payload: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
+                let lo = FoldTarget::low_half(p);
+                let f = fold_half(&c, &dg, &payload, lo);
+                let sub = c.split(if lo.contains(c.rank()) { 0 } else { 1 });
+                match f {
+                    Some((fdg, _)) => {
+                        let mine: Vec<u64> = (0..fdg.nloc()).map(|v| fdg.glb(v)).collect();
+                        fdg.halo_exchange(&sub, &mine) == fdg.ghosts
+                    }
+                    None => true,
+                }
+            });
+            assert!(ok.iter().all(|&x| x), "p={p}");
         }
     }
 

@@ -71,7 +71,7 @@ pub fn induce_dist(comm: &Comm, dg: &DGraph, keep: &[bool], payload: &[u64]) -> 
         })
         .collect();
     DistInduced {
-        dg: DGraph::from_rows(vtx, comm.rank(), vwgt, rows),
+        dg: DGraph::from_rows(comm, vtx, vwgt, rows),
         orig,
     }
 }

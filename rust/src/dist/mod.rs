@@ -6,7 +6,10 @@
 //!
 //! * [`dgraph`] — distributed CSR graphs with contiguous per-rank
 //!   blocks, ghost/halo indexing and the halo-exchange / remote-fetch /
-//!   centralize primitives (§3.1);
+//!   centralize primitives (§3.1). The halo update runs on a
+//!   **persistent exchange schedule** ([`dgraph::HaloPlan`]) derived
+//!   once at construction, so every exchange is a single data
+//!   `alltoallv` (DESIGN.md §3.1);
 //! * [`matching`] — parallel probabilistic heavy-edge matching via
 //!   mutual proposals (§3.2/§4.2);
 //! * [`coarsen`] — distributed coarsening along a matching, with
@@ -18,7 +21,10 @@
 //! * [`dband`] — distributed band-graph extraction: the width-`w` band
 //!   around a projected separator as a [`dgraph::DGraph`] in its own
 //!   right, with two anchor vertices standing for the excluded parts
-//!   (§3.3);
+//!   (§3.3). Band membership comes from a frontier-driven distributed
+//!   BFS, or from fused min-plus levels of the AOT artifact per rank
+//!   ([`dband::bfs_band_dist_engine`], the same `engine=` dispatch as
+//!   the diffusion sweeps);
 //! * [`ddiffusion`] — the diffusion kernel on distributed bands: local
 //!   Jacobi sweeps interleaved with halo exchanges of the scalar field,
 //!   then a sign-change scan and a distributed separator-recovery cover

@@ -187,6 +187,45 @@ pub fn ell_fused_reference(
     x
 }
 
+/// The min-plus kernels' "+infinity": unreached distances. Matches the
+/// `3.0e38` the Pallas kernel and its oracle use for masked lanes
+/// (`python/compile/kernels/ell_spmv.py::_minplus_kernel`) — close to
+/// but below `f32::MAX`, and `MINPLUS_INF + 1.0 == MINPLUS_INF` in f32,
+/// so relaxation through an unreached neighbor can never overflow or
+/// win a min.
+pub const MINPLUS_INF: f32 = 3.0e38;
+
+/// Pure-Rust reference of one min-plus (BFS relaxation) artifact call:
+/// `out[v] = min(dist[v], min over unpadded lanes of dist[nbr] + 1)` —
+/// bit-for-bit the semantics of `python/compile/model.py::minplus_step`
+/// (hop counts: the `+1` is per arc regardless of weight; weights only
+/// gate padding, `w > 0`). Rows packed empty (ghost rows of
+/// [`pack_ell_dist`], padding) therefore keep their value — exactly the
+/// fixed-boundary behavior the distributed band BFS relies on between
+/// halo exchanges.
+///
+/// Used to keep a rank in collective lockstep when a PJRT execution
+/// fails mid-run (the fit verdict was already agreed), and by the tests
+/// pinning the artifact contract.
+pub fn ell_minplus_reference(e: &EllPacked, dist: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(dist.len(), e.n);
+    let mut out = vec![0f32; e.n];
+    for v in 0..e.n {
+        let row = v * e.d;
+        let mut best = dist[v];
+        for k in 0..e.d {
+            if e.w[row + k] > 0.0 {
+                let c = dist[e.nbr[row + k] as usize] + 1.0;
+                if c < best {
+                    best = c;
+                }
+            }
+        }
+        out[v] = best;
+    }
+    out
+}
+
 /// Reference (pure-Rust) evaluation of the packed weighted-average
 /// operator — must agree with both [`crate::sep::diffusion`] on the
 /// unpacked graph and the XLA artifact on the packed one.
@@ -297,6 +336,23 @@ mod tests {
             ok
         });
         assert!(ok.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn minplus_reference_hops_and_fixed_rows() {
+        // Path 0–1–2 with non-unit weights: hops must still cost 1
+        // (weights only gate padding), and the empty padded row must
+        // keep its value — the ghost-row boundary contract.
+        let mut b = crate::graph::GraphBuilder::new(3);
+        b.add_edge_w(0, 1, 7);
+        b.add_edge_w(1, 2, 3);
+        let g = b.build().unwrap();
+        let e = pack_ell(&g, 4, 2).unwrap();
+        let d0 = vec![0.0, MINPLUS_INF, MINPLUS_INF, MINPLUS_INF];
+        let d1 = ell_minplus_reference(&e, &d0);
+        assert_eq!(d1, vec![0.0, 1.0, MINPLUS_INF, MINPLUS_INF]);
+        let d2 = ell_minplus_reference(&e, &d1);
+        assert_eq!(d2, vec![0.0, 1.0, 2.0, MINPLUS_INF]);
     }
 
     #[test]

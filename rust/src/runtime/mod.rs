@@ -19,7 +19,10 @@
 pub mod ell;
 pub mod refiner;
 
-pub use ell::{ell_fused_reference, pack_ell, pack_ell_clamped, pack_ell_dist, EllPacked};
+pub use ell::{
+    ell_fused_reference, ell_minplus_reference, pack_ell, pack_ell_clamped, pack_ell_dist,
+    EllPacked, MINPLUS_INF,
+};
 pub use refiner::DiffusionRefiner;
 
 use crate::{Error, Result};

@@ -19,13 +19,15 @@ pub enum RefinerKind {
     DiffusionXla,
 }
 
-/// Which execution engine runs the *distributed* band-diffusion sweeps
-/// (`dist::ddiffusion`) — the `engine=` strategy knob.
+/// Which execution engine runs the *distributed* band kernels — the
+/// diffusion sweeps (`dist::ddiffusion`) and the band BFS
+/// (`dist::dband::bfs_band_dist_engine`) — the `engine=` strategy knob.
 ///
 /// The fallback ladder is always available underneath: per-rank XLA
-/// kernel execution when a size bucket fits every rank's band slice,
-/// scalar CPU sweeps when it does not (or when no artifacts are
-/// loaded), centralized multi-sequential FM for bands small enough to
+/// kernel execution when a size bucket fits every rank's slice, the
+/// scalar CPU path when it does not (or when no artifacts are loaded —
+/// CPU sweeps for diffusion, the frontier BFS for band distances),
+/// centralized multi-sequential FM for bands small enough to
 /// centralize (see `dist::dsep::band_refine_dist`).
 ///
 /// ```

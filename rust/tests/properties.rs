@@ -160,6 +160,120 @@ fn prop_parallel_matching_symmetric_across_p_and_seeds() {
     }
 }
 
+/// The seed level-scan band BFS, kept verbatim as the reference the
+/// frontier rewrite must reproduce: one full-vector halo exchange and a
+/// full clone + rescan of the distance vector per level.
+fn level_scan_reference(
+    c: &ptscotch::comm::Comm,
+    dg: &DGraph,
+    part: &[u8],
+    width: u32,
+) -> Vec<u32> {
+    let nloc = dg.nloc();
+    let mut dist: Vec<u32> = part
+        .iter()
+        .map(|&x| if x == SEP { 0 } else { u32::MAX })
+        .collect();
+    for _ in 0..width {
+        let ghost_dist = dg.halo_exchange(c, &dist);
+        let prev = dist.clone();
+        for v in 0..nloc {
+            if prev[v] != u32::MAX {
+                continue;
+            }
+            let mut best = u32::MAX;
+            for &a in dg.neighbors_gst(v) {
+                let a = a as usize;
+                let da = if a < nloc { prev[a] } else { ghost_dist[a - nloc] };
+                if da != u32::MAX && da + 1 < best {
+                    best = da + 1;
+                }
+            }
+            dist[v] = best;
+        }
+    }
+    dist
+}
+
+#[test]
+fn prop_frontier_bfs_matches_level_scan_reference() {
+    // The frontier-driven `band_distances` must equal the seed
+    // level-scan on random graphs for p ∈ {2..5}, arbitrary (not
+    // necessarily valid-separator) source placements, and all band
+    // widths the pipeline uses.
+    use ptscotch::dist::dband::band_distances;
+
+    for (seed, p) in [(0u64, 2usize), (1, 3), (2, 4), (3, 5), (4, 4)] {
+        let n = 200 + (seed as usize * 53) % 200;
+        let g = Arc::new(random_graph(seed, n, n / 2));
+        for width in [1u32, 2, 3, 4] {
+            let g = g.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                // Sources from a global hash every rank evaluates
+                // identically (~1/8 of the vertices).
+                let part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| {
+                        let gid = dg.glb(v).wrapping_add(seed);
+                        if gid.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 61 == 0 {
+                            SEP
+                        } else {
+                            ptscotch::sep::P0
+                        }
+                    })
+                    .collect();
+                let want = level_scan_reference(&c, &dg, &part, width);
+                let got = band_distances(&c, &dg, &part, width);
+                got == want
+            });
+            assert!(
+                ok.iter().all(|&x| x),
+                "seed {seed} p={p} width={width}: frontier BFS diverged from level scan"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bfs_engine_dispatch_stub_fallback_matches_frontier_bfs() {
+    // The acceptance criterion for the min-plus engine: with the
+    // stubbed XLA path (no runtime handle loads offline), every engine
+    // setting must produce band distances identical to the CPU frontier
+    // BFS for p ∈ {2..5} on random graphs, with the verdict agreed by
+    // allreduce (`used_xla` false everywhere).
+    use ptscotch::dist::dband::{band_distances, bfs_band_dist_engine};
+    use ptscotch::strategy::BandEngine;
+
+    for (seed, p) in [(0u64, 2usize), (1, 3), (2, 4), (3, 5)] {
+        let n = 240 + (seed as usize * 37) % 160;
+        let g = random_graph(seed, n, n / 2);
+        let mut rng = Rng::new(seed ^ 0xBF5);
+        let s = multilevel_separator(&g, &SepStrategy::default(), &FmRefiner::default(), &mut rng);
+        if s.sep_count() == 0 {
+            continue;
+        }
+        let ga = Arc::new(g);
+        let proj = Arc::new(s.part);
+        for engine in [BandEngine::Auto, BandEngine::Cpu, BandEngine::Xla] {
+            let g = ga.clone();
+            let proj = proj.clone();
+            let (ok, _) = comm::run(p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                let part: Vec<u8> = (0..dg.nloc())
+                    .map(|v| proj[dg.glb(v) as usize])
+                    .collect();
+                let want = band_distances(&c, &dg, &part, 3);
+                let (got, used_xla) = bfs_band_dist_engine(&c, &dg, &part, 3, engine, None);
+                !used_xla && got == want
+            });
+            assert!(
+                ok.iter().all(|&x| x),
+                "seed {seed} p={p} engine={engine:?}: BFS dispatch diverged"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_dist_diffusion_refinement_never_worse_than_projection() {
     // The scalable band path (global_band > max_centralized_band, which

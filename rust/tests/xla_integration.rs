@@ -246,3 +246,34 @@ fn full_parallel_ordering_with_xla_refiner() {
         fm.stats.opc
     );
 }
+
+#[test]
+fn bfs_engine_with_artifacts_matches_cpu_frontier() {
+    // The fused min-plus BFS path end-to-end on real artifacts: with a
+    // loaded runtime and `engine=xla`, the per-rank fused levels must
+    // reproduce the CPU frontier BFS exactly and report that the XLA
+    // engine actually executed (the 64×24 grid slice fits the 1024-row
+    // bucket at p = 4).
+    let dir = require_artifacts!();
+    use ptscotch::comm;
+    use ptscotch::dist::dband::{band_distances, bfs_band_dist_engine};
+    use ptscotch::dist::dgraph::DGraph;
+    use ptscotch::strategy::BandEngine;
+    use std::sync::Arc;
+
+    let rt = load_shared(&dir).expect("load artifacts");
+    let (nx, ny) = (64usize, 24usize);
+    let g = Arc::new(generators::grid2d(nx, ny));
+    let proj = Arc::new(generators::column_separator_part(nx, ny, nx / 2, 2));
+    let (ok, _) = comm::run(4, move |c| {
+        let dg = DGraph::from_global(&c, &g);
+        let part: Vec<u8> = (0..dg.nloc())
+            .map(|v| proj[dg.glb(v) as usize])
+            .collect();
+        let want = band_distances(&c, &dg, &part, 3);
+        let (got, used_xla) =
+            bfs_band_dist_engine(&c, &dg, &part, 3, BandEngine::Xla, Some(&rt));
+        used_xla && got == want
+    });
+    assert!(ok.iter().all(|&x| x), "fused min-plus BFS diverged");
+}
