@@ -39,7 +39,10 @@ bench:
 # Quick pass over the profile bench only (seconds; used by `check`/CI),
 # swept over both band-engine settings so the dispatch path stays green,
 # plus one `--json` run over both engines that regenerates the
-# machine-readable perf trajectory in bench_out/BENCH_PR4.json.
+# machine-readable perf/quality trajectory in bench_out/BENCH_PR5.json.
+# Every smoke run doubles as the ordering-quality gate: it asserts the
+# grid3d OPC stays under the recorded ceiling per leaf method
+# (EXPERIMENTS.md §Perf.2), so leaf quality cannot regress silently.
 bench-smoke:
 	cargo bench --bench perf_profile -- --smoke --engine cpu
 	cargo bench --bench perf_profile -- --smoke --engine xla

@@ -1,20 +1,27 @@
-//! §Perf phase profile: where does ordering time go, layer by layer?
+//! §Perf phase profile: where does ordering time go, layer by layer —
+//! and what quality does it buy?
 //!
 //! Times the individual L3 phases (coarsening, initial separator, FM,
 //! band extraction, projection, minimum degree, symbolic evaluation) on
 //! a mid-size 3D mesh, the distributed band BFS and band refinement
 //! under both band engines (`--engine cpu|xla` pins one; see
 //! EXPERIMENTS.md §Perf.1) with their bytes/messages on the wire, plus
-//! the XLA (L1/L2) execution path when artifacts are present. `--json`
-//! additionally writes the whole profile to `bench_out/BENCH_PR4.json`
-//! (run by the CI bench-smoke step). Used to drive and document the
-//! optimization log in EXPERIMENTS.md §Perf.
+//! the XLA (L1/L2) execution path when artifacts are present. The
+//! §Perf.2 section orders the quality suite (grid3d + irregular_mesh,
+//! p ∈ {1, 4}) under both leaf methods (`leafmethod=mmd|hamd`) and
+//! tabulates NNZ/OPC/fill/etree height; in `--smoke` mode it asserts
+//! the grid3d OPC stays under the recorded per-method ceiling, so leaf
+//! quality cannot regress silently. `--json` additionally writes the
+//! whole profile (phases + quality) to `bench_out/BENCH_PR5.json`
+//! (run by the CI bench/quality-smoke step). Used to drive and document
+//! the optimization log in EXPERIMENTS.md §Perf.
 
 #[path = "common.rs"]
 mod common;
 
 use ptscotch::coordinator::{Engine, OrderingService};
 use ptscotch::graph::generators;
+use ptscotch::order::hamd;
 use ptscotch::order::mmd::minimum_degree;
 use ptscotch::order::symbolic_cholesky;
 use ptscotch::rng::Rng;
@@ -43,10 +50,11 @@ fn engine_arg() -> Option<String> {
 }
 
 /// `--json` mode: also write every profiled row (wallclock plus, for
-/// the distributed phases, bytes/messages on the wire) to
-/// `bench_out/BENCH_PR4.json` — the machine-readable perf trajectory
-/// the EXPERIMENTS.md BENCH log points at. CI runs this in the
-/// bench-smoke step so the file regenerates on every push.
+/// the distributed phases, bytes/messages on the wire) and the
+/// per-leaf-method quality table to `bench_out/BENCH_PR5.json` — the
+/// machine-readable perf/quality trajectory the EXPERIMENTS.md BENCH
+/// log points at. CI runs this in the bench-smoke step so the file
+/// regenerates on every push.
 fn json_mode() -> bool {
     std::env::args().any(|a| a == "--json")
 }
@@ -63,6 +71,54 @@ struct Row {
 /// Rows accumulated for `--json` (the bench is single-threaded; the
 /// mutex only satisfies `static`).
 static ROWS: Mutex<Vec<Row>> = Mutex::new(Vec::new());
+
+/// One ordering-quality measurement: a graph of the quality suite
+/// ordered by `parallel_order` on `p` ranks under one leaf method,
+/// evaluated with `order::symbolic` (§Perf.2).
+struct QRow {
+    graph: &'static str,
+    n: usize,
+    p: usize,
+    method: &'static str,
+    nnz: u64,
+    opc: f64,
+    fill: f64,
+    height: usize,
+    ms: f64,
+}
+
+/// Quality rows accumulated for the table, the CSV and `--json`.
+static QROWS: Mutex<Vec<QRow>> = Mutex::new(Vec::new());
+
+/// Mean OPC per `(p, mmd, hamd)` over the accumulated quality rows —
+/// the single source for both the printed summary and the JSON
+/// `quality_mean_opc` section, so they cannot diverge.
+fn quality_mean_opc(qrows: &[QRow]) -> Vec<(usize, f64, f64)> {
+    let mut ps: Vec<usize> = qrows.iter().map(|q| q.p).collect();
+    ps.sort_unstable();
+    ps.dedup();
+    ps.iter()
+        .map(|&p| {
+            let mean = |m: &str| -> f64 {
+                let sel: Vec<f64> = qrows
+                    .iter()
+                    .filter(|q| q.p == p && q.method == m)
+                    .map(|q| q.opc)
+                    .collect();
+                sel.iter().sum::<f64>() / sel.len().max(1) as f64
+            };
+            (p, mean("mmd"), mean("hamd"))
+        })
+        .collect()
+}
+
+/// Smoke-mode guard rails for the grid3d quality rows at p = 1, one
+/// ceiling per leaf method (EXPERIMENTS.md §Perf.2 records the rationale
+/// and the measured values). The smoke grid is 10³: a working ordering
+/// lands near 2.1e6 OPC, the natural (banded) order already costs
+/// ~1.0e7, so a breached ceiling means leaf ordering genuinely
+/// regressed — not noise (the pipeline is bit-deterministic per seed).
+const SMOKE_GRID3D_OPC_CEILING: [(&str, f64); 2] = [("mmd", 6.0e6), ("hamd", 5.5e6)];
 
 fn record(name: &str, ms: f64, bytes_sent: u64, msgs_sent: u64) {
     println!("{name:<34} {:>10.2} ms", ms);
@@ -85,11 +141,12 @@ fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
     dt
 }
 
-/// Serialize the accumulated rows as `bench_out/BENCH_PR4.json`. Phase
+/// Serialize the accumulated rows as `bench_out/BENCH_PR5.json`. Phase
 /// names contain no quotes or backslashes, so the literal embedding is
 /// valid JSON.
 fn write_json(smoke: bool, scale: usize) {
     let rows = ROWS.lock().unwrap();
+    let qrows = QROWS.lock().unwrap();
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -108,12 +165,136 @@ fn write_json(smoke: bool, scale: usize) {
             r.phase, r.ms, r.bytes_sent, r.msgs_sent
         ));
     }
+    s.push_str("  ],\n");
+    // §Perf.2: the per-leaf-method ordering-quality table plus the
+    // mean-OPC comparison the acceptance gate reads (hamd strictly
+    // better than halo-blind mmd at each p).
+    s.push_str("  \"quality\": [\n");
+    for (i, q) in qrows.iter().enumerate() {
+        let sep = if i + 1 < qrows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"graph\": \"{}\", \"n\": {}, \"p\": {}, \"leafmethod\": \"{}\", \
+             \"nnz\": {}, \"opc\": {:.6e}, \"fill_ratio\": {:.4}, \
+             \"tree_height\": {}, \"ms\": {:.2}}}{sep}\n",
+            q.graph, q.n, q.p, q.method, q.nnz, q.opc, q.fill, q.height, q.ms
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"quality_mean_opc\": [\n");
+    let means = quality_mean_opc(&qrows);
+    for (i, &(p, mmd, hamd)) in means.iter().enumerate() {
+        let sep = if i + 1 < means.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"p\": {p}, \"mmd\": {mmd:.6e}, \"hamd\": {hamd:.6e}, \
+             \"hamd_strictly_better\": {}}}{sep}\n",
+            hamd < mmd
+        ));
+    }
     s.push_str("  ]\n}\n");
     let dir = std::path::Path::new("bench_out");
     let _ = std::fs::create_dir_all(dir);
-    let path = dir.join("BENCH_PR4.json");
-    std::fs::write(&path, s).expect("write BENCH_PR4.json");
+    let path = dir.join("BENCH_PR5.json");
+    std::fs::write(&path, s).expect("write BENCH_PR5.json");
     println!("\nwrote {}", path.display());
+}
+
+/// §Perf.2 — order the quality suite under both leaf methods and both
+/// rank counts, tabulate the paper's quality metrics, and (in smoke
+/// mode) enforce the recorded grid3d OPC ceilings.
+fn quality_profile(smoke: bool, scale: usize) {
+    let s = scale.max(1);
+    let graphs: Vec<(&'static str, ptscotch::graph::Graph)> = if smoke {
+        vec![
+            ("grid3d", generators::grid3d(10, 10, 10)),
+            ("irregular_mesh", generators::irregular_mesh(24, 24, 7)),
+        ]
+    } else {
+        vec![
+            ("grid3d", generators::grid3d(16 * s, 16 * s, 16 * s)),
+            ("irregular_mesh", generators::irregular_mesh(48 * s, 48 * s, 7)),
+        ]
+    };
+    let svc = OrderingService::new_cpu_only();
+    println!("\n-- ordering quality per leaf method (§Perf.2) --");
+    println!(
+        "{:<16} {:>7} {:>3} {:>6} {:>10} {:>12} {:>6} {:>7} {:>9}",
+        "graph", "n", "p", "leaf", "nnz", "opc", "fill", "height", "ms"
+    );
+    for &(name, ref g) in &graphs {
+        for p in [1usize, 4] {
+            for method in ["mmd", "hamd"] {
+                let strat = Strategy::parse(&format!("leafmethod={method}")).unwrap();
+                let t0 = Instant::now();
+                let rep = svc
+                    .order(g, Engine::PtScotch { p }, &strat)
+                    .expect("quality ordering");
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let st = rep.stats;
+                println!(
+                    "{name:<16} {:>7} {p:>3} {method:>6} {:>10} {:>12.4e} {:>6.2} {:>7} {:>9.2}",
+                    g.n(),
+                    st.nnz,
+                    st.opc,
+                    st.fill_ratio,
+                    st.tree_height,
+                    ms
+                );
+                common::csv_row(
+                    "leaf_quality.csv",
+                    "graph,n,p,leafmethod,nnz,opc,fill_ratio,tree_height,ms",
+                    &format!(
+                        "{name},{},{p},{method},{},{:.6e},{:.4},{},{ms:.2}",
+                        g.n(),
+                        st.nnz,
+                        st.opc,
+                        st.fill_ratio,
+                        st.tree_height
+                    ),
+                );
+                QROWS.lock().unwrap().push(QRow {
+                    graph: name,
+                    n: g.n(),
+                    p,
+                    method,
+                    nnz: st.nnz,
+                    opc: st.opc,
+                    fill: st.fill_ratio,
+                    height: st.tree_height,
+                    ms,
+                });
+            }
+        }
+    }
+    let qrows = QROWS.lock().unwrap();
+    for (p, mmd, hamd) in quality_mean_opc(&qrows) {
+        println!(
+            "mean OPC at p={p}: mmd {mmd:.4e}  hamd {hamd:.4e}  ({}, {:+.2}%)",
+            if hamd < mmd {
+                "hamd strictly better"
+            } else {
+                "hamd NOT better"
+            },
+            (hamd / mmd - 1.0) * 100.0
+        );
+    }
+    if smoke {
+        // The quality guard rail: grid3d at p = 1 must stay under the
+        // recorded per-method ceiling (the run is deterministic, so a
+        // breach is a real regression, not noise).
+        for &(method, ceiling) in &SMOKE_GRID3D_OPC_CEILING {
+            let q = qrows
+                .iter()
+                .find(|q| q.graph == "grid3d" && q.p == 1 && q.method == method)
+                .expect("grid3d quality row");
+            assert!(
+                q.opc < ceiling,
+                "quality smoke FAILED: grid3d leafmethod={method} OPC {:.4e} \
+                 breached the recorded ceiling {ceiling:.4e} (EXPERIMENTS.md §Perf.2)",
+                q.opc
+            );
+        }
+        println!("quality smoke: grid3d OPC under the recorded ceiling for every leaf method");
+    }
 }
 
 fn main() {
@@ -153,6 +334,8 @@ fn main() {
     let leaf_side = if smoke { 4 } else { 5 * scale };
     let leaf = generators::grid3d(leaf_side, leaf_side, leaf_side);
     time("minimum_degree (leaf s³)", reps(5), || minimum_degree(&leaf));
+    let no_halo = vec![false; leaf.n()];
+    time("hamd (leaf s³, empty halo)", reps(5), || hamd(&leaf, &no_halo));
     let svc = OrderingService::new(&XlaRuntime::default_dir());
     let rep = svc
         .order(&g, Engine::Sequential, &Strategy::default())
@@ -331,6 +514,8 @@ fn main() {
             }
         }
     }
+
+    quality_profile(smoke, scale);
 
     if json_mode() {
         write_json(smoke, scale);

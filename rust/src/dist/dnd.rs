@@ -12,18 +12,30 @@
 //! [`crate::order::nd`] (multilevel separators + minimum-degree leaves)
 //! finishes the job. Fragments are finally allgathered and assembled
 //! into one inverse permutation, identical on every rank.
+//!
+//! **Halo carrying.** Under `leafmethod=hamd` (the default), each
+//! distributed level keeps the ring of its freshly emitted separator
+//! alive in the induced subgraphs as *halo* vertices
+//! ([`crate::dist::induce::HALO_BIT`] on the payload): they are
+//! excluded from every further separator and never re-emitted, but
+//! they ride through folds and splits so that when a branch reaches
+//! one rank, [`crate::order::nd::nested_dissection_with_halo`] sees
+//! the same already-numbered separator ring a sequential run would —
+//! and HAMD leaves get identical quality in both regimes. The
+//! halo-blind `leafmethod=mmd` comparator never reads a ring, so it
+//! takes the plain induction and carries nothing.
 
 use super::dgraph::DGraph;
 use super::dsep::dist_separator;
 use super::fold::{fold_half, FoldTarget};
-use super::induce::{induce_dist, DistInduced};
+use super::induce::{induce_dist, induce_dist_halo, DistInduced, HALO_BIT};
 use crate::comm::{Comm, MemTracker};
 use crate::graph::Graph;
-use crate::order::{assemble_fragments, nested_dissection, OrderFragment, Ordering};
+use crate::order::{assemble_fragments, nested_dissection_with_halo, OrderFragment, Ordering};
 use crate::rng::Rng;
 use crate::runtime::SharedRuntime;
 use crate::sep::{BandRefiner, P0, P1, SEP};
-use crate::strategy::Strategy;
+use crate::strategy::{LeafMethod, Strategy};
 use crate::Result;
 
 /// Result of a parallel ordering run on one rank.
@@ -115,33 +127,45 @@ pub(crate) fn gather_and_assemble(
     assemble_fragments(n, all_frags)
 }
 
-/// Build the two induced subgraphs, overlapping them with an extra
-/// thread per rank on tag-scoped communicator clones when the strategy
-/// asks for it (§3.1: the overlap "can be disabled when the
-/// communication system is not thread-safe" and never changes results —
-/// `induce_dist` is deterministic).
+/// Part label of a carried halo vertex during one dissection level:
+/// not in either side, not in the fresh separator — only a halo
+/// candidate for the two inductions.
+const HALO_PART: u8 = 3;
+
+/// Build the two induced subgraphs — each side's core plus, when
+/// `halo_cand` is `Some` (`leafmethod=hamd`), its separator/halo ring;
+/// `None` (`leafmethod=mmd`, which never reads a halo) takes the plain
+/// induction and skips the ring's exchange and carriage entirely.
+/// Overlapped with an extra thread per rank on tag-scoped communicator
+/// clones when the strategy asks for it (§3.1: the overlap "can be
+/// disabled when the communication system is not thread-safe" and
+/// never changes results — both inductions are deterministic).
 fn induce_both(
     comm: &Comm,
     dg: &DGraph,
     keep0: &[bool],
     keep1: &[bool],
+    halo_cand: Option<&[bool]>,
     payload: &[u64],
     overlap: bool,
 ) -> (DistInduced, DistInduced) {
+    let one = |c: &Comm, keep: &[bool]| match halo_cand {
+        Some(cand) => induce_dist_halo(c, dg, keep, cand, payload),
+        None => induce_dist(c, dg, keep, payload),
+    };
     if overlap {
         let c0 = comm.overlap_context(0);
         let c1 = comm.overlap_context(1);
         std::thread::scope(|s| {
-            let h = s.spawn(move || induce_dist(&c1, dg, keep1, payload));
-            let i0 = induce_dist(&c0, dg, keep0, payload);
+            // `move` takes the owned `c1`; `one` and the slices are
+            // shared-reference captures and copy into the thread.
+            let h = s.spawn(move || one(&c1, keep1));
+            let i0 = one(&c0, keep0);
             let i1 = h.join().expect("overlap induce thread");
             (i0, i1)
         })
     } else {
-        (
-            induce_dist(comm, dg, keep0, payload),
-            induce_dist(comm, dg, keep1, payload),
-        )
+        (one(comm, keep0), one(comm, keep1))
     }
 }
 
@@ -170,15 +194,30 @@ pub(crate) fn dissect(
     // The caller tracked `dg`'s footprint; shrink it wherever `dg` dies
     // so `peak_mem` reports peak *live* memory, not cumulative growth.
     let dg_bytes = dg.footprint_bytes();
+    // Under `leafmethod=mmd` no level ever sets HALO_BIT, so the whole
+    // halo machinery (flag scan, count allreduce, ring induction) is
+    // skipped — the strategy is identical on every rank, so the branch
+    // is collectively consistent.
+    let carry_halo = strat.nd.leaf_method == LeafMethod::Hamd;
+    let halo_flags: Vec<bool> = if carry_halo {
+        payload.iter().map(|&x| x & HALO_BIT != 0).collect()
+    } else {
+        vec![false; payload.len()]
+    };
     if comm.size() == 1 {
-        // One rank left: finish sequentially (§3.1's leaf case).
+        // One rank left: finish sequentially (§3.1's leaf case). The
+        // carried halo ring flows into the sequential recursion so its
+        // HAMD leaves see the distributed-level separators too.
         let local = dg.to_local();
         mem.grow(local.footprint_bytes());
         let mut rng = base_rng.derive(0x1EAF ^ (depth << 8));
-        let ord = nested_dissection(&local, strat, refiner, &mut rng);
+        let ord = nested_dissection_with_halo(&local, &halo_flags, strat, refiner, &mut rng);
         frags.push(OrderFragment {
             start,
-            verts: ord.iperm.iter().map(|&lv| payload[lv] as usize).collect(),
+            verts: ord
+                .iter()
+                .map(|&lv| (payload[lv] & !HALO_BIT) as usize)
+                .collect(),
         });
         mem.shrink(local.footprint_bytes() + dg_bytes);
         return;
@@ -188,10 +227,37 @@ pub(crate) fn dissect(
         return;
     }
     *dist_levels += 1;
-    let part = separator(comm, &dg, &base_rng.derive(depth), mem);
+    // The separator may only cut the core vertices: below the first
+    // level the subgraph also carries the enclosing separators' halo
+    // ring, which is already numbered. When a halo exists anywhere
+    // (agreed collectively — induction is collective), the separator
+    // runs on the core-induced subgraph and its labels scatter back.
+    let nhalo_glb = if carry_halo {
+        let nhalo_loc = halo_flags.iter().filter(|&&h| h).count();
+        comm.allreduce_sum(nhalo_loc as i64)
+    } else {
+        0
+    };
+    let part: Vec<u8> = if nhalo_glb == 0 {
+        separator(comm, &dg, &base_rng.derive(depth), mem)
+    } else {
+        let keep_core: Vec<bool> = halo_flags.iter().map(|&h| !h).collect();
+        let idx_payload: Vec<u64> = (0..dg.nloc() as u64).collect();
+        let core = induce_dist(comm, &dg, &keep_core, &idx_payload);
+        mem.grow(core.dg.footprint_bytes());
+        let core_part = separator(comm, &core.dg, &base_rng.derive(depth), mem);
+        mem.shrink(core.dg.footprint_bytes());
+        let mut full = vec![HALO_PART; dg.nloc()];
+        for (i, &lv) in core.orig.iter().enumerate() {
+            full[lv as usize] = core_part[i];
+        }
+        full
+    };
     // One fused reduction for all three part counts — the per-level
     // collective count feeds the communication telemetry the benches
-    // report, so don't pay three rounds for one vector.
+    // report, so don't pay three rounds for one vector. Halo vertices
+    // carry their own label and count toward nothing: the index range
+    // of this subproblem holds exactly its core vertices.
     let mine = [
         part.iter().filter(|&&x| x == P0).count() as i64,
         part.iter().filter(|&&x| x == P1).count() as i64,
@@ -199,24 +265,26 @@ pub(crate) fn dissect(
     ];
     let total = comm.allreduce(mine, |a, b| [a[0] + b[0], a[1] + b[1], a[2] + b[2]]);
     let counts = [total[0] as usize, total[1] as usize, total[2] as usize];
+    let ncore_glb = counts[0] + counts[1] + counts[2];
     let degenerate = counts[0] == 0
         || counts[1] == 0
-        || counts[2] as f64 > dg.nglb as f64 * strat.nd.max_sep_fraction;
+        || counts[2] as f64 > ncore_glb as f64 * strat.nd.max_sep_fraction;
     if degenerate {
         // Near-clique or disconnected oddity: centralize and let rank 0
-        // of this subgroup order the whole range sequentially.
+        // of this subgroup order the whole range sequentially (halo
+        // ring included, exactly like the single-rank finish).
         let central = dg.centralize_all(comm);
         mem.grow(central.footprint_bytes());
         let all_payload = comm.allgatherv(payload.clone()).concat();
         if comm.rank() == 0 {
+            let halo_all: Vec<bool> = all_payload.iter().map(|&x| x & HALO_BIT != 0).collect();
             let mut rng = base_rng.derive(0xD0 ^ depth);
-            let ord = nested_dissection(&central, strat, refiner, &mut rng);
+            let ord = nested_dissection_with_halo(&central, &halo_all, strat, refiner, &mut rng);
             frags.push(OrderFragment {
                 start,
                 verts: ord
-                    .iperm
                     .iter()
-                    .map(|&lv| all_payload[lv] as usize)
+                    .map(|&lv| (all_payload[lv] & !HALO_BIT) as usize)
                     .collect(),
             });
         }
@@ -233,9 +301,25 @@ pub(crate) fn dissect(
             verts: my_sep.iter().map(|&v| payload[v] as usize).collect(),
         });
     }
+    // Under `leafmethod=hamd` each side keeps its core vertices plus
+    // the adjacent ring of the fresh separator and of the inherited
+    // halo (HALO_BIT set by the induction; ring members not adjacent
+    // to the side are dropped). The halo-blind `leafmethod=mmd` never
+    // reads a ring, so it takes the plain induction — same recursion
+    // shape, no ring exchange or carriage.
     let keep0: Vec<bool> = part.iter().map(|&x| x == P0).collect();
     let keep1: Vec<bool> = part.iter().map(|&x| x == P1).collect();
-    let (ind0, ind1) = induce_both(comm, &dg, &keep0, &keep1, &payload, overlap);
+    let halo_cand: Option<Vec<bool>> =
+        carry_halo.then(|| part.iter().map(|&x| x == SEP || x == HALO_PART).collect());
+    let (ind0, ind1) = induce_both(
+        comm,
+        &dg,
+        &keep0,
+        &keep1,
+        halo_cand.as_deref(),
+        &payload,
+        overlap,
+    );
     mem.grow(ind0.dg.footprint_bytes() + ind1.dg.footprint_bytes());
     drop(dg);
     drop(payload);
@@ -363,6 +447,39 @@ mod tests {
         let c = order_at(4, g.clone(), "seed=5,overlap=1");
         assert_eq!(a[0].ordering.iperm, b[0].ordering.iperm);
         assert_eq!(a[0].ordering.iperm, c[0].ordering.iperm);
+    }
+
+    #[test]
+    fn hamd_leaves_with_carried_halo_stay_valid_across_p() {
+        // The halo ring rides through inductions, folds and splits; on
+        // any rank count the result must stay a valid permutation,
+        // identical on every rank.
+        let g = Arc::new(generators::grid3d(8, 8, 8));
+        for p in [2usize, 3, 5] {
+            let res = order_at(p, g.clone(), "leafmethod=hamd");
+            for r in &res {
+                r.ordering.validate().unwrap();
+                assert_eq!(r.ordering.iperm, res[0].ordering.iperm, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn carried_halo_never_hurts_vs_halo_blind_leaves() {
+        // Distributed ordering with halo-aware HAMD leaves must at
+        // least match the halo-blind MMD leaves (the bench asserts the
+        // strict improvement at scale; tier 1 pins "not worse").
+        let g = Arc::new(generators::grid3d(9, 9, 9));
+        let h = order_at(4, g.clone(), "leafmethod=hamd");
+        let m = order_at(4, g.clone(), "leafmethod=mmd");
+        let s_h = symbolic_cholesky(&g, &h[0].ordering);
+        let s_m = symbolic_cholesky(&g, &m[0].ordering);
+        assert!(
+            s_h.opc <= s_m.opc * 1.05,
+            "hamd {} vs mmd {}",
+            s_h.opc,
+            s_m.opc
+        );
     }
 
     #[test]

@@ -17,26 +17,40 @@
 use super::dgraph::DGraph;
 use crate::comm::Comm;
 
+/// Payload bit marking a vertex as **halo** in the distributed
+/// dissection recursion ([`crate::dist::dnd`]): an already-numbered
+/// separator vertex carried along (never re-partitioned, never
+/// re-emitted) so the single-rank sequential finish can hand
+/// [`crate::order::hamd::hamd`] the same separator ring a sequential run
+/// would see. Root vertex ids occupy the low bits; bit 63 is free on
+/// any graph this container can hold.
+pub const HALO_BIT: u64 = 1 << 63;
+
 /// An induced distributed subgraph plus the payload of its vertices.
 #[derive(Clone, Debug)]
 pub struct DistInduced {
     /// The induced distributed graph (fresh contiguous global ids).
     pub dg: DGraph,
-    /// Payload of each kept local vertex, in new local order.
+    /// Payload of each kept local vertex, in new local order (the halo
+    /// variant sets [`HALO_BIT`] on its halo members).
     pub orig: Vec<u64>,
 }
 
-/// Build the distributed subgraph induced by `keep` (one flag per local
-/// vertex), carrying `payload` along. Collective.
-pub fn induce_dist(comm: &Comm, dg: &DGraph, keep: &[bool], payload: &[u64]) -> DistInduced {
-    debug_assert_eq!(keep.len(), dg.nloc());
-    debug_assert_eq!(payload.len(), dg.nloc());
+/// Shared assembly core of the two inductions: fresh contiguous global
+/// renumbering of the `kept` local vertices (exclusive scan of
+/// per-rank counts), new-id halo exchange, and CSR assembly. An arc
+/// survives when its far endpoint was kept anywhere (its new id
+/// exists) *and* `arc_keep(v, a)` accepts it — callers supply a
+/// symmetric predicate over the local source `v` and its gst neighbor
+/// `a` so both directions of an edge agree. Collective.
+fn induce_assemble(
+    comm: &Comm,
+    dg: &DGraph,
+    kept: &[usize],
+    arc_keep: impl Fn(usize, usize) -> bool,
+) -> DGraph {
     let p = comm.size();
     let nloc = dg.nloc();
-
-    let kept: Vec<usize> = (0..nloc).filter(|&v| keep[v]).collect();
-
-    // Fresh contiguous global numbering of the survivors.
     let counts = comm.allgatherv(vec![kept.len() as u64]);
     let mut vtx = vec![0u64; p + 1];
     for r in 0..p {
@@ -51,7 +65,6 @@ pub fn induce_dist(comm: &Comm, dg: &DGraph, keep: &[bool], payload: &[u64]) -> 
     let ghost_newid = dg.halo_exchange(comm, &newid);
 
     let vwgt: Vec<i64> = kept.iter().map(|&v| dg.vwgt[v]).collect();
-    let orig: Vec<u64> = kept.iter().map(|&v| payload[v]).collect();
     let rows: Vec<Vec<(u64, i64)>> = kept
         .iter()
         .map(|&v| {
@@ -65,13 +78,80 @@ pub fn induce_dist(comm: &Comm, dg: &DGraph, keep: &[bool], payload: &[u64]) -> 
                     } else {
                         ghost_newid[a - nloc]
                     };
-                    (nid != u64::MAX).then_some((nid, w))
+                    (nid != u64::MAX && arc_keep(v, a)).then_some((nid, w))
                 })
                 .collect()
         })
         .collect();
+    DGraph::from_rows(comm, vtx, vwgt, rows)
+}
+
+/// Build the distributed subgraph induced by `keep` (one flag per local
+/// vertex), carrying `payload` along. Collective.
+pub fn induce_dist(comm: &Comm, dg: &DGraph, keep: &[bool], payload: &[u64]) -> DistInduced {
+    debug_assert_eq!(keep.len(), dg.nloc());
+    debug_assert_eq!(payload.len(), dg.nloc());
+    let kept: Vec<usize> = (0..dg.nloc()).filter(|&v| keep[v]).collect();
+    let orig: Vec<u64> = kept.iter().map(|&v| payload[v]).collect();
     DistInduced {
-        dg: DGraph::from_rows(comm, vtx, vwgt, rows),
+        dg: induce_assemble(comm, dg, &kept, |_, _| true),
+        orig,
+    }
+}
+
+/// Build the distributed subgraph induced by the `keep_core` vertices
+/// **plus their one-ring halo**: every `halo_cand` vertex adjacent to
+/// at least one core vertex (its own or a remote one) is kept too,
+/// with [`HALO_BIT`] set on its payload. Halo–halo edges are dropped —
+/// they can influence no core degree and no element, so carrying them
+/// through the recursion would only bloat every level below.
+/// Collective.
+pub fn induce_dist_halo(
+    comm: &Comm,
+    dg: &DGraph,
+    keep_core: &[bool],
+    halo_cand: &[bool],
+    payload: &[u64],
+) -> DistInduced {
+    debug_assert_eq!(keep_core.len(), dg.nloc());
+    debug_assert_eq!(halo_cand.len(), dg.nloc());
+    debug_assert_eq!(payload.len(), dg.nloc());
+    let nloc = dg.nloc();
+
+    // Core membership of the ghosts decides both which halo candidates
+    // survive and which arcs do (one flag exchange per call).
+    let core_flags: Vec<u8> = keep_core.iter().map(|&c| c as u8).collect();
+    let ghost_core = dg.halo_exchange(comm, &core_flags);
+    let is_core_gst = |a: usize| -> bool {
+        if a < nloc {
+            keep_core[a]
+        } else {
+            ghost_core[a - nloc] != 0
+        }
+    };
+
+    let kept: Vec<usize> = (0..nloc)
+        .filter(|&v| {
+            keep_core[v]
+                || (halo_cand[v] && dg.neighbors_gst(v).iter().any(|&a| is_core_gst(a as usize)))
+        })
+        .collect();
+    let orig: Vec<u64> = kept
+        .iter()
+        .map(|&v| {
+            if keep_core[v] {
+                payload[v]
+            } else {
+                payload[v] | HALO_BIT
+            }
+        })
+        .collect();
+    // An arc survives when at least one endpoint is core (a symmetric
+    // rule: the reverse arc evaluates identically), which is exactly
+    // the halo–halo-edge drop. Core and halo vertices interleave
+    // freely within a rank's renumbered block.
+    DistInduced {
+        dg: induce_assemble(comm, dg, &kept, |v, a| keep_core[v] || is_core_gst(a)),
         orig,
     }
 }
@@ -113,5 +193,46 @@ mod tests {
             .filter(|&v| (v as usize % nx) < nx / 2)
             .collect();
         assert_eq!(orig, want);
+    }
+
+    #[test]
+    fn halo_induction_matches_sequential_ring() {
+        // Core = left half of a grid, every other vertex a halo
+        // candidate: the distributed result must match the sequential
+        // `induce_with_halo` (same vertex count, same edge count —
+        // halo–halo edges dropped on both sides), and exactly the ring
+        // must carry HALO_BIT.
+        let nx = 9;
+        let ny = 7;
+        let g = Arc::new(generators::grid2d(nx, ny));
+        let gref = g.clone();
+        let (res, _) = comm::run(3, move |c| {
+            let dg = DGraph::from_global(&c, &g);
+            let keep_core: Vec<bool> = (0..dg.nloc())
+                .map(|v| (dg.glb(v) as usize % nx) < nx / 2)
+                .collect();
+            let halo_cand: Vec<bool> = keep_core.iter().map(|&k| !k).collect();
+            let payload: Vec<u64> = (0..dg.nloc()).map(|v| dg.glb(v)).collect();
+            let ind = induce_dist_halo(&c, &dg, &keep_core, &halo_cand, &payload);
+            let central = ind.dg.centralize_all(&c);
+            central.validate().unwrap();
+            (central, ind.orig.clone())
+        });
+        let core: Vec<usize> = (0..gref.n()).filter(|v| v % nx < nx / 2).collect();
+        let seq = crate::graph::induce_with_halo(&gref, &core);
+        for (central, _) in &res {
+            assert_eq!(central.n(), seq.graph.n());
+            assert_eq!(central.m(), seq.graph.m());
+        }
+        let mut halo_ids: Vec<u64> = res
+            .iter()
+            .flat_map(|(_, o)| o.iter().copied())
+            .filter(|&x| x & HALO_BIT != 0)
+            .map(|x| x & !HALO_BIT)
+            .collect();
+        halo_ids.sort_unstable();
+        let mut want: Vec<u64> = seq.orig[seq.n_core..].iter().map(|&v| v as u64).collect();
+        want.sort_unstable();
+        assert_eq!(halo_ids, want);
     }
 }

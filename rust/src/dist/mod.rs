@@ -17,7 +17,11 @@
 //! * [`fold`] — folding onto either half of the rank range, for any
 //!   rank count; the building block of folding-with-duplication (§3.2);
 //! * [`induce`] — distributed induced subgraphs with payload carrying,
-//!   optionally built two-at-a-time by an overlap thread (§3.1);
+//!   optionally built two-at-a-time by an overlap thread (§3.1); the
+//!   halo variant ([`induce::induce_dist_halo`]) additionally keeps
+//!   each side's one-ring of already-numbered separator vertices as
+//!   flagged halo members ([`induce::HALO_BIT`]) for halo-aware leaf
+//!   ordering;
 //! * [`dband`] — distributed band-graph extraction: the width-`w` band
 //!   around a projected separator as a [`dgraph::DGraph`] in its own
 //!   right, with two anchor vertices standing for the excluded parts
@@ -39,8 +43,10 @@
 //!   multi-sequential on small centralized bands, distributed diffusion
 //!   on large ones (§3.2–§3.3);
 //! * [`dnd`] — parallel nested dissection driving it all down to
-//!   sequential minimum-degree leaves (§3.1, re-exported here as
-//!   [`parallel_order`]).
+//!   sequential (halo) minimum-degree leaves (§3.1, re-exported here
+//!   as [`parallel_order`]); separator rings are carried as halo
+//!   vertices so the single-rank sequential finish orders its leaves
+//!   with the same halo a sequential run would see.
 //!
 //! Every collective function in this module must be called by all ranks
 //! of its communicator in the same order — exactly the contract of the

@@ -5,7 +5,8 @@
 //! vertex ids back to the ids of the parent graph, so leaf orderings can
 //! be assembled into the global inverse permutation (paper §2.2).
 
-use super::Graph;
+use super::{Graph, GraphBuilder};
+use std::collections::HashMap;
 
 /// A subgraph plus the map back to the parent graph's vertex ids.
 #[derive(Clone, Debug)]
@@ -65,6 +66,78 @@ impl InducedGraph {
     }
 }
 
+/// A subgraph induced by a core vertex set **plus its one-ring halo**:
+/// the out-of-core neighbors of the core, appended after the core
+/// vertices. Built by [`induce_with_halo`] for halo-aware leaf ordering
+/// (`order::hamd`): in nested dissection the ring around a leaf
+/// consists exactly of already-numbered separator vertices, which HAMD
+/// must see but never order.
+#[derive(Clone, Debug)]
+pub struct HaloInduced {
+    /// The induced subgraph: core vertices first (`0..n_core`, in the
+    /// order the core list gave them), halo vertices after.
+    pub graph: Graph,
+    /// `orig[local] = parent-graph vertex id`, core then halo.
+    pub orig: Vec<usize>,
+    /// Number of core vertices; `n_core..graph.n()` are the halo.
+    pub n_core: usize,
+}
+
+impl HaloInduced {
+    /// Per-vertex halo mask (`true` for the appended ring vertices) in
+    /// the shape [`crate::order::hamd::hamd`] consumes.
+    pub fn halo_mask(&self) -> Vec<bool> {
+        (0..self.graph.n()).map(|v| v >= self.n_core).collect()
+    }
+}
+
+/// Build the subgraph induced by the `core` vertices of `g` together
+/// with their one-ring halo.
+///
+/// Core vertices keep the order of the `core` slice (local id `i` is
+/// `core[i]`); every non-core neighbor of a core vertex becomes a halo
+/// vertex appended after the core block. Core–core and core–halo edges
+/// are carried over with their weights; **halo–halo edges are
+/// dropped** — halo vertices are never eliminated, so edges among them
+/// can influence no core degree and no element.
+pub fn induce_with_halo(g: &Graph, core: &[usize]) -> HaloInduced {
+    let n_core = core.len();
+    let mut local: HashMap<usize, u32> = HashMap::with_capacity(n_core * 2);
+    let mut orig: Vec<usize> = core.to_vec();
+    for (i, &cv) in core.iter().enumerate() {
+        local.insert(cv, i as u32);
+    }
+    debug_assert_eq!(local.len(), n_core, "duplicate core vertex");
+    for &cv in core {
+        for &u in g.neighbors(cv) {
+            let u = u as usize;
+            if let std::collections::hash_map::Entry::Vacant(slot) = local.entry(u) {
+                slot.insert(orig.len() as u32);
+                orig.push(u);
+            }
+        }
+    }
+    let mut b = GraphBuilder::new(orig.len());
+    for (i, &ov) in orig.iter().enumerate() {
+        b.set_vwgt(i, g.vwgt[ov]);
+    }
+    for (lv, &cv) in core.iter().enumerate() {
+        for (&u, &w) in g.neighbors(cv).iter().zip(g.edge_weights(cv)) {
+            let lu = local[&(u as usize)] as usize;
+            // Core–core edges are seen from both endpoints: add once.
+            // Core–halo edges are seen from the core side only.
+            if lu >= n_core || lu > lv {
+                b.add_edge_w(lv, lu, w);
+            }
+        }
+    }
+    HaloInduced {
+        graph: b.build().expect("halo-induced subgraph is valid"),
+        orig,
+        n_core,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +180,60 @@ mod tests {
         let ind = InducedGraph::build(&g, |v| (v % 8) > 0 && (v % 8) < 7);
         ind.graph.validate().unwrap();
         assert_eq!(ind.n(), 48);
+    }
+
+    #[test]
+    fn halo_ring_of_a_path_interior() {
+        // Path 0-1-2-3-4, core {1,2,3}: halo is {0,4}.
+        let g = generators::path(5, 1);
+        let h = induce_with_halo(&g, &[1, 2, 3]);
+        h.graph.validate().unwrap();
+        assert_eq!(h.n_core, 3);
+        assert_eq!(h.orig, vec![1, 2, 3, 0, 4]);
+        assert_eq!(h.graph.m(), 4); // 1-2, 2-3 plus the two ring edges
+        assert_eq!(h.halo_mask(), vec![false, false, false, true, true]);
+    }
+
+    #[test]
+    fn halo_halo_edges_are_dropped() {
+        // Triangle 0-1-2 plus pendant 3 on 0; core {3, 0}: halo {1,2}
+        // but the 1-2 edge must not survive.
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.add_edge(0, 3);
+        let g = b.build().unwrap();
+        let h = induce_with_halo(&g, &[3, 0]);
+        h.graph.validate().unwrap();
+        assert_eq!(h.n_core, 2);
+        assert_eq!(h.graph.n(), 4);
+        assert_eq!(h.graph.m(), 3); // 3-0, 0-1, 0-2; no 1-2
+    }
+
+    #[test]
+    fn halo_preserves_weights_and_no_ring_when_closed() {
+        let mut b = crate::graph::GraphBuilder::new(3);
+        b.set_vwgt(2, 9);
+        b.add_edge_w(0, 1, 5);
+        b.add_edge_w(1, 2, 7);
+        let g = b.build().unwrap();
+        let h = induce_with_halo(&g, &[1, 0]);
+        assert_eq!(h.orig, vec![1, 0, 2]);
+        assert_eq!(h.graph.vwgt, vec![1, 1, 9]);
+        // Local 0 = orig 1: neighbors are local 1 (w 5) and halo 2 (w 7).
+        let mut pairs: Vec<(u32, i64)> = h
+            .graph
+            .neighbors(0)
+            .iter()
+            .copied()
+            .zip(h.graph.edge_weights(0).iter().copied())
+            .collect();
+        pairs.sort_unstable();
+        assert_eq!(pairs, vec![(1, 5), (2, 7)]);
+        // Core covering the whole graph leaves no halo.
+        let full = induce_with_halo(&g, &[0, 1, 2]);
+        assert_eq!(full.n_core, 3);
+        assert_eq!(full.graph.n(), 3);
     }
 }

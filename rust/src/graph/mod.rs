@@ -8,7 +8,7 @@ pub mod induced;
 pub mod io;
 
 pub use builder::GraphBuilder;
-pub use induced::InducedGraph;
+pub use induced::{induce_with_halo, HaloInduced, InducedGraph};
 
 use crate::{Error, Result};
 

@@ -9,7 +9,9 @@
 //!   bisection (heavy-edge matching coarsening, greedy-graph-growing
 //!   initial separators, vertex Fiduccia–Mattheyses refinement on
 //!   width-limited *band graphs*), nested dissection, and minimum-degree
-//!   leaf ordering ([`sep`], [`order`]);
+//!   leaf ordering — halo approximate minimum degree by default, with
+//!   each leaf seeing its ring of already-numbered separator vertices
+//!   ([`sep`], [`order`]);
 //! * a **distributed layer** mirroring the paper's MPI algorithms on an
 //!   in-process, thread-per-rank communicator: distributed graphs with
 //!   ghost/halo indexing, parallel probabilistic matching, coarsening with

@@ -1,0 +1,193 @@
+//! Degree-bucket lists shared by the minimum-degree orderers.
+//!
+//! Both [`crate::order::mmd`] and [`crate::order::hamd`] repeatedly need
+//! "give me a vertex of minimum (approximate) degree" plus O(1)
+//! decrease/increase of any vertex's key — the access pattern degree
+//! lists serve exactly (and a binary heap only approximates through
+//! lazy deletion and stale-entry purging). The structure is the classic
+//! doubly-linked bucket array: `head[d]` chains the vertices currently
+//! filed under degree `d`, and a monotone `min` cursor restarts only
+//! when an insert undercuts it.
+
+/// Doubly-linked degree buckets over a fixed id universe `0..n`.
+///
+/// Degrees are clamped to `n` (a degree can never meaningfully exceed
+/// the number of other vertices, and the clamp keeps the bucket array
+/// bounded). Every operation is O(1) except the min scan, which
+/// amortizes over the monotone cursor.
+#[derive(Clone, Debug)]
+pub struct DegreeLists {
+    /// `head[d]` = first vertex filed under degree `d`, or `NIL`.
+    head: Vec<i32>,
+    /// Forward links of the per-degree chains.
+    next: Vec<i32>,
+    /// Backward links; `prev[v] < 0` encodes "v heads bucket `-prev-1`".
+    prev: Vec<i32>,
+    /// Current filed degree of each member (unspecified for absentees).
+    deg: Vec<u32>,
+    /// Membership flag.
+    present: Vec<bool>,
+    /// Lower bound on the smallest non-empty bucket.
+    min: usize,
+    /// Number of filed vertices.
+    len: usize,
+}
+
+const NIL: i32 = -1;
+
+impl DegreeLists {
+    /// Empty lists over the id universe `0..n`.
+    pub fn new(n: usize) -> DegreeLists {
+        DegreeLists {
+            head: vec![NIL; n + 1],
+            next: vec![NIL; n],
+            prev: vec![NIL; n],
+            deg: vec![0; n],
+            present: vec![false; n],
+            min: 0,
+            len: 0,
+        }
+    }
+
+    /// Number of filed vertices.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Are the lists empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Is `v` currently filed?
+    pub fn contains(&self, v: usize) -> bool {
+        self.present[v]
+    }
+
+    /// File `v` under degree `d` (clamped to `n`). `v` must be absent.
+    pub fn insert(&mut self, v: usize, d: usize) {
+        debug_assert!(!self.present[v], "insert of filed vertex {v}");
+        let d = d.min(self.head.len() - 1);
+        let h = self.head[d];
+        self.next[v] = h;
+        self.prev[v] = -(d as i32) - 1;
+        if h != NIL {
+            self.prev[h as usize] = v as i32;
+        }
+        self.head[d] = v as i32;
+        self.deg[v] = d as u32;
+        self.present[v] = true;
+        self.len += 1;
+        if d < self.min {
+            self.min = d;
+        }
+    }
+
+    /// Unfile `v`. `v` must be present.
+    pub fn remove(&mut self, v: usize) {
+        debug_assert!(self.present[v], "remove of absent vertex {v}");
+        let (p, nx) = (self.prev[v], self.next[v]);
+        if nx != NIL {
+            self.prev[nx as usize] = p;
+        }
+        if p >= 0 {
+            self.next[p as usize] = nx;
+        } else {
+            self.head[(-p - 1) as usize] = nx;
+        }
+        self.present[v] = false;
+        self.len -= 1;
+    }
+
+    /// Re-file `v` under degree `d` (insert if absent).
+    pub fn update(&mut self, v: usize, d: usize) {
+        if self.present[v] {
+            if self.deg[v] as usize == d.min(self.head.len() - 1) {
+                return;
+            }
+            self.remove(v);
+        }
+        self.insert(v, d);
+    }
+
+    /// Smallest filed degree, advancing the cursor past empty buckets.
+    pub fn min_degree(&mut self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.head[self.min] == NIL {
+            self.min += 1;
+        }
+        Some(self.min)
+    }
+
+    /// Unfile and return a vertex of minimum degree with its degree.
+    pub fn pop_min(&mut self) -> Option<(usize, usize)> {
+        let d = self.min_degree()?;
+        let v = self.head[d] as usize;
+        self.remove(v);
+        Some((v, d))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_degree_order() {
+        let mut l = DegreeLists::new(5);
+        l.insert(0, 3);
+        l.insert(1, 1);
+        l.insert(2, 2);
+        assert_eq!(l.pop_min(), Some((1, 1)));
+        assert_eq!(l.pop_min(), Some((2, 2)));
+        assert_eq!(l.pop_min(), Some((0, 3)));
+        assert_eq!(l.pop_min(), None);
+    }
+
+    #[test]
+    fn update_moves_between_buckets() {
+        let mut l = DegreeLists::new(4);
+        l.insert(0, 3);
+        l.insert(1, 3);
+        l.update(0, 1); // decrease below the cursor
+        assert_eq!(l.min_degree(), Some(1));
+        assert_eq!(l.pop_min(), Some((0, 1)));
+        l.update(1, 2);
+        assert_eq!(l.pop_min(), Some((1, 2)));
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn update_of_absent_inserts() {
+        let mut l = DegreeLists::new(3);
+        l.update(2, 0);
+        assert!(l.contains(2));
+        assert_eq!(l.len(), 1);
+    }
+
+    #[test]
+    fn remove_from_middle_of_chain() {
+        let mut l = DegreeLists::new(4);
+        for v in 0..4 {
+            l.insert(v, 2);
+        }
+        l.remove(2); // interior of the bucket-2 chain
+        l.remove(3); // head of the chain
+        let mut seen = Vec::new();
+        while let Some((v, d)) = l.pop_min() {
+            assert_eq!(d, 2);
+            seen.push(v);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1]);
+    }
+
+    #[test]
+    fn degrees_clamp_to_universe() {
+        let mut l = DegreeLists::new(2);
+        l.insert(0, 1_000_000);
+        assert_eq!(l.pop_min(), Some((0, 2)));
+    }
+}

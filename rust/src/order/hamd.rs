@@ -1,0 +1,451 @@
+//! Halo approximate minimum degree (HAMD) ordering.
+//!
+//! The paper couples nested dissection with *halo* approximate minimum
+//! degree on the leaves (§3.1, [10]): a leaf subgraph is ordered
+//! together with the ring of already-numbered separator vertices around
+//! it (the **halo**), so boundary vertices see their true environment —
+//! a halo neighbor inflates the degree of the leaf vertices it touches
+//! and joins the cliques (elements) their eliminations create, but is
+//! itself never selected for elimination (its number lives higher up,
+//! in a separator fragment).
+//!
+//! The engine is a quotient-graph AMD in the Amestoy–Davis–Duff mold
+//! (see "Parallelizing the Approximate Minimum Degree Ordering
+//! Algorithm", PAPERS.md):
+//!
+//! * **approximate external degrees** — after eliminating pivot `p`
+//!   with element `Lp`, each `i ∈ Lp` gets the ADD bound
+//!   `d̂ᵢ = min(active − wᵢ,  d_prev + |Lp \ i|,  |Aᵢ \ Lp| + |Lp \ i|
+//!   + Σ_{e ∋ i, e ≠ p} |Lₑ \ Lp|)` — never cheaper than one scan of
+//!   `i`'s lists, never a full reach recomputation;
+//! * **supervariables** — vertices of `Lp` with identical quotient
+//!   adjacency (detected by a commutative hash, confirmed by list
+//!   comparison) merge into one supervariable; members are emitted
+//!   consecutively when their principal is eliminated;
+//! * **element absorption** — the elements adjacent to `p` are absorbed
+//!   into the new element, and *aggressive absorption* additionally
+//!   swallows any element whose variables all lie in `Lp ∪ {p}`
+//!   (`|Lₑ \ Lp| = 0`);
+//! * **degree buckets** ([`crate::order::degrees::DegreeLists`]) —
+//!   O(1) re-filing under the new approximate degree, no heap.
+//!
+//! Degrees are counted in *member* units (a supervariable of `k`
+//! merged vertices weighs `k`), the count the OPC estimate cares
+//! about; input vertex weights play no role at leaf scale.
+
+use super::degrees::DegreeLists;
+use crate::graph::Graph;
+
+/// State of one id in the quotient graph.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Node {
+    /// Principal supervariable (core or halo), still uneliminated.
+    Var,
+    /// Variable merged into another supervariable (non-principal).
+    Merged,
+    /// Eliminated pivot: the id now names an element.
+    Elem,
+    /// Element absorbed into a newer element.
+    Dead,
+}
+
+/// Result of a HAMD run: the elimination order of the non-halo
+/// vertices, plus the supervariable blocks it was emitted in.
+#[derive(Clone, Debug)]
+pub struct HamdOrder {
+    /// Core (non-halo) vertex ids in elimination sequence — an inverse
+    /// permutation fragment over exactly the non-halo vertices.
+    pub order: Vec<usize>,
+    /// `(start, len)` ranges of `order`, one per eliminated pivot: the
+    /// members of one supervariable, emitted consecutively.
+    pub blocks: Vec<(usize, usize)>,
+}
+
+/// Commutative single-id mixer for the supervariable hash (order of the
+/// adjacency lists must not matter, so contributions are summed).
+#[inline]
+fn mix(x: usize) -> u64 {
+    (x as u64 ^ 0xA24B_AED4_963E_E407).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Compute a halo-AMD elimination order of `g`.
+///
+/// `halo[v]` marks the halo vertices: they contribute to degrees and
+/// participate in elements exactly like ordinary variables, but are
+/// never selected for elimination and never appear in the result. With
+/// an all-`false` halo this is a plain approximate-minimum-degree
+/// ordering of the whole graph.
+pub fn hamd(g: &Graph, halo: &[bool]) -> HamdOrder {
+    let n = g.n();
+    debug_assert_eq!(halo.len(), n);
+    let ncore = halo.iter().filter(|&&h| !h).count();
+
+    let mut kind = vec![Node::Var; n];
+    // Supervariable weights in member units.
+    let mut wgt: Vec<i64> = vec![1; n];
+    // Quotient adjacency: principal-variable and element lists (both
+    // may hold stale ids, purged whenever a list is touched).
+    let mut adjv: Vec<Vec<u32>> = (0..n).map(|v| g.neighbors(v).to_vec()).collect();
+    let mut adje: Vec<Vec<u32>> = vec![Vec::new(); n];
+    // Member variables of each element / merged members of each
+    // supervariable.
+    let mut evars: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut members: Vec<Vec<u32>> = (0..n).map(|v| vec![v as u32]).collect();
+    // Approximate external degree (exact at initialization).
+    let mut degree: Vec<i64> = (0..n).map(|v| g.degree(v) as i64).collect();
+    let mut hashes: Vec<u64> = vec![0; n];
+    // Stamp workspace for Lp membership; `ew`/`etag` hold the per-round
+    // |Le \ Lp| counters of the ADD external sum.
+    let mut stamp = vec![0u64; n];
+    let mut tag = 0u64;
+    let mut ew: Vec<i64> = vec![0; n];
+    let mut etag = vec![0u64; n];
+    let mut eround = 0u64;
+    // Total weight of uneliminated variables, core and halo — the
+    // `active − wᵢ` term of the degree bound.
+    let mut active: i64 = n as i64;
+
+    let mut lists = DegreeLists::new(n);
+    for v in 0..n {
+        if !halo[v] {
+            lists.insert(v, degree[v] as usize);
+        }
+    }
+
+    let mut order = Vec::with_capacity(ncore);
+    let mut blocks = Vec::new();
+    while let Some((p, _)) = lists.pop_min() {
+        debug_assert_eq!(kind[p], Node::Var);
+        debug_assert!(!halo[p]);
+
+        // Lp: the principal variables reachable from p through direct
+        // edges and through its adjacent elements (which p absorbs).
+        tag += 1;
+        stamp[p] = tag;
+        let mut lp: Vec<u32> = Vec::new();
+        for &u in &adjv[p] {
+            let ui = u as usize;
+            if kind[ui] == Node::Var && stamp[ui] != tag {
+                stamp[ui] = tag;
+                lp.push(u);
+            }
+        }
+        for &e in &adje[p] {
+            let ei = e as usize;
+            if kind[ei] != Node::Elem {
+                continue;
+            }
+            for &u in &evars[ei] {
+                let ui = u as usize;
+                if kind[ui] == Node::Var && stamp[ui] != tag {
+                    stamp[ui] = tag;
+                    lp.push(u);
+                }
+            }
+            kind[ei] = Node::Dead; // absorbed into the new element p
+            evars[ei] = Vec::new();
+        }
+        let lp_wgt: i64 = lp.iter().map(|&u| wgt[u as usize]).sum();
+
+        // Eliminate p: emit its members as one consecutive block and
+        // publish the new element.
+        kind[p] = Node::Elem;
+        active -= wgt[p];
+        let bstart = order.len();
+        for &m in &members[p] {
+            order.push(m as usize);
+        }
+        blocks.push((bstart, order.len() - bstart));
+        members[p] = Vec::new();
+        adjv[p] = Vec::new();
+        adje[p] = Vec::new();
+        evars[p] = lp.clone();
+
+        // Round 1 over Lp: set ew[e] = |Le \ Lp| (in weight) for every
+        // live element adjacent to Lp, purging lists on the way.
+        eround += 1;
+        for &i in &lp {
+            let ii = i as usize;
+            adje[ii].retain(|&e| kind[e as usize] == Node::Elem);
+            for &e in &adje[ii] {
+                let ei = e as usize;
+                if etag[ei] != eround {
+                    etag[ei] = eround;
+                    evars[ei].retain(|&u| kind[u as usize] == Node::Var);
+                    ew[ei] = evars[ei].iter().map(|&u| wgt[u as usize]).sum();
+                }
+                ew[ei] -= wgt[ii];
+            }
+        }
+
+        // Round 2 over Lp: approximate degrees, aggressive absorption,
+        // adjacency pruning and the supervariable hash.
+        for &i in &lp {
+            let ii = i as usize;
+            let mut hash = mix(p);
+            let mut ext_sum: i64 = 0;
+            let mut new_adje: Vec<u32> = Vec::with_capacity(adje[ii].len() + 1);
+            for &e in &adje[ii] {
+                let ei = e as usize;
+                if kind[ei] != Node::Elem {
+                    continue; // absorbed earlier in this very round
+                }
+                if ew[ei] <= 0 {
+                    // Aggressive absorption: Le ⊆ Lp ∪ {p}, so element
+                    // e is redundant next to the new element p.
+                    kind[ei] = Node::Dead;
+                    evars[ei] = Vec::new();
+                    continue;
+                }
+                ext_sum += ew[ei];
+                new_adje.push(e);
+                hash = hash.wrapping_add(mix(ei));
+            }
+            new_adje.push(p as u32);
+            adje[ii] = new_adje;
+
+            let mut a_ext: i64 = 0;
+            let mut new_adjv: Vec<u32> = Vec::with_capacity(adjv[ii].len());
+            for &u in &adjv[ii] {
+                let ui = u as usize;
+                // Drop eliminated/merged ids and the members of Lp —
+                // those are now reachable through element p.
+                if kind[ui] != Node::Var || stamp[ui] == tag {
+                    continue;
+                }
+                a_ext += wgt[ui];
+                new_adjv.push(u);
+                hash = hash.wrapping_add(mix(ui));
+            }
+            adjv[ii] = new_adjv;
+
+            let ext_p = lp_wgt - wgt[ii]; // |Lp \ i|
+            let d = (active - wgt[ii])
+                .min(degree[ii] + ext_p)
+                .min(a_ext + ext_p + ext_sum)
+                .max(0);
+            degree[ii] = d;
+            hashes[ii] = hash;
+            if !halo[ii] {
+                lists.update(ii, d as usize);
+            }
+        }
+
+        // Supervariable detection: equal hash → compare the (pruned)
+        // lists; indistinguishable pairs merge. Core merges with core,
+        // halo with halo — a halo member must never ride into a core
+        // supervariable's emitted block.
+        let mut cand: Vec<u32> = lp
+            .iter()
+            .copied()
+            .filter(|&u| kind[u as usize] == Node::Var)
+            .collect();
+        cand.sort_unstable_by_key(|&u| (hashes[u as usize], u));
+        let mut gs = 0;
+        while gs < cand.len() {
+            let mut ge = gs + 1;
+            while ge < cand.len() && hashes[cand[ge] as usize] == hashes[cand[gs] as usize] {
+                ge += 1;
+            }
+            let mut a = gs;
+            while a < ge {
+                let ii = cand[a] as usize;
+                a += 1;
+                if kind[ii] != Node::Var {
+                    continue;
+                }
+                adjv[ii].sort_unstable();
+                adje[ii].sort_unstable();
+                for &cj in &cand[a..ge] {
+                    let jj = cj as usize;
+                    if kind[jj] != Node::Var || halo[ii] != halo[jj] {
+                        continue;
+                    }
+                    adjv[jj].sort_unstable();
+                    adje[jj].sort_unstable();
+                    if adjv[ii] != adjv[jj] || adje[ii] != adje[jj] {
+                        continue;
+                    }
+                    // Merge j into i.
+                    wgt[ii] += wgt[jj];
+                    let mj = std::mem::take(&mut members[jj]);
+                    members[ii].extend(mj);
+                    kind[jj] = Node::Merged;
+                    adjv[jj] = Vec::new();
+                    adje[jj] = Vec::new();
+                    degree[ii] = (degree[ii] - wgt[jj]).max(0);
+                    if !halo[jj] {
+                        lists.remove(jj);
+                    }
+                }
+                if !halo[ii] {
+                    lists.update(ii, degree[ii] as usize);
+                }
+            }
+            gs = ge;
+        }
+    }
+
+    debug_assert_eq!(order.len(), ncore, "HAMD must emit every core vertex");
+    HamdOrder { order, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+    use crate::order::{symbolic_cholesky, Ordering};
+
+    fn no_halo(n: usize) -> Vec<bool> {
+        vec![false; n]
+    }
+
+    fn order_of(g: &Graph) -> Ordering {
+        Ordering::from_iperm(hamd(g, &no_halo(g.n())).order).unwrap()
+    }
+
+    #[test]
+    fn orders_every_vertex_once() {
+        let g = generators::grid2d(9, 9);
+        order_of(&g).validate().unwrap();
+    }
+
+    #[test]
+    fn path_has_no_fill() {
+        let g = generators::path(60, 1);
+        let s = symbolic_cholesky(&g, &order_of(&g));
+        assert_eq!(s.nnz, 119);
+    }
+
+    #[test]
+    fn tree_has_no_fill() {
+        let mut b = GraphBuilder::new(31);
+        for v in 1..31 {
+            b.add_edge(v, (v - 1) / 2);
+        }
+        let g = b.build().unwrap();
+        let s = symbolic_cholesky(&g, &order_of(&g));
+        assert_eq!(s.nnz, 61);
+    }
+
+    #[test]
+    fn clique_fill_is_exact() {
+        let g = generators::complete(12);
+        let s = symbolic_cholesky(&g, &order_of(&g));
+        assert_eq!(s.nnz, (12 * 13 / 2) as u64);
+    }
+
+    #[test]
+    fn handles_disconnected_and_isolated() {
+        let mut b = GraphBuilder::new(7);
+        b.add_edge(0, 1);
+        b.add_edge(2, 3);
+        b.add_edge(3, 4);
+        let g = b.build().unwrap();
+        order_of(&g).validate().unwrap();
+    }
+
+    #[test]
+    fn halo_vertices_are_never_emitted() {
+        // Path 0-1-2-3-4 with {0, 4} as halo: only 1,2,3 are ordered.
+        let g = generators::path(5, 1);
+        let halo = vec![true, false, false, false, true];
+        let r = hamd(&g, &halo);
+        let mut got = r.order.clone();
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn halo_degree_pushes_boundary_vertices_later() {
+        // Star with hub 0 and leaves 1..=6, where leaf 1 additionally
+        // touches a 3-clique of halo vertices: its halo-aware degree
+        // (4) exceeds every other leaf's (1), so it must not be
+        // eliminated first.
+        let mut b = GraphBuilder::new(10);
+        for v in 1..=6 {
+            b.add_edge(0, v);
+        }
+        for h in 7..10 {
+            b.add_edge(1, h);
+            for h2 in (h + 1)..10 {
+                b.add_edge(h, h2);
+            }
+        }
+        let g = b.build().unwrap();
+        let mut halo = vec![false; 10];
+        for h in 7..10 {
+            halo[h] = true;
+        }
+        let r = hamd(&g, &halo);
+        assert_ne!(r.order[0], 1, "halo-loaded leaf eliminated first");
+        let mut got = r.order.clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..=6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn indistinguishable_twins_emit_consecutively() {
+        // Vertices 0 and 1 both see exactly {2, 3, 4} (and not each
+        // other): after the first pivot among {2,3,4} they hash equal,
+        // merge, and must occupy consecutive positions.
+        let mut b = GraphBuilder::new(5);
+        for t in [0usize, 1] {
+            for u in [2usize, 3, 4] {
+                b.add_edge(t, u);
+            }
+        }
+        b.add_edge(2, 3);
+        let g = b.build().unwrap();
+        let r = hamd(&g, &no_halo(5));
+        let pos0 = r.order.iter().position(|&v| v == 0).unwrap();
+        let pos1 = r.order.iter().position(|&v| v == 1).unwrap();
+        assert_eq!(
+            pos0.abs_diff(pos1),
+            1,
+            "twins split apart: {:?}",
+            r.order
+        );
+        assert!(
+            r.blocks.iter().any(|&(_, len)| len >= 2),
+            "no supervariable block was formed: {:?}",
+            r.blocks
+        );
+    }
+
+    #[test]
+    fn blocks_tile_the_order() {
+        let g = generators::irregular_mesh(10, 8, 3);
+        let r = hamd(&g, &no_halo(g.n()));
+        let mut covered = 0;
+        for &(s, l) in &r.blocks {
+            assert_eq!(s, covered, "blocks out of sequence");
+            assert!(l >= 1);
+            covered += l;
+        }
+        assert_eq!(covered, g.n());
+    }
+
+    #[test]
+    fn quality_tracks_exact_minimum_degree_on_grid() {
+        let g = generators::grid2d(14, 14);
+        let s_amd = symbolic_cholesky(&g, &order_of(&g));
+        let md = Ordering::from_iperm(crate::order::mmd::minimum_degree(&g)).unwrap();
+        let s_md = symbolic_cholesky(&g, &md);
+        assert!(
+            s_amd.opc <= s_md.opc * 1.10,
+            "AMD opc {} vs exact MD {}",
+            s_amd.opc,
+            s_md.opc
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let g = generators::irregular_mesh(12, 12, 9);
+        let a = hamd(&g, &no_halo(g.n()));
+        let b = hamd(&g, &no_halo(g.n()));
+        assert_eq!(a.order, b.order);
+        assert_eq!(a.blocks, b.blocks);
+    }
+}

@@ -1,18 +1,19 @@
 //! Minimum-degree ordering on a quotient graph.
 //!
 //! Nested dissection hands its leaf subgraphs to a minimum-degree method
-//! (the paper couples ND with halo-AMD [10]; minimum degree "is thus only
-//! used in a sequential context", §3.1). This is a clean quotient-graph
-//! implementation with exact external degrees, lazy heap updates and
-//! per-touch list compaction — quadratic worst case but effectively fast
-//! at leaf sizes, and usable standalone as a whole-graph comparator.
+//! (the paper couples ND with halo-AMD [10] —
+//! [`crate::order::hamd::hamd`], the default; minimum degree "is thus
+//! only used in a sequential context", §3.1). This is a clean quotient-graph implementation with
+//! exact external degrees recomputed at selection time over the shared
+//! degree buckets ([`crate::order::degrees::DegreeLists`]) — quadratic
+//! worst case but effectively fast at leaf sizes, and usable standalone
+//! as the halo-blind whole-graph comparator (`leafmethod=mmd`).
 
+use super::degrees::DegreeLists;
 use crate::graph::Graph;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 
 /// State of one vertex id in the quotient graph.
-#[derive(Clone, Copy, PartialEq, Eq)]
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
 enum NodeState {
     /// Still a variable (uneliminated).
     Variable,
@@ -96,25 +97,26 @@ impl Quotient {
 pub fn minimum_degree(g: &Graph) -> Vec<usize> {
     let n = g.n();
     let mut q = Quotient::new(g);
-    let mut version = vec![0u32; n];
-    let mut heap: BinaryHeap<Reverse<(usize, usize, u32)>> = BinaryHeap::new();
+    // Degree buckets file every vertex under a LOWER bound of its true
+    // external degree; the exact degree is recomputed at selection
+    // time. The buckets support true remove/re-file, so no stale
+    // entries and no version counters exist.
+    let mut lists = DegreeLists::new(n);
     for v in 0..n {
-        heap.push(Reverse((g.degree(v), v, 0)));
+        lists.insert(v, g.degree(v));
     }
 
     let mut order = Vec::with_capacity(n);
-    while let Some(Reverse((_, v, ver))) = heap.pop() {
-        if q.state[v] != NodeState::Variable || ver != version[v] {
-            continue;
-        }
+    while let Some((v, _)) = lists.pop_min() {
+        debug_assert_eq!(q.state[v], NodeState::Variable);
         let reach = q.reach(v);
         let deg = reach.len();
-        // Lazy heap discipline: if the exact degree exceeds the next
-        // candidate's priority, requeue instead of eliminating.
-        if let Some(&Reverse((next_deg, _, _))) = heap.peek() {
+        // Lazy discipline: if the exact degree exceeds the smallest
+        // remaining bound, some other vertex may truly be smaller —
+        // re-file at the exact degree instead of eliminating.
+        if let Some(next_deg) = lists.min_degree() {
             if deg > next_deg {
-                version[v] += 1;
-                heap.push(Reverse((deg, v, version[v])));
+                lists.insert(v, deg);
                 continue;
             }
         }
@@ -131,13 +133,10 @@ pub fn minimum_degree(g: &Graph) -> Vec<usize> {
         for &u in &reach {
             let ui = u as usize;
             q.adje[ui].push(v as u32);
-            version[ui] += 1;
-            // Priority must be a LOWER bound of the true degree for the
-            // lazy heap to preserve minimum-degree order: u is adjacent to
-            // the other `deg - 1` members of the new element. The exact
-            // degree is recomputed at pop time.
-            let lower = deg.saturating_sub(1);
-            heap.push(Reverse((lower, ui, version[ui])));
+            // The new bound: u is adjacent to the other `deg - 1`
+            // members of the new element — still a lower bound of its
+            // true degree, re-filed in O(1).
+            lists.update(ui, deg.saturating_sub(1));
         }
         q.evars[v] = reach;
     }

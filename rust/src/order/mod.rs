@@ -1,14 +1,18 @@
 //! Orderings and their quality evaluation (S7–S8): permutation
 //! containers, elimination trees, symbolic Cholesky factorization (the
-//! paper's NNZ and OPC metrics), minimum-degree leaf ordering and
-//! sequential nested dissection.
+//! paper's NNZ and OPC metrics), the minimum-degree leaf orderers
+//! (exact-degree [`mmd`] and halo-approximate [`hamd`], over the shared
+//! [`degrees`] buckets) and sequential nested dissection.
 
+pub mod degrees;
 pub mod elimtree;
+pub mod hamd;
 pub mod mmd;
 pub mod nd;
 pub mod symbolic;
 
-pub use nd::nested_dissection;
+pub use hamd::{hamd, HamdOrder};
+pub use nd::{nested_dissection, nested_dissection_with_halo};
 pub use symbolic::{symbolic_cholesky, SymbolicStats};
 
 use crate::{Error, Result};

@@ -1,18 +1,34 @@
 //! Sequential nested dissection (§1, §3.1): recursively bisect with a
 //! multilevel vertex separator, give the separator the highest available
-//! indices, and order leaf subgraphs with minimum degree.
+//! indices, and order leaf subgraphs with a (halo) minimum-degree
+//! method.
+//!
+//! By nested-dissection structure the ring around any leaf — the
+//! vertices of the **root** graph adjacent to the leaf but outside it —
+//! consists exactly of separator vertices of enclosing levels (the two
+//! sides of a separator are never adjacent), i.e. of vertices numbered
+//! *after* the leaf. The leaf orderer therefore reconstructs the ring
+//! from the root graph ([`crate::graph::induce_with_halo`]) and hands
+//! it to [`crate::order::hamd::hamd`] as the halo, instead of ordering the
+//! leaf as if the separators around it did not exist
+//! (`leafmethod=hamd`, the default; `leafmethod=mmd` keeps the
+//! halo-blind exact-degree comparator).
 
+use super::hamd::hamd;
 use super::mmd::minimum_degree;
 use super::Ordering;
-use crate::graph::{Graph, InducedGraph};
+use crate::graph::{induce_with_halo, Graph, InducedGraph};
 use crate::rng::Rng;
 use crate::sep::{multilevel_separator, BandRefiner, P0, P1, SEP};
-use crate::strategy::Strategy;
+use crate::strategy::{LeafMethod, Strategy};
 
 /// One pending subproblem: a subgraph (with its map back to root ids) and
-/// the global start index of its ordering range (§2.2).
+/// the global start index of its ordering range (§2.2). `graph` is
+/// `None` exactly when the frame is already a `leafmethod=hamd` leaf —
+/// that path re-cuts the leaf from the root graph, so materializing
+/// the child CSR would be pure waste (leaves cover most of the graph).
 struct Frame {
-    graph: Graph,
+    graph: Option<Graph>,
     orig: Vec<usize>,
     start: usize,
 }
@@ -24,32 +40,82 @@ pub fn nested_dissection(
     refiner: &dyn BandRefiner,
     rng: &mut Rng,
 ) -> Ordering {
+    let iperm = nested_dissection_with_halo(g, &vec![false; g.n()], strat, refiner, rng);
+    let o = Ordering::from_iperm(iperm).expect("nested dissection covers all vertices");
+    debug_assert!(o.validate().is_ok());
+    o
+}
+
+/// Nested-dissection ordering of the **non-halo** vertices of `g`.
+///
+/// `halo[v]` marks vertices that surround the subproblem but are
+/// numbered elsewhere (the distributed recursion's already-emitted
+/// separators, [`crate::dist::dnd`]): they are excluded from every
+/// separator and from the result, but leaves ordered with
+/// `leafmethod=hamd` see them — like every enclosing separator — as
+/// halo. Returns the inverse-permutation fragment: position `k` holds
+/// the `g`-local id of the `k`-th ordered core vertex, `ncore` entries
+/// total. With an all-`false` halo this is the full ordering
+/// [`nested_dissection`] wraps.
+pub fn nested_dissection_with_halo(
+    g: &Graph,
+    halo: &[bool],
+    strat: &Strategy,
+    refiner: &dyn BandRefiner,
+    rng: &mut Rng,
+) -> Vec<usize> {
     let n = g.n();
-    let mut iperm = vec![usize::MAX; n];
-    let mut stack = vec![Frame {
-        graph: g.clone(),
-        orig: (0..n).collect(),
-        start: 0,
-    }];
+    debug_assert_eq!(halo.len(), n);
+    let ncore = halo.iter().filter(|&&h| !h).count();
+    let mut iperm = vec![usize::MAX; ncore];
+    // A subproblem that is already a hamd leaf never reads its own CSR
+    // (the leaf is re-cut from the root with its halo ring), so skip
+    // building one for it.
+    let hamd_leaf =
+        |len: usize| strat.nd.leaf_method == LeafMethod::Hamd && len <= strat.nd.leaf_threshold;
+    let root = if hamd_leaf(ncore) {
+        Frame {
+            graph: None,
+            orig: (0..n).filter(|&v| !halo[v]).collect(),
+            start: 0,
+        }
+    } else if ncore == n {
+        Frame {
+            graph: Some(g.clone()),
+            orig: (0..n).collect(),
+            start: 0,
+        }
+    } else {
+        let core = InducedGraph::build(g, |v| !halo[v]);
+        Frame {
+            graph: Some(core.graph),
+            orig: core.orig,
+            start: 0,
+        }
+    };
+    let mut stack = vec![root];
     while let Some(Frame { graph, orig, start }) = stack.pop() {
-        let nl = graph.n();
+        let nl = orig.len();
         if nl == 0 {
             continue;
         }
         if nl <= strat.nd.leaf_threshold {
-            order_leaf(&graph, &orig, start, &mut iperm);
+            order_leaf(g, graph.as_ref(), &orig, start, &mut iperm, strat);
             continue;
         }
+        let graph = graph.expect("frames above the leaf threshold carry their subgraph");
         let state = multilevel_separator(&graph, &strat.sep, refiner, rng);
         let mut counts = [0usize; 3];
         for &p in &state.part {
             counts[p as usize] += 1;
         }
         let (n0, n1, ns) = (counts[0], counts[1], counts[2]);
-        // Degenerate separator (empty side, or the separator swallowed the
-        // graph, e.g. on cliques): fall back to minimum degree.
+        // Degenerate separator (empty side, or the separator swallowed
+        // the graph, e.g. on cliques): the whole remaining subgraph is
+        // one leaf — emitted through the same fragment path as every
+        // other leaf, halo ring included.
         if n0 == 0 || n1 == 0 || ns as f64 > nl as f64 * strat.nd.max_sep_fraction {
-            order_leaf(&graph, &orig, start, &mut iperm);
+            order_leaf(g, Some(&graph), &orig, start, &mut iperm, strat);
             continue;
         }
         // Separator vertices take the highest indices of the range.
@@ -61,29 +127,59 @@ pub fn nested_dissection(
             }
         }
         // Recurse on the two parts; both frames inherit composed maps.
-        let part1 = InducedGraph::build(&graph, |v| state.part[v] == P1);
-        let orig1: Vec<usize> = part1.orig.iter().map(|&lv| orig[lv]).collect();
-        stack.push(Frame {
-            graph: part1.graph,
-            orig: orig1,
-            start: start + n0,
-        });
-        let part0 = InducedGraph::build(&graph, |v| state.part[v] == P0);
-        let orig0: Vec<usize> = part0.orig.iter().map(|&lv| orig[lv]).collect();
-        stack.push(Frame {
-            graph: part0.graph,
-            orig: orig0,
-            start,
-        });
+        // The side sizes are already known from the label counts, so a
+        // side that is a hamd leaf builds only its orig list and a
+        // materialized side takes `InducedGraph::build`'s own map.
+        let child = |pk: u8, nk: usize, start_k: usize| -> Frame {
+            if hamd_leaf(nk) {
+                Frame {
+                    graph: None,
+                    orig: (0..nl)
+                        .filter(|&v| state.part[v] == pk)
+                        .map(|v| orig[v])
+                        .collect(),
+                    start: start_k,
+                }
+            } else {
+                let ind = InducedGraph::build(&graph, |v| state.part[v] == pk);
+                Frame {
+                    graph: Some(ind.graph),
+                    orig: ind.orig.iter().map(|&lv| orig[lv]).collect(),
+                    start: start_k,
+                }
+            }
+        };
+        stack.push(child(P1, n1, start + n0));
+        stack.push(child(P0, n0, start));
     }
-    let o = Ordering::from_iperm(iperm).expect("nested dissection covers all vertices");
-    debug_assert!(o.validate().is_ok());
-    o
+    iperm
 }
 
-/// Order a leaf subgraph with minimum degree and write its fragment.
-fn order_leaf(graph: &Graph, orig: &[usize], start: usize, iperm: &mut [usize]) {
-    let ord = minimum_degree(graph);
+/// Order one leaf and write its fragment. `root` is the graph the
+/// recursion started from: under `leafmethod=hamd` the leaf is re-cut
+/// from it together with its one-ring of enclosing-separator (and
+/// initial-halo) vertices, so the minimum-degree process sees the
+/// boundary it really has. `leafmethod=mmd` orders the bare `graph`
+/// (always materialized for mmd frames; only hamd leaves skip it).
+fn order_leaf(
+    root: &Graph,
+    graph: Option<&Graph>,
+    orig: &[usize],
+    start: usize,
+    iperm: &mut [usize],
+    strat: &Strategy,
+) {
+    let ord: Vec<usize> = match strat.nd.leaf_method {
+        LeafMethod::Mmd => minimum_degree(graph.expect("mmd leaves carry their subgraph")),
+        LeafMethod::Hamd => {
+            // Core local ids in `induce_with_halo` follow the order of
+            // the `orig` slice, so the HAMD order indexes `orig`
+            // directly.
+            let h = induce_with_halo(root, orig);
+            hamd(&h.graph, &h.halo_mask()).order
+        }
+    };
+    debug_assert_eq!(ord.len(), orig.len());
     for (k, &lv) in ord.iter().enumerate() {
         iperm[start + k] = orig[lv];
     }
@@ -176,6 +272,61 @@ mod tests {
         let a = nd(&g, 7);
         let b = nd(&g, 7);
         assert_eq!(a.iperm, b.iperm);
+    }
+
+    #[test]
+    fn clique_fallback_fires_through_the_leaf_path_for_both_methods() {
+        // A clique far above the leaf threshold: the separator is
+        // degenerate at every level, so the empty-separator fallback
+        // must emit the whole subgraph through the leaf fragment path —
+        // under both leaf methods, with the exact dense fill.
+        let g = generators::complete(150);
+        for spec in ["leafmethod=mmd,leaf=20", "leafmethod=hamd,leaf=20"] {
+            let strat = Strategy::parse(spec).unwrap();
+            let refiner = FmRefiner::default();
+            let o = nested_dissection(&g, &strat, &refiner, &mut Rng::new(11));
+            o.validate().unwrap();
+            let s = symbolic_cholesky(&g, &o);
+            assert_eq!(s.nnz, (150 * 151 / 2) as u64, "{spec}");
+        }
+    }
+
+    #[test]
+    fn hamd_leaves_do_not_trail_mmd_on_grid3d() {
+        // The halo-aware default must at least match the halo-blind
+        // comparator on a 3D mesh (the acceptance suite asserts strict
+        // improvement at bench scale; this pins "never worse" in tier 1).
+        let g = generators::grid3d(9, 9, 9);
+        let refiner = FmRefiner::default();
+        let mut stats = Vec::new();
+        for spec in ["leafmethod=hamd", "leafmethod=mmd"] {
+            let strat = Strategy::parse(spec).unwrap();
+            let o = nested_dissection(&g, &strat, &refiner, &mut Rng::new(3));
+            o.validate().unwrap();
+            stats.push(symbolic_cholesky(&g, &o).opc);
+        }
+        assert!(
+            stats[0] <= stats[1] * 1.05,
+            "hamd {} vs mmd {}",
+            stats[0],
+            stats[1]
+        );
+    }
+
+    #[test]
+    fn with_halo_orders_exactly_the_core() {
+        // Keep the left 6 columns of a grid as core; columns 6..9 are
+        // halo. The fragment must be a permutation of the core ids.
+        let g = generators::grid2d(10, 8);
+        let halo: Vec<bool> = (0..80).map(|v| v % 10 >= 6).collect();
+        let strat = Strategy::default();
+        let refiner = FmRefiner::default();
+        let frag =
+            nested_dissection_with_halo(&g, &halo, &strat, &refiner, &mut Rng::new(5));
+        let mut got = frag.clone();
+        got.sort_unstable();
+        let want: Vec<usize> = (0..80).filter(|v| v % 10 < 6).collect();
+        assert_eq!(got, want);
     }
 
     #[test]

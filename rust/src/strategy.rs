@@ -87,6 +87,37 @@ impl Default for SepStrategy {
     }
 }
 
+/// Which minimum-degree method orders the nested-dissection leaves —
+/// the `leafmethod=` strategy knob (§3.1: the paper couples ND with
+/// halo approximate minimum degree [10]).
+///
+/// ```
+/// use ptscotch::strategy::{LeafMethod, Strategy};
+///
+/// // The paper-faithful halo-AMD is the default; `leafmethod=mmd`
+/// // pins the exact-degree, halo-blind comparator.
+/// assert_eq!(Strategy::default().nd.leaf_method, LeafMethod::Hamd);
+/// assert_eq!(
+///     Strategy::parse("leafmethod=hamd").unwrap().nd.leaf_method,
+///     LeafMethod::Hamd,
+/// );
+/// assert_eq!(
+///     Strategy::parse("leafmethod=mmd").unwrap().nd.leaf_method,
+///     LeafMethod::Mmd,
+/// );
+/// assert!(Strategy::parse("leafmethod=amf").is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum LeafMethod {
+    /// Exact-degree multiple minimum degree on the bare leaf subgraph
+    /// (no halo — the pre-HAMD behavior, kept as the comparator).
+    Mmd,
+    /// Halo approximate minimum degree (`order::hamd`): the leaf plus
+    /// its ring of already-numbered separator neighbors.
+    #[default]
+    Hamd,
+}
+
 /// Parameters of nested dissection.
 #[derive(Clone, Debug)]
 pub struct NdStrategy {
@@ -96,6 +127,8 @@ pub struct NdStrategy {
     /// Stop dissecting when the separator exceeds this fraction of the
     /// subgraph (e.g. near-cliques) and fall back to minimum degree.
     pub max_sep_fraction: f64,
+    /// Which minimum-degree method orders the leaves (`leafmethod=`).
+    pub leaf_method: LeafMethod,
 }
 
 impl Default for NdStrategy {
@@ -103,6 +136,7 @@ impl Default for NdStrategy {
         NdStrategy {
             leaf_threshold: 120,
             max_sep_fraction: 0.5,
+            leaf_method: LeafMethod::default(),
         }
     }
 }
@@ -180,7 +214,15 @@ impl Default for Strategy {
 impl Strategy {
     /// Parse `key=value` pairs (comma-separated) over the default
     /// strategy, e.g.
-    /// `band=3,folddup=1,leaf=120,refiner=xla,engine=auto,seed=42`.
+    /// `band=3,folddup=1,leaf=120,leafmethod=hamd,refiner=xla,engine=auto,seed=42`.
+    ///
+    /// ```
+    /// use ptscotch::strategy::{LeafMethod, Strategy};
+    ///
+    /// let s = Strategy::parse("leaf=60,leafmethod=hamd,engine=cpu").unwrap();
+    /// assert_eq!(s.nd.leaf_threshold, 60);
+    /// assert_eq!(s.nd.leaf_method, LeafMethod::Hamd);
+    /// ```
     pub fn parse(spec: &str) -> Result<Strategy> {
         let mut s = Strategy::default();
         for tok in spec.split(',').map(str::trim).filter(|t| !t.is_empty()) {
@@ -208,6 +250,17 @@ impl Strategy {
                         .map_err(|_| Error::InvalidStrategy(format!("bad eps {v}")))?
                 }
                 "leaf" => s.nd.leaf_threshold = parse_usize(v)?,
+                "leafmethod" => {
+                    s.nd.leaf_method = match v {
+                        "mmd" => LeafMethod::Mmd,
+                        "hamd" => LeafMethod::Hamd,
+                        _ => {
+                            return Err(Error::InvalidStrategy(format!(
+                                "unknown leaf method {v} (mmd|hamd)"
+                            )))
+                        }
+                    }
+                }
                 "folddup" => s.dist.fold_dup = v != "0",
                 "foldthresh" => s.dist.folddup_threshold = parse_usize(v)?,
                 "overlap" => s.dist.overlap_folds = v != "0",
@@ -327,6 +380,20 @@ mod tests {
             assert_eq!(Strategy::parse(spec).unwrap().dist.band_engine, want);
         }
         assert!(Strategy::parse("engine=gpuonly").is_err());
+    }
+
+    #[test]
+    fn parse_leaf_method_knob() {
+        assert_eq!(Strategy::default().nd.leaf_method, LeafMethod::Hamd);
+        assert_eq!(
+            Strategy::parse("leafmethod=mmd").unwrap().nd.leaf_method,
+            LeafMethod::Mmd
+        );
+        assert_eq!(
+            Strategy::parse("leafmethod=hamd,leaf=60").unwrap().nd.leaf_method,
+            LeafMethod::Hamd
+        );
+        assert!(Strategy::parse("leafmethod=amf").is_err());
     }
 
     #[test]

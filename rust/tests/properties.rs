@@ -437,6 +437,141 @@ fn prop_engines_agree_on_fill_lower_bound() {
 }
 
 #[test]
+fn prop_hamd_orders_exactly_the_non_halo_vertices() {
+    // HAMD invariant (a): for random graphs and random halo sets, the
+    // result is a permutation of exactly the core vertices, and the
+    // supervariable blocks tile it with consecutive ranges.
+    use ptscotch::order::hamd;
+
+    for seed in 0..12u64 {
+        let n = 50 + (seed as usize * 23) % 150;
+        let g = random_graph(seed, n, n);
+        let mut rng = Rng::new(seed ^ 0x4A10);
+        let halo: Vec<bool> = (0..n).map(|_| rng.below(5) == 0).collect();
+        let r = hamd(&g, &halo);
+        let mut got = r.order.clone();
+        got.sort_unstable();
+        let want: Vec<usize> = (0..n).filter(|&v| !halo[v]).collect();
+        assert_eq!(got, want, "seed {seed}: not a core permutation");
+        let mut covered = 0;
+        for &(s, l) in &r.blocks {
+            assert_eq!(s, covered, "seed {seed}: blocks out of sequence");
+            assert!(l >= 1, "seed {seed}: empty block");
+            covered += l;
+        }
+        assert_eq!(covered, r.order.len(), "seed {seed}: blocks do not tile");
+    }
+}
+
+#[test]
+fn prop_hamd_empty_halo_tracks_exact_mmd_within_10pct() {
+    // HAMD invariant (b): with an empty halo the approximate-degree
+    // ordering must stay within 10% OPC of the exact-degree MMD across
+    // the generator suite (in practice the supervariable machinery
+    // makes it slightly *better* on meshes).
+    use ptscotch::order::hamd;
+    use ptscotch::order::mmd::minimum_degree;
+
+    let mut suite: Vec<(String, Graph)> = vec![
+        ("grid2d".into(), generators::grid2d(16, 16)),
+        ("grid3d".into(), generators::grid3d(8, 8, 8)),
+    ];
+    for seed in 1..=5u64 {
+        suite.push((
+            format!("irregular_mesh seed {seed}"),
+            generators::irregular_mesh(14, 12, seed),
+        ));
+    }
+    for (name, g) in &suite {
+        let no_halo = vec![false; g.n()];
+        let o_amd = Ordering::from_iperm(hamd(g, &no_halo).order).unwrap();
+        let o_mmd = Ordering::from_iperm(minimum_degree(g)).unwrap();
+        let s_amd = symbolic_cholesky(g, &o_amd);
+        let s_mmd = symbolic_cholesky(g, &o_mmd);
+        assert!(
+            s_amd.opc <= s_mmd.opc * 1.10,
+            "{name}: HAMD opc {:.4e} > 1.1 × MMD opc {:.4e}",
+            s_amd.opc,
+            s_mmd.opc
+        );
+    }
+}
+
+#[test]
+fn prop_hamd_supervariable_members_consecutive() {
+    // HAMD invariant (c): plant groups of indistinguishable vertices
+    // (identical neighborhoods into a random host graph) and verify
+    // each group ends up in consecutive order positions.
+    use ptscotch::order::hamd;
+
+    for seed in 0..8u64 {
+        let host = 40 + (seed as usize * 11) % 60;
+        let twins = 3;
+        let n = host + twins;
+        let mut rng = Rng::new(seed ^ 0x7713);
+        let mut b = GraphBuilder::new(n);
+        for v in 1..host {
+            b.add_edge(v - 1, v);
+        }
+        for _ in 0..host / 4 {
+            let u = rng.below(host);
+            let v = rng.below(host);
+            if u != v {
+                b.add_edge(u, v);
+            }
+        }
+        // The twins host..host+3 all see exactly the same 10 anchors
+        // (and nothing else). Their degree of 10 keeps them out of the
+        // minimum-degree buckets until some anchor is eliminated — at
+        // which point they land in the same pivot element, hash equal,
+        // and merge into one supervariable.
+        let anchors: Vec<usize> = (0..10).map(|k| (k * host / 10 + 1) % host).collect();
+        for t in host..n {
+            for &a in &anchors {
+                b.add_edge(t, a);
+            }
+        }
+        let g = b.build().unwrap();
+        let r = hamd(&g, &vec![false; n]);
+        let mut pos: Vec<usize> = (host..n)
+            .map(|t| r.order.iter().position(|&v| v == t).unwrap())
+            .collect();
+        pos.sort_unstable();
+        assert!(
+            pos.windows(2).all(|w| w[1] == w[0] + 1),
+            "seed {seed}: twin positions not consecutive: {pos:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_order_hamd_valid_and_deterministic_across_p() {
+    // The halo ring carried through the distributed recursion must
+    // never compromise validity or the fixed-seed determinism, for any
+    // rank count and leaf method.
+    let svc = ptscotch::coordinator::OrderingService::new_cpu_only();
+    for (seed, p) in [(0u64, 2usize), (1, 3), (2, 5)] {
+        let g = random_graph(seed, 500, 700);
+        for method in ["hamd", "mmd"] {
+            let strat = Strategy::parse(&format!("seed={seed},leafmethod={method}")).unwrap();
+            let a = svc
+                .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
+                .unwrap();
+            a.ordering
+                .validate()
+                .unwrap_or_else(|e| panic!("seed {seed} p={p} {method}: {e}"));
+            let b = svc
+                .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
+                .unwrap();
+            assert_eq!(
+                a.ordering.iperm, b.ordering.iperm,
+                "seed {seed} p={p} {method}: nondeterministic"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_sepstate_weights_always_consistent_after_pipeline() {
     // Run the full multilevel machinery and re-derive weights from labels.
     let strat = SepStrategy::default();
