@@ -9,25 +9,52 @@
 # the stub cannot execute them. Only run `test-xla` after wiring the
 # real `xla` crate into Cargo.toml (see README.md).
 
-.PHONY: artifacts check test test-xla bench bench-smoke clean
+.PHONY: artifacts check test test-threads test-xla tsan bench bench-smoke clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
 
 # Everything CI gates on, in one local command: formatting, lints,
-# workspace tests, docs, and the bench smoke run (benches must run,
-# not just compile).
+# workspace tests on both executors, docs, and the bench smoke run
+# (benches must run, not just compile).
 check:
 	cargo fmt --all -- --check
 	cargo clippy --all-targets -- -D warnings
 	cargo build --release --examples
 	cargo test --release --workspace -q
+	$(MAKE) test-threads
 	cargo test --release --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	$(MAKE) bench-smoke
 
 test:
 	cargo test --release -q
+
+# The whole workspace again with the threaded executor as the default
+# (DESIGN.md §3): every comm/dist test must pass on the free-running
+# fabric, not just the serialized simulator.
+test-threads:
+	PTSCOTCH_EXECUTOR=threads cargo test --release --workspace -q
+
+# ThreadSanitizer over the concurrency surface (comm fabrics, dist
+# layer, stress + traffic suites). Needs nightly with rust-src; skips
+# with a notice when no nightly toolchain is installed so `make tsan`
+# stays runnable on stable-only boxes.
+tsan:
+	@if rustup toolchain list 2>/dev/null | grep -q nightly; then \
+	  RUSTFLAGS="-Zsanitizer=thread" TSAN_OPTIONS=halt_on_error=1 \
+	  PTSCOTCH_EXECUTOR=threads \
+	  cargo +nightly test -Zbuild-std \
+	    --target x86_64-unknown-linux-gnu \
+	    --release -q --lib comm:: dist:: && \
+	  RUSTFLAGS="-Zsanitizer=thread" TSAN_OPTIONS=halt_on_error=1 \
+	  PTSCOTCH_EXECUTOR=threads \
+	  cargo +nightly test -Zbuild-std \
+	    --target x86_64-unknown-linux-gnu \
+	    --release -q --test comm_stress --test traffic; \
+	else \
+	  echo "tsan: no nightly toolchain installed (rustup toolchain install nightly --component rust-src); skipping"; \
+	fi
 
 # Full suite including the PJRT execution path (real xla crate + jax).
 test-xla: artifacts
@@ -39,7 +66,7 @@ bench:
 # Quick pass over the profile bench only (seconds; used by `check`/CI),
 # swept over both band-engine settings so the dispatch path stays green,
 # plus one `--json` run over both engines that regenerates the
-# machine-readable perf/quality trajectory in bench_out/BENCH_PR5.json.
+# machine-readable perf/quality trajectory in bench_out/BENCH_PR6.json.
 # Every smoke run doubles as the ordering-quality gate: it asserts the
 # grid3d OPC stays under the recorded ceiling per leaf method
 # (EXPERIMENTS.md §Perf.2), so leaf quality cannot regress silently.

@@ -6,6 +6,12 @@
 //! (often dipping below it as P grows — more multi-sequential working
 //! copies), while the ParMETIS series climbs steeply (audikw1: 5.8e12 →
 //! 1.07e13 from P=2 to 64, i.e. ~2× worse; NNZ ratio climbs similarly).
+//!
+//! Since the threaded executor landed (DESIGN.md §3) the table also
+//! carries the PT-Scotch run's real wallclock and its speedup over the
+//! sequential reference — a genuine parallel measurement when run with
+//! `PTSCOTCH_EXECUTOR=threads` on a multicore host (EXPERIMENTS.md
+//! §Perf.3 explains the single-core reading).
 
 #[path = "common.rs"]
 mod common;
@@ -41,8 +47,8 @@ fn main() {
             seq.stats.fill_ratio
         );
         println!(
-            "{:<4} {:>12} {:>10} {:>12} {:>10}",
-            "p", "OPC_PTS", "fill_PTS", "OPC_PM", "fill_PM"
+            "{:<4} {:>12} {:>10} {:>12} {:>10} {:>10} {:>8}",
+            "p", "OPC_PTS", "fill_PTS", "OPC_PM", "fill_PM", "wall_PTS", "speedup"
         );
         for p in common::proc_counts() {
             let pts = svc
@@ -53,19 +59,23 @@ fn main() {
                 .as_ref()
                 .map(|r| (common::sci(r.stats.opc), format!("{:.2}", r.stats.fill_ratio)))
                 .unwrap_or(("†".into(), "†".into()));
+            let speedup = seq.wall_seconds / pts.wall_seconds.max(1e-12);
             println!(
-                "{:<4} {:>12} {:>10.2} {:>12} {:>10}",
+                "{:<4} {:>12} {:>10.2} {:>12} {:>10} {:>9.0}ms {:>7.2}x",
                 p,
                 common::sci(pts.stats.opc),
                 pts.stats.fill_ratio,
                 opm,
-                fpm
+                fpm,
+                pts.wall_seconds * 1e3,
+                speedup
             );
             common::csv_row(
                 csv,
-                "p,opc_seq,fill_seq,opc_pts,fill_pts,opc_pm,fill_pm",
+                "p,opc_seq,fill_seq,opc_pts,fill_pts,opc_pm,fill_pm,\
+                 wall_seq_s,wall_pts_s,speedup_pts",
                 &format!(
-                    "{p},{:.6e},{:.4},{:.6e},{:.4},{},{}",
+                    "{p},{:.6e},{:.4},{:.6e},{:.4},{},{},{:.6},{:.6},{speedup:.4}",
                     seq.stats.opc,
                     seq.stats.fill_ratio,
                     pts.stats.opc,
@@ -76,6 +86,8 @@ fn main() {
                     pm.as_ref()
                         .map(|r| format!("{:.4}", r.stats.fill_ratio))
                         .unwrap_or("NA".into()),
+                    seq.wall_seconds,
+                    pts.wall_seconds,
                 ),
             );
         }

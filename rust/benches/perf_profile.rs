@@ -11,10 +11,15 @@
 //! p ∈ {1, 4}) under both leaf methods (`leafmethod=mmd|hamd`) and
 //! tabulates NNZ/OPC/fill/etree height; in `--smoke` mode it asserts
 //! the grid3d OPC stays under the recorded per-method ceiling, so leaf
-//! quality cannot regress silently. `--json` additionally writes the
-//! whole profile (phases + quality) to `bench_out/BENCH_PR5.json`
-//! (run by the CI bench/quality-smoke step). Used to drive and document
-//! the optimization log in EXPERIMENTS.md §Perf.
+//! quality cannot regress silently. The §Perf.3 section runs
+//! `parallel_order` on grid3d under both executors
+//! (`executor=sim|threads`, DESIGN.md §3) at p ∈ {1, 4, 8} and reports
+//! real wallclock next to the fleet's critical path — the measured and
+//! the ≥ p-core-modeled speedup columns of EXPERIMENTS.md §Perf.3.
+//! `--json` additionally writes the whole profile (phases + quality +
+//! executor wallclocks) to `bench_out/BENCH_PR6.json` (run by the CI
+//! bench/quality-smoke step). Used to drive and document the
+//! optimization log in EXPERIMENTS.md §Perf.
 
 #[path = "common.rs"]
 mod common;
@@ -50,11 +55,12 @@ fn engine_arg() -> Option<String> {
 }
 
 /// `--json` mode: also write every profiled row (wallclock plus, for
-/// the distributed phases, bytes/messages on the wire) and the
-/// per-leaf-method quality table to `bench_out/BENCH_PR5.json` — the
-/// machine-readable perf/quality trajectory the EXPERIMENTS.md BENCH
-/// log points at. CI runs this in the bench-smoke step so the file
-/// regenerates on every push.
+/// the distributed phases, bytes/messages on the wire), the
+/// per-leaf-method quality table and the sim-vs-threads executor
+/// wallclock rows to `bench_out/BENCH_PR6.json` — the machine-readable
+/// perf/quality trajectory the EXPERIMENTS.md BENCH log points at. CI
+/// runs this in the bench-smoke step so the file regenerates on every
+/// push.
 fn json_mode() -> bool {
     std::env::args().any(|a| a == "--json")
 }
@@ -89,6 +95,19 @@ struct QRow {
 
 /// Quality rows accumulated for the table, the CSV and `--json`.
 static QROWS: Mutex<Vec<QRow>> = Mutex::new(Vec::new());
+
+/// One §Perf.3 executor measurement: `parallel_order` on grid3d under
+/// one executor at one rank count — real wallclock plus the fleet's
+/// critical path (max per-rank busy time, the ≥ p-core model).
+struct ERow {
+    executor: &'static str,
+    p: usize,
+    wall_s: f64,
+    crit_s: f64,
+}
+
+/// Executor rows accumulated for the table, the CSV and `--json`.
+static EROWS: Mutex<Vec<ERow>> = Mutex::new(Vec::new());
 
 /// Mean OPC per `(p, mmd, hamd)` over the accumulated quality rows —
 /// the single source for both the printed summary and the JSON
@@ -141,12 +160,13 @@ fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
     dt
 }
 
-/// Serialize the accumulated rows as `bench_out/BENCH_PR5.json`. Phase
+/// Serialize the accumulated rows as `bench_out/BENCH_PR6.json`. Phase
 /// names contain no quotes or backslashes, so the literal embedding is
 /// valid JSON.
 fn write_json(smoke: bool, scale: usize) {
     let rows = ROWS.lock().unwrap();
     let qrows = QROWS.lock().unwrap();
+    let erows = EROWS.lock().unwrap();
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -190,12 +210,105 @@ fn write_json(smoke: bool, scale: usize) {
             hamd < mmd
         ));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    // §Perf.3: sim-vs-threads wallclock rows plus the speedup summary
+    // (measured wallclock ratio and the critical-path model of what
+    // a ≥ p-core host delivers; see EXPERIMENTS.md §Perf.3 for why
+    // both columns are reported).
+    s.push_str("  \"executors\": [\n");
+    for (i, e) in erows.iter().enumerate() {
+        let sep = if i + 1 < erows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"executor\": \"{}\", \"p\": {}, \"wall_s\": {:.6}, \
+             \"critical_path_s\": {:.6}}}{sep}\n",
+            e.executor, e.p, e.wall_s, e.crit_s
+        ));
+    }
+    s.push_str("  ],\n");
+    let (pmax, measured, modeled) = executor_speedup(&erows);
+    s.push_str(&format!(
+        "  \"speedup\": {{\"graph\": \"grid3d\", \"p\": {pmax}, \
+         \"measured_wallclock\": {measured:.4}, \
+         \"critical_path_model\": {modeled:.4}, \
+         \"host_cores\": {}}}\n",
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    ));
+    s.push_str("}\n");
     let dir = std::path::Path::new("bench_out");
     let _ = std::fs::create_dir_all(dir);
-    let path = dir.join("BENCH_PR5.json");
-    std::fs::write(&path, s).expect("write BENCH_PR5.json");
+    let path = dir.join("BENCH_PR6.json");
+    std::fs::write(&path, s).expect("write BENCH_PR6.json");
     println!("\nwrote {}", path.display());
+}
+
+/// `(p_max, measured, modeled)` speedup of the threaded executor at the
+/// largest profiled rank count over its own p = 1 run: `measured` is
+/// the real wallclock ratio (meaningful on a ≥ p-core host), `modeled`
+/// divides the p = 1 wallclock by the fleet's critical path — the
+/// schedule-independent bound a ≥ p-core host converges to, computable
+/// even on one core because busy time excludes transport blocking.
+fn executor_speedup(erows: &[ERow]) -> (usize, f64, f64) {
+    let thr: Vec<&ERow> = erows.iter().filter(|e| e.executor == "threads").collect();
+    let base = thr.iter().find(|e| e.p == 1);
+    let top = thr.iter().max_by_key(|e| e.p);
+    match (base, top) {
+        (Some(b), Some(t)) if t.p > 1 => (
+            t.p,
+            b.wall_s / t.wall_s.max(1e-12),
+            b.wall_s / t.crit_s.max(1e-12),
+        ),
+        _ => (1, 1.0, 1.0),
+    }
+}
+
+/// §Perf.3 — real wallclock per executor: `parallel_order` on grid3d
+/// under both executors at p ∈ {1, 4, 8}, with the critical-path
+/// column that models ≥ p cores (EXPERIMENTS.md §Perf.3).
+fn executor_profile(smoke: bool, scale: usize) {
+    let s = scale.max(1);
+    let g = if smoke {
+        generators::grid3d(10, 10, 10)
+    } else {
+        generators::grid3d(16 * s, 16 * s, 16 * s)
+    };
+    let svc = OrderingService::new_cpu_only();
+    println!("\n-- executor wallclock (§Perf.3, grid3d n={}) --", g.n());
+    println!(
+        "{:<9} {:>3} {:>12} {:>16}",
+        "executor", "p", "wall_ms", "critical_path_ms"
+    );
+    for exec in ["sim", "threads"] {
+        for p in [1usize, 4, 8] {
+            let strat = Strategy::parse(&format!("executor={exec}")).unwrap();
+            let rep = svc
+                .order(&g, Engine::PtScotch { p }, &strat)
+                .expect("executor profile ordering");
+            let (wall, crit) = (rep.wall_seconds, rep.critical_path_seconds());
+            println!(
+                "{exec:<9} {p:>3} {:>12.2} {:>16.2}",
+                wall * 1e3,
+                crit * 1e3
+            );
+            common::csv_row(
+                "executors.csv",
+                "executor,p,wall_s,critical_path_s",
+                &format!("{exec},{p},{wall:.6},{crit:.6}"),
+            );
+            EROWS.lock().unwrap().push(ERow {
+                executor: exec,
+                p,
+                wall_s: wall,
+                crit_s: crit,
+            });
+        }
+    }
+    let erows = EROWS.lock().unwrap();
+    let (pmax, measured, modeled) = executor_speedup(&erows);
+    let cores = std::thread::available_parallelism().map_or(1, |n| n.get());
+    println!(
+        "threads p={pmax} vs p=1: measured {measured:.2}x (host has {cores} core(s)), \
+         critical-path model {modeled:.2}x"
+    );
 }
 
 /// §Perf.2 — order the quality suite under both leaf methods and both
@@ -516,6 +629,7 @@ fn main() {
     }
 
     quality_profile(smoke, scale);
+    executor_profile(smoke, scale);
 
     if json_mode() {
         write_json(smoke, scale);

@@ -1,0 +1,118 @@
+//! Executor selection for the rank fleet (DESIGN.md §3).
+//!
+//! The same rank programs run on two interchangeable executors:
+//!
+//! * [`Executor::Sim`] — the *serialized-transport simulator*: every
+//!   mailbox operation goes through one global lock and one global
+//!   condition variable, so transport activity is sequentially ordered
+//!   one operation at a time. It is the obviously-correct reference
+//!   fabric and the oracle of the differential test harness
+//!   (`rust/tests/executor_diff.rs`). Default everywhere, so tests run
+//!   against the oracle unless explicitly switched.
+//! * [`Executor::Threads`] — the *free-running threaded executor*: one
+//!   channel-backed mailbox per ordered (receiver, sender) peer pair,
+//!   each with its own lock and condition variable, so disjoint pairs
+//!   never contend and a receiver wakes only on its own traffic. This
+//!   is the performance fabric that turns p-rank runs into real
+//!   parallelism on multicore hosts.
+//!
+//! Both executors drive one OS thread per rank and expose the exact
+//! same [`crate::comm::Comm`] API; the determinism contract (DESIGN.md
+//! §3) guarantees bit-identical results either way, which the
+//! differential suite enforces on every tested (graph, p, seed) triple.
+//!
+//! Selection: the `executor=` strategy knob when the run goes through
+//! the coordinator, else the `PTSCOTCH_EXECUTOR` environment variable
+//! (`sim` | `threads`), else [`Executor::Sim`].
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Which executor drives the rank fleet of [`crate::comm::run_on`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum Executor {
+    /// Serialized-transport simulator: one global mailbox lock, the
+    /// deterministic differential oracle (default).
+    #[default]
+    Sim,
+    /// Free-running OS-thread-per-rank executor with one mailbox per
+    /// (receiver, sender) peer pair.
+    Threads,
+}
+
+/// Environment variable consulted by [`Executor::from_env`] (and thus
+/// by [`crate::comm::run`]): `sim` or `threads`, case-insensitive.
+pub const EXECUTOR_ENV: &str = "PTSCOTCH_EXECUTOR";
+
+impl Executor {
+    /// The lower-case knob/row name of this executor.
+    ///
+    /// ```
+    /// use ptscotch::comm::Executor;
+    /// assert_eq!(Executor::Sim.name(), "sim");
+    /// assert_eq!(Executor::Threads.name(), "threads");
+    /// ```
+    pub fn name(self) -> &'static str {
+        match self {
+            Executor::Sim => "sim",
+            Executor::Threads => "threads",
+        }
+    }
+
+    /// Resolve the executor from [`EXECUTOR_ENV`]; unset or empty means
+    /// [`Executor::Sim`]. A set-but-unrecognized value panics loudly —
+    /// a misspelled executor silently falling back to the simulator
+    /// would invalidate every "threaded" measurement taken under it.
+    pub fn from_env() -> Executor {
+        match std::env::var(EXECUTOR_ENV) {
+            Ok(v) if v.trim().is_empty() => Executor::Sim,
+            Ok(v) => v
+                .parse()
+                .unwrap_or_else(|e: String| panic!("{EXECUTOR_ENV}: {e}")),
+            Err(_) => Executor::Sim,
+        }
+    }
+}
+
+impl fmt::Display for Executor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Executor {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Executor, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "sim" => Ok(Executor::Sim),
+            "threads" => Ok(Executor::Threads),
+            other => Err(format!("unknown executor {other:?} (sim|threads)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_both_names() {
+        assert_eq!("sim".parse::<Executor>().unwrap(), Executor::Sim);
+        assert_eq!("threads".parse::<Executor>().unwrap(), Executor::Threads);
+        assert_eq!(" Threads ".parse::<Executor>().unwrap(), Executor::Threads);
+        assert!("hybrid".parse::<Executor>().is_err());
+    }
+
+    #[test]
+    fn default_is_the_oracle() {
+        assert_eq!(Executor::default(), Executor::Sim);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for e in [Executor::Sim, Executor::Threads] {
+            assert_eq!(e.to_string().parse::<Executor>().unwrap(), e);
+        }
+    }
+}

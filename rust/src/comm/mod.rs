@@ -1,43 +1,193 @@
-//! In-process MPI-like communicator (S9).
+//! In-process MPI-like communicator (S9), now with two executors.
 //!
-//! PT-Scotch is an MPI program; this container has no MPI (and one core),
-//! so we reproduce the *programming model* instead of the transport: one
-//! OS thread per rank, typed point-to-point messages with tag matching,
+//! PT-Scotch is an MPI program; this container has no MPI, so we
+//! reproduce the *programming model* instead of the transport: one OS
+//! thread per rank, typed point-to-point messages with tag matching,
 //! the collectives the algorithms need (barrier, allgatherv, allreduce,
-//! alltoallv, broadcast, exclusive scan), communicator splitting for the
-//! recursive nested-dissection subgroups, and per-rank traffic counters
-//! that substitute for wallclock in the scalability analysis
-//! (DESIGN.md §3). The distributed algorithms in [`crate::dist`] only see
-//! this API and would map 1:1 onto MPI.
+//! alltoallv, broadcast, exclusive scan), communicator splitting for
+//! the recursive nested-dissection subgroups, and per-rank traffic
+//! counters plus busy/blocked wallclock that feed the scalability
+//! analysis (DESIGN.md §3). The distributed algorithms in
+//! [`crate::dist`] only see this API and would map 1:1 onto MPI.
+//!
+//! The same rank programs run on either of two executors
+//! ([`Executor`], DESIGN.md §3):
+//!
+//! * **`Executor::Sim`** (default) — the serialized-transport
+//!   simulator: every mailbox operation happens under one global state
+//!   lock, so transport activity forms a single total order. This is
+//!   the obviously-correct oracle the differential harness
+//!   (`rust/tests/executor_diff.rs`) pins the threaded executor
+//!   against.
+//! * **`Executor::Threads`** — the free-running executor: one
+//!   channel-backed mailbox per ordered (receiver, sender) peer pair,
+//!   each with its own lock and wakeup, so disjoint peer pairs never
+//!   contend and real parallel speedup is measurable on multicore
+//!   hosts.
+//!
+//! **Determinism contract.** Results are schedule-independent by
+//! construction — every receive names its source rank, tags are scoped
+//! per communicator, and collectives are sequence-numbered — so both
+//! executors produce bit-identical results and identical
+//! `sent_bytes`/`sent_msgs` tallies for the same program
+//! (`rust/tests/traffic.rs` pins this). Only the wallclock columns of
+//! [`StatsSnapshot`] may differ between executors.
 
+pub mod exec;
 pub mod stats;
 
+pub use exec::Executor;
 pub use stats::{MemTracker, StatsSnapshot};
 
 use std::any::Any;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering as AOrd};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
-/// One in-flight message.
+/// One in-flight message. The source rank is implicit in the mailbox
+/// the packet sits in (one queue per ordered (receiver, sender) pair).
 struct Packet {
-    src: usize, // global rank
     tag: u64,
     data: Box<dyn Any + Send>,
 }
 
-/// Per-thread mailbox: a deque of packets plus a wakeup condvar.
+/// A threaded-executor mailbox: one (receiver, sender) pair's deque
+/// plus its private wakeup condvar.
 #[derive(Default)]
 struct Mailbox {
     queue: Mutex<VecDeque<Packet>>,
     avail: Condvar,
 }
 
-/// Shared transport: one mailbox per global rank + traffic counters.
+/// The message fabric under the rank fleet — the part of the transport
+/// the [`Executor`] choice swaps out. Both variants hold `p * p` queues
+/// indexed `dst * p + src`; they differ in locking granularity.
+enum Fabric {
+    /// Serialized oracle: all queues behind one state lock (a total
+    /// order over every mailbox operation), one wakeup condvar per
+    /// receiving rank so a push only wakes that receiver's waiters.
+    Sim {
+        /// All `p * p` queues, guarded by the single global lock.
+        state: Mutex<Vec<VecDeque<Packet>>>,
+        /// Per-receiver wakeup (all share the `state` mutex).
+        avail: Vec<Condvar>,
+    },
+    /// Free-running fabric: one independently locked mailbox per
+    /// ordered (receiver, sender) pair.
+    Threads {
+        /// The `p * p` peer mailboxes.
+        boxes: Vec<Mailbox>,
+    },
+}
+
+/// Per-global-rank transport telemetry. Byte/message tallies are
+/// atomics so the free-running executor stays race-free without
+/// changing the exact values the sequential accounting produced;
+/// blocked/wall nanoseconds feed the critical-path speedup model.
+#[derive(Default)]
+struct RankStats {
+    sent_bytes: AtomicU64,
+    sent_msgs: AtomicU64,
+    blocked_ns: AtomicU64,
+    wall_ns: AtomicU64,
+}
+
+/// Shared transport: the executor-selected fabric plus per-rank
+/// telemetry.
 struct Transport {
-    boxes: Vec<Mailbox>,
-    sent_bytes: Vec<AtomicU64>,
-    sent_msgs: Vec<AtomicU64>,
+    p: usize,
+    fabric: Fabric,
+    ranks: Vec<RankStats>,
+}
+
+impl Transport {
+    fn new(exec: Executor, p: usize) -> Transport {
+        let fabric = match exec {
+            Executor::Sim => Fabric::Sim {
+                state: Mutex::new((0..p * p).map(|_| VecDeque::new()).collect()),
+                avail: (0..p).map(|_| Condvar::new()).collect(),
+            },
+            Executor::Threads => Fabric::Threads {
+                boxes: (0..p * p).map(|_| Mailbox::default()).collect(),
+            },
+        };
+        Transport {
+            p,
+            fabric,
+            ranks: (0..p).map(|_| RankStats::default()).collect(),
+        }
+    }
+
+    /// Deposit a packet into the (dst, src) queue and wake dst's
+    /// waiters. Never blocks (queues are unbounded), so no send/send
+    /// deadlock is possible.
+    fn push(&self, dst: usize, src: usize, tag: u64, data: Box<dyn Any + Send>) {
+        let slot = dst * self.p + src;
+        match &self.fabric {
+            Fabric::Sim { state, avail } => {
+                let mut q = state.lock().unwrap();
+                q[slot].push_back(Packet { tag, data });
+                // notify_all, not notify_one: the rank's main thread and
+                // its overlap thread may both wait on this receiver for
+                // different tags.
+                avail[dst].notify_all();
+            }
+            Fabric::Threads { boxes } => {
+                let mbox = &boxes[slot];
+                mbox.queue.lock().unwrap().push_back(Packet { tag, data });
+                mbox.avail.notify_all();
+            }
+        }
+    }
+
+    /// Take the first packet matching `tag` out of the (dst, src)
+    /// queue, blocking until one arrives. Time spent waiting is charged
+    /// to `dst`'s `blocked_ns` (the busy-time column of the stats).
+    fn pop(&self, dst: usize, src: usize, tag: u64) -> Box<dyn Any + Send> {
+        let slot = dst * self.p + src;
+        match &self.fabric {
+            Fabric::Sim { state, avail } => {
+                let mut q = state.lock().unwrap();
+                loop {
+                    if let Some(pos) = q[slot].iter().position(|pk| pk.tag == tag) {
+                        return q[slot].remove(pos).unwrap().data;
+                    }
+                    let t0 = Instant::now();
+                    q = avail[dst].wait(q).unwrap();
+                    self.ranks[dst]
+                        .blocked_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
+                }
+            }
+            Fabric::Threads { boxes } => {
+                let mbox = &boxes[slot];
+                let mut q = mbox.queue.lock().unwrap();
+                loop {
+                    if let Some(pos) = q.iter().position(|pk| pk.tag == tag) {
+                        return q.remove(pos).unwrap().data;
+                    }
+                    let t0 = Instant::now();
+                    q = mbox.avail.wait(q).unwrap();
+                    self.ranks[dst]
+                        .blocked_ns
+                        .fetch_add(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
+                }
+            }
+        }
+    }
+
+    fn snapshot(&self) -> StatsSnapshot {
+        let col = |f: fn(&RankStats) -> &AtomicU64| -> Vec<u64> {
+            self.ranks.iter().map(|r| f(r).load(AOrd::Relaxed)).collect()
+        };
+        StatsSnapshot {
+            bytes_sent: col(|r| &r.sent_bytes),
+            msgs_sent: col(|r| &r.sent_msgs),
+            wall_ns: col(|r| &r.wall_ns),
+            blocked_ns: col(|r| &r.blocked_ns),
+        }
+    }
 }
 
 /// A communicator handle held by one rank (thread). Sub-communicators
@@ -58,19 +208,31 @@ pub struct Comm {
     transport: Arc<Transport>,
 }
 
-/// Spawn `p` ranks, run `f(comm)` on each, join, and return the results
-/// in rank order together with the traffic statistics.
+/// Spawn `p` ranks on the executor named by `PTSCOTCH_EXECUTOR`
+/// (`sim` default — see [`Executor::from_env`], which panics loudly on
+/// an unrecognized value), run `f(comm)` on each, join, and return the
+/// results in rank order together with the traffic statistics.
 pub fn run<R, F>(p: usize, f: F) -> (Vec<R>, StatsSnapshot)
 where
     R: Send + 'static,
     F: Fn(Comm) -> R + Send + Sync + 'static,
 {
+    run_on(Executor::from_env(), p, f)
+}
+
+/// Spawn `p` ranks on an explicit [`Executor`], run `f(comm)` on each,
+/// join, and return the results in rank order together with the
+/// traffic statistics. Both executors drive one OS thread per rank;
+/// they differ only in the fabric under the mailboxes (DESIGN.md §3),
+/// so `f` needs no executor awareness and results are bit-identical
+/// across executors.
+pub fn run_on<R, F>(exec: Executor, p: usize, f: F) -> (Vec<R>, StatsSnapshot)
+where
+    R: Send + 'static,
+    F: Fn(Comm) -> R + Send + Sync + 'static,
+{
     assert!(p >= 1, "need at least one rank");
-    let transport = Arc::new(Transport {
-        boxes: (0..p).map(|_| Mailbox::default()).collect(),
-        sent_bytes: (0..p).map(|_| AtomicU64::new(0)).collect(),
-        sent_msgs: (0..p).map(|_| AtomicU64::new(0)).collect(),
-    });
+    let transport = Arc::new(Transport::new(exec, p));
     let members = Arc::new((0..p).collect::<Vec<_>>());
     let f = Arc::new(f);
     let mut handles = Vec::with_capacity(p);
@@ -84,11 +246,19 @@ where
             transport: transport.clone(),
         };
         let f = f.clone();
+        let t = transport.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank{r}"))
                 .stack_size(16 << 20)
-                .spawn(move || f(comm))
+                .spawn(move || {
+                    let t0 = Instant::now();
+                    let out = f(comm);
+                    t.ranks[r]
+                        .wall_ns
+                        .store(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
+                    out
+                })
                 .expect("spawn rank thread"),
         );
     }
@@ -96,18 +266,7 @@ where
         .into_iter()
         .map(|h| h.join().expect("rank thread panicked"))
         .collect();
-    let stats = StatsSnapshot {
-        bytes_sent: transport
-            .sent_bytes
-            .iter()
-            .map(|a| a.load(AOrd::Relaxed))
-            .collect(),
-        msgs_sent: transport
-            .sent_msgs
-            .iter()
-            .map(|a| a.load(AOrd::Relaxed))
-            .collect(),
-    };
+    let stats = transport.snapshot();
     (results, stats)
 }
 
@@ -154,27 +313,16 @@ impl Comm {
     fn send_raw(&self, to_local: usize, tag: u64, data: Box<dyn Any + Send>, bytes: usize) {
         let dst = self.members[to_local];
         let t = &self.transport;
-        t.sent_bytes[self.grank].fetch_add(bytes as u64, AOrd::Relaxed);
-        t.sent_msgs[self.grank].fetch_add(1, AOrd::Relaxed);
-        let mut q = t.boxes[dst].queue.lock().unwrap();
-        q.push_back(Packet {
-            src: self.grank,
-            tag,
-            data,
-        });
-        t.boxes[dst].avail.notify_all();
+        t.ranks[self.grank]
+            .sent_bytes
+            .fetch_add(bytes as u64, AOrd::Relaxed);
+        t.ranks[self.grank].sent_msgs.fetch_add(1, AOrd::Relaxed);
+        t.push(dst, self.grank, tag, data);
     }
 
     fn recv_raw(&self, from_local: usize, tag: u64) -> Box<dyn Any + Send> {
         let src = self.members[from_local];
-        let mbox = &self.transport.boxes[self.grank];
-        let mut q = mbox.queue.lock().unwrap();
-        loop {
-            if let Some(pos) = q.iter().position(|p| p.src == src && p.tag == tag) {
-                return q.remove(pos).unwrap().data;
-            }
-            q = mbox.avail.wait(q).unwrap();
-        }
+        self.transport.pop(self.grank, src, tag)
     }
 
     /// Send a typed vector to `to` (local rank) with a user tag.
@@ -344,47 +492,57 @@ impl Comm {
 mod tests {
     use super::*;
 
+    /// Both executors, so every transport test pins the per-peer
+    /// threaded fabric as well as the serialized oracle.
+    const EXECUTORS: [Executor; 2] = [Executor::Sim, Executor::Threads];
+
     #[test]
     fn p2p_roundtrip() {
-        let (res, stats) = run(2, |c| {
-            if c.rank() == 0 {
-                c.send(1, 7, vec![1u64, 2, 3]);
-                0u64
-            } else {
-                let v: Vec<u64> = c.recv(0, 7);
-                v.iter().sum()
-            }
-        });
-        assert_eq!(res, vec![0, 6]);
-        assert_eq!(stats.msgs_sent[0], 1);
-        assert_eq!(stats.bytes_sent[0], 24);
+        for exec in EXECUTORS {
+            let (res, stats) = run_on(exec, 2, |c| {
+                if c.rank() == 0 {
+                    c.send(1, 7, vec![1u64, 2, 3]);
+                    0u64
+                } else {
+                    let v: Vec<u64> = c.recv(0, 7);
+                    v.iter().sum()
+                }
+            });
+            assert_eq!(res, vec![0, 6], "{exec}");
+            assert_eq!(stats.msgs_sent[0], 1, "{exec}");
+            assert_eq!(stats.bytes_sent[0], 24, "{exec}");
+        }
     }
 
     #[test]
     fn tag_matching_out_of_order() {
-        let (res, _) = run(2, |c| {
-            if c.rank() == 0 {
-                c.send(1, 1, vec![10i32]);
-                c.send(1, 2, vec![20i32]);
-                0
-            } else {
-                // Receive in reverse tag order.
-                let b: Vec<i32> = c.recv(0, 2);
-                let a: Vec<i32> = c.recv(0, 1);
-                a[0] + b[0] * 100
-            }
-        });
-        assert_eq!(res[1], 2010);
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 2, |c| {
+                if c.rank() == 0 {
+                    c.send(1, 1, vec![10i32]);
+                    c.send(1, 2, vec![20i32]);
+                    0
+                } else {
+                    // Receive in reverse tag order.
+                    let b: Vec<i32> = c.recv(0, 2);
+                    let a: Vec<i32> = c.recv(0, 1);
+                    a[0] + b[0] * 100
+                }
+            });
+            assert_eq!(res[1], 2010, "{exec}");
+        }
     }
 
     #[test]
     fn allgatherv_orders_by_rank() {
-        let (res, _) = run(4, |c| {
-            let all = c.allgatherv(vec![c.rank() as u64 * 10]);
-            all.iter().map(|v| v[0]).collect::<Vec<_>>()
-        });
-        for r in res {
-            assert_eq!(r, vec![0, 10, 20, 30]);
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 4, |c| {
+                let all = c.allgatherv(vec![c.rank() as u64 * 10]);
+                all.iter().map(|v| v[0]).collect::<Vec<_>>()
+            });
+            for r in res {
+                assert_eq!(r, vec![0, 10, 20, 30], "{exec}");
+            }
         }
     }
 
@@ -403,44 +561,50 @@ mod tests {
 
     #[test]
     fn alltoallv_personalizes() {
-        let (res, _) = run(3, |c| {
-            let out: Vec<Vec<u32>> = (0..3)
-                .map(|dst| vec![(c.rank() * 10 + dst) as u32])
-                .collect();
-            let inn = c.alltoallv(out);
-            inn.iter().map(|v| v[0]).collect::<Vec<u32>>()
-        });
-        assert_eq!(res[0], vec![0, 10, 20]);
-        assert_eq!(res[1], vec![1, 11, 21]);
-        assert_eq!(res[2], vec![2, 12, 22]);
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 3, |c| {
+                let out: Vec<Vec<u32>> = (0..3)
+                    .map(|dst| vec![(c.rank() * 10 + dst) as u32])
+                    .collect();
+                let inn = c.alltoallv(out);
+                inn.iter().map(|v| v[0]).collect::<Vec<u32>>()
+            });
+            assert_eq!(res[0], vec![0, 10, 20], "{exec}");
+            assert_eq!(res[1], vec![1, 11, 21], "{exec}");
+            assert_eq!(res[2], vec![2, 12, 22], "{exec}");
+        }
     }
 
     #[test]
     fn bcast_from_nonzero_root() {
-        let (res, _) = run(4, |c| {
-            let data = if c.rank() == 2 {
-                Some(vec![9u8, 8])
-            } else {
-                None
-            };
-            c.bcast(2, data)
-        });
-        for r in res {
-            assert_eq!(r, vec![9, 8]);
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 4, |c| {
+                let data = if c.rank() == 2 {
+                    Some(vec![9u8, 8])
+                } else {
+                    None
+                };
+                c.bcast(2, data)
+            });
+            for r in res {
+                assert_eq!(r, vec![9, 8], "{exec}");
+            }
         }
     }
 
     #[test]
     fn split_creates_independent_groups() {
-        let (res, _) = run(6, |c| {
-            let half = if c.rank() < 3 { 0 } else { 1 };
-            let sub = c.split(half);
-            // Each subgroup sums its own members' global ranks.
-            let s = sub.allreduce_sum(c.rank() as i64);
-            (sub.rank(), sub.size(), s)
-        });
-        assert_eq!(res[0], (0, 3, 3)); // 0+1+2
-        assert_eq!(res[4], (1, 3, 12)); // 3+4+5
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 6, |c| {
+                let half = if c.rank() < 3 { 0 } else { 1 };
+                let sub = c.split(half);
+                // Each subgroup sums its own members' global ranks.
+                let s = sub.allreduce_sum(c.rank() as i64);
+                (sub.rank(), sub.size(), s)
+            });
+            assert_eq!(res[0], (0, 3, 3), "{exec}"); // 0+1+2
+            assert_eq!(res[4], (1, 3, 12), "{exec}"); // 3+4+5
+        }
     }
 
     #[test]
@@ -456,42 +620,121 @@ mod tests {
 
     #[test]
     fn barrier_completes() {
-        let (res, _) = run(4, |c| {
-            for _ in 0..10 {
-                c.barrier();
-            }
-            true
-        });
-        assert!(res.iter().all(|&x| x));
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 4, |c| {
+                for _ in 0..10 {
+                    c.barrier();
+                }
+                true
+            });
+            assert!(res.iter().all(|&x| x), "{exec}");
+        }
     }
 
     #[test]
     fn nested_splits() {
-        let (res, _) = run(8, |c| {
-            let s1 = c.split(c.rank() / 4);
-            let s2 = s1.split(s1.rank() / 2);
-            (s2.size(), s2.allreduce_sum(1))
-        });
-        for r in res {
-            assert_eq!(r, (2, 2));
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 8, |c| {
+                let s1 = c.split(c.rank() / 4);
+                let s2 = s1.split(s1.rank() / 2);
+                (s2.size(), s2.allreduce_sum(1))
+            });
+            for r in res {
+                assert_eq!(r, (2, 2), "{exec}");
+            }
         }
     }
 
     #[test]
     fn overlap_contexts_do_not_cross_talk() {
-        let (res, _) = run(2, |c| {
-            let ca = c.overlap_context(0);
-            let cb = c.overlap_context(1);
-            if c.rank() == 0 {
-                cb.send(1, 3, vec![2u8]);
-                ca.send(1, 3, vec![1u8]);
-                0u8
-            } else {
-                let a: Vec<u8> = ca.recv(0, 3);
-                let b: Vec<u8> = cb.recv(0, 3);
-                a[0] * 10 + b[0]
-            }
-        });
-        assert_eq!(res[1], 12);
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 2, |c| {
+                let ca = c.overlap_context(0);
+                let cb = c.overlap_context(1);
+                if c.rank() == 0 {
+                    cb.send(1, 3, vec![2u8]);
+                    ca.send(1, 3, vec![1u8]);
+                    0u8
+                } else {
+                    let a: Vec<u8> = ca.recv(0, 3);
+                    let b: Vec<u8> = cb.recv(0, 3);
+                    a[0] * 10 + b[0]
+                }
+            });
+            assert_eq!(res[1], 12, "{exec}");
+        }
+    }
+
+    #[test]
+    fn overlap_thread_on_same_rank_under_both_executors() {
+        // The §3.1 overlap pattern: a scoped thread on the same rank
+        // drives comm through a tag-scoped clone while the main thread
+        // communicates too. A lost wakeup in either fabric hangs here.
+        for exec in EXECUTORS {
+            let (res, _) = run_on(exec, 2, |c| {
+                let ca = c.overlap_context(0);
+                let cb = c.overlap_context(1);
+                std::thread::scope(|s| {
+                    let h = s.spawn(move || {
+                        if cb.rank() == 0 {
+                            cb.send(1, 9, vec![5u32]);
+                            0u32
+                        } else {
+                            cb.recv::<u32>(0, 9)[0]
+                        }
+                    });
+                    let main = if ca.rank() == 0 {
+                        ca.send(1, 9, vec![7u32]);
+                        0u32
+                    } else {
+                        ca.recv::<u32>(0, 9)[0]
+                    };
+                    main * 100 + h.join().expect("overlap thread")
+                })
+            });
+            assert_eq!(res[1], 705, "{exec}");
+        }
+    }
+
+    #[test]
+    fn executors_report_identical_traffic_counters() {
+        // The determinism contract on the telemetry: same program, same
+        // per-rank byte/message tallies on both fabrics.
+        let program = |c: Comm| {
+            let all = c.allgatherv(vec![c.rank() as u64; c.rank() + 1]);
+            let s: u64 = all.iter().map(|v| v.iter().sum::<u64>()).sum();
+            let inn = c.alltoallv((0..c.size()).map(|d| vec![d as u32; 3]).collect());
+            c.barrier();
+            s + inn.concat().iter().map(|&x| x as u64).sum::<u64>()
+        };
+        let (rs, ss) = run_on(Executor::Sim, 5, program);
+        let (rt, st) = run_on(Executor::Threads, 5, program);
+        assert_eq!(rs, rt);
+        assert_eq!(ss.bytes_sent, st.bytes_sent);
+        assert_eq!(ss.msgs_sent, st.msgs_sent);
+    }
+
+    #[test]
+    fn wall_and_blocked_time_are_recorded() {
+        for exec in EXECUTORS {
+            let (_, stats) = run_on(exec, 2, |c| {
+                if c.rank() == 0 {
+                    // Receiver waits for a deliberately late message, so
+                    // its blocked time must register.
+                    c.recv::<u8>(1, 1)
+                } else {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    c.send(0, 1, vec![1u8]);
+                    Vec::new()
+                }
+            });
+            assert!(stats.wall_ns.iter().all(|&w| w > 0), "{exec}");
+            assert!(
+                stats.blocked_ns[0] > 0,
+                "{exec}: rank 0 waited ≥20ms but recorded no blocked time"
+            );
+            // Busy time never exceeds wall time for a single-threaded rank.
+            assert!(stats.busy_ns()[0] <= stats.wall_ns[0], "{exec}");
+        }
     }
 }

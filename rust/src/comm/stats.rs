@@ -1,9 +1,13 @@
-//! Per-rank traffic and memory accounting.
+//! Per-rank traffic, wallclock and memory accounting.
 //!
-//! On this single-core container, wallclock speedup is unmeasurable, so
-//! the scalability analysis of EXPERIMENTS.md reports what the paper's
-//! timing curves are made of: per-rank communication volume/counts and
-//! peak tracked memory (Figures 10–11 are per-process memory plots).
+//! The scalability analysis of EXPERIMENTS.md reports what the paper's
+//! timing curves are made of: per-rank communication volume/counts,
+//! peak tracked memory (Figures 10–11 are per-process memory plots),
+//! and — since the threaded executor landed (DESIGN.md §3) — per-rank
+//! wallclock split into busy and transport-blocked time. On a multicore
+//! host the threaded executor's wallclock is a direct speedup
+//! measurement; on a single core the **critical path** (the maximum
+//! per-rank busy time) models what ≥ p cores would deliver.
 
 /// Immutable snapshot of the transport counters after a run.
 #[derive(Clone, Debug)]
@@ -12,6 +16,14 @@ pub struct StatsSnapshot {
     pub bytes_sent: Vec<u64>,
     /// Messages sent by each global rank.
     pub msgs_sent: Vec<u64>,
+    /// Wallclock nanoseconds of each rank's program, thread start to
+    /// return.
+    pub wall_ns: Vec<u64>,
+    /// Nanoseconds each rank spent blocked inside the transport waiting
+    /// for a message that had not arrived yet. With the §3.1 overlap
+    /// thread active, both threads of a rank charge the same counter,
+    /// so a rank's blocked time may exceed its wallclock.
+    pub blocked_ns: Vec<u64>,
 }
 
 impl StatsSnapshot {
@@ -28,6 +40,31 @@ impl StatsSnapshot {
     /// Maximum bytes sent by any one rank (load-imbalance indicator).
     pub fn max_bytes(&self) -> u64 {
         self.bytes_sent.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Per-rank busy nanoseconds: wallclock minus transport-blocked
+    /// time, clamped at zero (overlap threads can over-charge blocking;
+    /// see [`StatsSnapshot::blocked_ns`]).
+    pub fn busy_ns(&self) -> Vec<u64> {
+        self.wall_ns
+            .iter()
+            .zip(&self.blocked_ns)
+            .map(|(&w, &b)| w.saturating_sub(b))
+            .collect()
+    }
+
+    /// Wallclock of the slowest rank, in seconds — the fleet's measured
+    /// elapsed time from inside the rank programs.
+    pub fn max_wall_seconds(&self) -> f64 {
+        self.wall_ns.iter().copied().max().unwrap_or(0) as f64 / 1e9
+    }
+
+    /// The critical path of the fleet in seconds: the maximum per-rank
+    /// *busy* time. On a host with at least one core per rank this is
+    /// the wallclock the threaded executor converges to; on fewer cores
+    /// it models the speedup the same program would show there.
+    pub fn critical_path_seconds(&self) -> f64 {
+        self.busy_ns().into_iter().max().unwrap_or(0) as f64 / 1e9
     }
 }
 
@@ -81,10 +118,16 @@ mod tests {
         let s = StatsSnapshot {
             bytes_sent: vec![10, 30, 20],
             msgs_sent: vec![1, 2, 3],
+            wall_ns: vec![5_000, 9_000, 7_000],
+            blocked_ns: vec![1_000, 9_500, 3_000],
         };
         assert_eq!(s.total_bytes(), 60);
         assert_eq!(s.total_msgs(), 6);
         assert_eq!(s.max_bytes(), 30);
+        // Busy clamps at zero when overlap threads over-charge blocking.
+        assert_eq!(s.busy_ns(), vec![4_000, 0, 4_000]);
+        assert!((s.max_wall_seconds() - 9e-6).abs() < 1e-12);
+        assert!((s.critical_path_seconds() - 4e-6).abs() < 1e-12);
     }
 
     #[test]

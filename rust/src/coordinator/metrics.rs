@@ -1,5 +1,6 @@
 //! Reports and phase timers.
 
+use crate::comm::Executor;
 use crate::order::{Ordering, SymbolicStats};
 use std::time::Instant;
 
@@ -10,8 +11,13 @@ pub struct OrderingReport {
     pub ordering: Ordering,
     /// Symbolic-factorization quality (NNZ, OPC, fill, tree height).
     pub stats: SymbolicStats,
-    /// Wallclock of the ordering (single-core; see DESIGN.md §3 on the
-    /// time-vs-traffic substitution).
+    /// The executor that drove (or, for the sequential engine, would
+    /// have driven) the rank fleet (DESIGN.md §3).
+    pub executor: Executor,
+    /// Wallclock of the ordering. Under `executor=threads` on a
+    /// multicore host this is a real parallel time; under the
+    /// serialized simulator see DESIGN.md §3 on the time-vs-traffic
+    /// substitution and [`OrderingReport::critical_path_seconds`].
     pub wall_seconds: f64,
     /// Peak tracked graph memory per rank (Figures 10–11).
     pub peak_mem_per_rank: Vec<i64>,
@@ -19,6 +25,12 @@ pub struct OrderingReport {
     pub bytes_sent_per_rank: Vec<u64>,
     /// Messages sent per rank.
     pub msgs_sent_per_rank: Vec<u64>,
+    /// Per-rank wallclock in nanoseconds (empty for the sequential
+    /// engine, which runs no fleet).
+    pub wall_ns_per_rank: Vec<u64>,
+    /// Per-rank transport-blocked nanoseconds (empty for the
+    /// sequential engine).
+    pub blocked_ns_per_rank: Vec<u64>,
 }
 
 impl OrderingReport {
@@ -38,6 +50,24 @@ impl OrderingReport {
     /// Total communication volume in bytes.
     pub fn total_comm_bytes(&self) -> u64 {
         self.bytes_sent_per_rank.iter().sum()
+    }
+
+    /// The fleet's critical path in seconds: the maximum per-rank busy
+    /// time (wallclock minus transport-blocked time). This is the
+    /// wallclock a host with one core per rank would approach; with no
+    /// fleet telemetry (sequential engine) it falls back to
+    /// [`OrderingReport::wall_seconds`].
+    pub fn critical_path_seconds(&self) -> f64 {
+        let max_busy = self
+            .wall_ns_per_rank
+            .iter()
+            .zip(&self.blocked_ns_per_rank)
+            .map(|(&w, &b)| w.saturating_sub(b))
+            .max();
+        match max_busy {
+            Some(ns) if ns > 0 => ns as f64 / 1e9,
+            _ => self.wall_seconds,
+        }
     }
 }
 
@@ -95,15 +125,27 @@ mod tests {
                 fill_ratio: 1.0,
                 tree_height: 1,
             },
-            wall_seconds: 0.0,
+            executor: Executor::Sim,
+            wall_seconds: 0.25,
             peak_mem_per_rank: vec![10, 30, 20],
             bytes_sent_per_rank: vec![5, 6],
             msgs_sent_per_rank: vec![1, 1],
+            wall_ns_per_rank: vec![4_000, 10_000],
+            blocked_ns_per_rank: vec![1_000, 7_000],
         };
         let (min, avg, max) = r.mem_min_avg_max();
         assert_eq!((min, max), (10, 30));
         assert!((avg - 20.0).abs() < 1e-12);
         assert_eq!(r.total_comm_bytes(), 11);
+        // Critical path = max(4000-1000, 10000-7000) ns = 3 µs.
+        assert!((r.critical_path_seconds() - 3e-6).abs() < 1e-15);
+        // Without fleet telemetry it falls back to the wallclock.
+        let seq = OrderingReport {
+            wall_ns_per_rank: Vec::new(),
+            blocked_ns_per_rank: Vec::new(),
+            ..r
+        };
+        assert!((seq.critical_path_seconds() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! [`OrderingService`] owns the XLA runtime (loaded once, reused across
 //! jobs — Python never runs at request time), picks the band refiner per
-//! strategy, launches the simulated rank fleet, and returns orderings
+//! strategy, launches the rank fleet on the selected executor
+//! (`executor=sim|threads`, DESIGN.md §3), and returns orderings
 //! with the paper's quality metrics and per-rank telemetry. The CLI
 //! (`rust/src/main.rs`), examples and all benches go through this API.
 
@@ -86,81 +87,89 @@ impl OrderingService {
     }
 
     /// Order `g` with the selected engine and strategy; returns the
-    /// ordering plus the full quality/telemetry report.
+    /// ordering plus the full quality/telemetry report. The rank fleet
+    /// of the distributed engines runs on the executor named by the
+    /// `executor=` strategy knob, falling back to `PTSCOTCH_EXECUTOR`
+    /// and then to the serialized simulator (DESIGN.md §3).
     pub fn order(&self, g: &Graph, engine: Engine, strat: &Strategy) -> Result<OrderingReport> {
         strat.validate()?;
         g.validate()?;
+        let exec = strat.dist.executor.unwrap_or_else(comm::Executor::from_env);
         let t0 = Instant::now();
-        let (ordering, peak_mem, comm_bytes, comm_msgs): (Ordering, Vec<i64>, Vec<u64>, Vec<u64>) =
-            match engine {
-                Engine::Sequential => {
-                    let refiner = self.refiner(strat)?;
-                    let mut rng = Rng::new(strat.seed);
-                    let o = nested_dissection(g, strat, refiner.as_ref(), &mut rng);
-                    (o, vec![g.footprint_bytes() as i64], vec![0], vec![0])
+        type Telemetry = (Ordering, Vec<i64>, comm::StatsSnapshot);
+        let (ordering, peak_mem, fleet): Telemetry = match engine {
+            Engine::Sequential => {
+                let refiner = self.refiner(strat)?;
+                let mut rng = Rng::new(strat.seed);
+                let o = nested_dissection(g, strat, refiner.as_ref(), &mut rng);
+                let fleet = comm::StatsSnapshot {
+                    bytes_sent: vec![0],
+                    msgs_sent: vec![0],
+                    wall_ns: Vec::new(),
+                    blocked_ns: Vec::new(),
+                };
+                (o, vec![g.footprint_bytes() as i64], fleet)
+            }
+            Engine::PtScotch { p } => {
+                let ga = Arc::new(g.clone());
+                let strat2 = strat.clone();
+                let service_refiner: Arc<dyn BandRefiner + Send + Sync> =
+                    Arc::from(self.refiner(strat)?);
+                // Hand the loaded runtime to the rank fleet so the
+                // distributed diffusion path can execute the fused
+                // kernel per rank; `engine=cpu` pins the scalar
+                // sweeps without consulting the runtime at all.
+                let band_rt = match strat.dist.band_engine {
+                    BandEngine::Cpu => None,
+                    BandEngine::Auto | BandEngine::Xla => self.runtime.clone(),
+                };
+                let (res, stats) = comm::run_on(exec, p, move |c| {
+                    let r = parallel_order(
+                        &c,
+                        &ga,
+                        &strat2,
+                        service_refiner.as_ref(),
+                        band_rt.as_ref(),
+                    );
+                    (r.ordering, r.peak_mem)
+                });
+                let mems = res.iter().map(|(_, m)| *m).collect();
+                let o = res.into_iter().next().expect("rank 0 result").0;
+                (o, mems, stats)
+            }
+            Engine::ParMetisLike { p } => {
+                if !p.is_power_of_two() {
+                    return Err(Error::NonPowerOfTwo(p));
                 }
-                Engine::PtScotch { p } => {
-                    let ga = Arc::new(g.clone());
-                    let strat2 = strat.clone();
-                    let service_refiner: Arc<dyn BandRefiner + Send + Sync> =
-                        Arc::from(self.refiner(strat)?);
-                    // Hand the loaded runtime to the rank fleet so the
-                    // distributed diffusion path can execute the fused
-                    // kernel per rank; `engine=cpu` pins the scalar
-                    // sweeps without consulting the runtime at all.
-                    let band_rt = match strat.dist.band_engine {
-                        BandEngine::Cpu => None,
-                        BandEngine::Auto | BandEngine::Xla => self.runtime.clone(),
-                    };
-                    let (res, stats) = comm::run(p, move |c| {
-                        let r = parallel_order(
-                            &c,
-                            &ga,
-                            &strat2,
-                            service_refiner.as_ref(),
-                            band_rt.as_ref(),
-                        );
-                        (r.ordering, r.peak_mem)
-                    });
-                    let mems = res.iter().map(|(_, m)| *m).collect();
-                    let o = res.into_iter().next().expect("rank 0 result").0;
-                    (o, mems, stats.bytes_sent, stats.msgs_sent)
+                let ga = Arc::new(g.clone());
+                let strat2 = strat.clone();
+                let (res, stats) = comm::run_on(exec, p, move |c| {
+                    let r = parmetis_like_order(&c, &ga, &strat2)?;
+                    Ok::<_, Error>((r.ordering, r.peak_mem))
+                });
+                let mut orderings = Vec::new();
+                let mut mems = Vec::new();
+                for r in res {
+                    let (o, m) = r?;
+                    orderings.push(o);
+                    mems.push(m);
                 }
-                Engine::ParMetisLike { p } => {
-                    if !p.is_power_of_two() {
-                        return Err(Error::NonPowerOfTwo(p));
-                    }
-                    let ga = Arc::new(g.clone());
-                    let strat2 = strat.clone();
-                    let (res, stats) = comm::run(p, move |c| {
-                        let r = parmetis_like_order(&c, &ga, &strat2)?;
-                        Ok::<_, Error>((r.ordering, r.peak_mem))
-                    });
-                    let mut orderings = Vec::new();
-                    let mut mems = Vec::new();
-                    for r in res {
-                        let (o, m) = r?;
-                        orderings.push(o);
-                        mems.push(m);
-                    }
-                    (
-                        orderings.into_iter().next().expect("rank 0"),
-                        mems,
-                        stats.bytes_sent,
-                        stats.msgs_sent,
-                    )
-                }
-            };
+                (orderings.into_iter().next().expect("rank 0"), mems, stats)
+            }
+        };
         let wall = t0.elapsed();
         ordering.validate()?;
         let stats = symbolic_cholesky(g, &ordering);
         Ok(OrderingReport {
             ordering,
             stats,
+            executor: exec,
             wall_seconds: wall.as_secs_f64(),
             peak_mem_per_rank: peak_mem,
-            bytes_sent_per_rank: comm_bytes,
-            msgs_sent_per_rank: comm_msgs,
+            bytes_sent_per_rank: fleet.bytes_sent,
+            msgs_sent_per_rank: fleet.msgs_sent,
+            wall_ns_per_rank: fleet.wall_ns,
+            blocked_ns_per_rank: fleet.blocked_ns,
         })
     }
 }
@@ -193,6 +202,27 @@ mod tests {
         rep.ordering.validate().unwrap();
         assert_eq!(rep.peak_mem_per_rank.len(), 4);
         assert!(rep.bytes_sent_per_rank.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn executor_knob_drives_the_fleet_with_identical_results() {
+        let g = generators::grid2d(14, 14);
+        let svc = OrderingService::new_cpu_only();
+        let run = |spec: &str| {
+            svc.order(&g, Engine::PtScotch { p: 3 }, &Strategy::parse(spec).unwrap())
+                .unwrap()
+        };
+        let sim = run("executor=sim,seed=7");
+        let thr = run("executor=threads,seed=7");
+        assert_eq!(sim.executor, crate::comm::Executor::Sim);
+        assert_eq!(thr.executor, crate::comm::Executor::Threads);
+        assert_eq!(sim.ordering.iperm, thr.ordering.iperm);
+        assert_eq!(sim.bytes_sent_per_rank, thr.bytes_sent_per_rank);
+        assert_eq!(sim.msgs_sent_per_rank, thr.msgs_sent_per_rank);
+        // The fleet's per-rank wallclock columns exist for both.
+        assert_eq!(sim.wall_ns_per_rank.len(), 3);
+        assert_eq!(thr.wall_ns_per_rank.len(), 3);
+        assert!(thr.critical_path_seconds() > 0.0);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //!   each leaf seeing its ring of already-numbered separator vertices
 //!   ([`sep`], [`order`]);
 //! * a **distributed layer** mirroring the paper's MPI algorithms on an
-//!   in-process, thread-per-rank communicator: distributed graphs with
+//!   in-process, thread-per-rank communicator with two interchangeable
+//!   executors — a serialized deterministic simulator and a
+//!   free-running per-peer-mailbox fabric with bit-identical results
+//!   (`executor=sim|threads`): distributed graphs with
 //!   ghost/halo indexing, parallel probabilistic matching, coarsening with
 //!   folding-with-duplication, distributed band extraction,
 //!   multi-sequential band refinement and parallel nested dissection

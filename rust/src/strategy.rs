@@ -4,6 +4,7 @@
 //! threshold, FM tolerances, refiner choice) lives here so the benches and
 //! ablations can sweep them.
 
+use crate::comm::Executor;
 use crate::sep::fm::FmParams;
 use crate::{Error, Result};
 
@@ -168,6 +169,29 @@ pub struct DistStrategy {
     /// Execution engine for the distributed diffusion sweeps
     /// (`engine=auto|cpu|xla`).
     pub band_engine: BandEngine,
+    /// Which executor drives the rank fleet
+    /// (`executor=sim|threads|env`, DESIGN.md §3). `None` (the `env`
+    /// setting, default) defers to the `PTSCOTCH_EXECUTOR` environment
+    /// variable with the serialized simulator as the fallback, so tests
+    /// run against the deterministic oracle unless explicitly switched.
+    ///
+    /// ```
+    /// use ptscotch::comm::Executor;
+    /// use ptscotch::strategy::Strategy;
+    ///
+    /// assert_eq!(Strategy::default().dist.executor, None);
+    /// assert_eq!(
+    ///     Strategy::parse("executor=threads").unwrap().dist.executor,
+    ///     Some(Executor::Threads),
+    /// );
+    /// assert_eq!(
+    ///     Strategy::parse("executor=sim").unwrap().dist.executor,
+    ///     Some(Executor::Sim),
+    /// );
+    /// assert_eq!(Strategy::parse("executor=env").unwrap().dist.executor, None);
+    /// assert!(Strategy::parse("executor=mpi").is_err());
+    /// ```
+    pub executor: Option<Executor>,
 }
 
 impl Default for DistStrategy {
@@ -180,6 +204,7 @@ impl Default for DistStrategy {
             max_centralized_band: 4_000_000,
             diffusion_sweeps: 32,
             band_engine: BandEngine::default(),
+            executor: None,
         }
     }
 }
@@ -214,7 +239,7 @@ impl Default for Strategy {
 impl Strategy {
     /// Parse `key=value` pairs (comma-separated) over the default
     /// strategy, e.g.
-    /// `band=3,folddup=1,leaf=120,leafmethod=hamd,refiner=xla,engine=auto,seed=42`.
+    /// `band=3,folddup=1,leaf=120,leafmethod=hamd,refiner=xla,engine=auto,executor=sim,seed=42`.
     ///
     /// ```
     /// use ptscotch::strategy::{LeafMethod, Strategy};
@@ -267,6 +292,12 @@ impl Strategy {
                 "rounds" => s.dist.matching_rounds = parse_usize(v)?,
                 "maxband" => s.dist.max_centralized_band = parse_usize(v)?,
                 "sweeps" => s.dist.diffusion_sweeps = parse_usize(v)?,
+                "executor" => {
+                    s.dist.executor = match v {
+                        "env" => None,
+                        _ => Some(v.parse::<Executor>().map_err(Error::InvalidStrategy)?),
+                    }
+                }
                 "engine" => {
                     s.dist.band_engine = match v {
                         "auto" => BandEngine::Auto,
@@ -380,6 +411,21 @@ mod tests {
             assert_eq!(Strategy::parse(spec).unwrap().dist.band_engine, want);
         }
         assert!(Strategy::parse("engine=gpuonly").is_err());
+    }
+
+    #[test]
+    fn parse_executor_knob() {
+        assert_eq!(Strategy::default().dist.executor, None);
+        assert_eq!(
+            Strategy::parse("executor=threads").unwrap().dist.executor,
+            Some(Executor::Threads)
+        );
+        assert_eq!(
+            Strategy::parse("executor=sim,leaf=60").unwrap().dist.executor,
+            Some(Executor::Sim)
+        );
+        assert_eq!(Strategy::parse("executor=env").unwrap().dist.executor, None);
+        assert!(Strategy::parse("executor=mpi").is_err());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! The baseline is measured in-process (the seed exchange algorithm is
 //! kept verbatim below), so the comparison is exact on any host.
 
-use ptscotch::comm::{self, Comm};
+use ptscotch::comm::{self, Comm, Executor};
 use ptscotch::dist::dgraph::DGraph;
 use ptscotch::graph::generators;
 use std::sync::Arc;
@@ -111,6 +111,31 @@ fn halo_plan_strictly_reduces_traffic_vs_seed_exchange() {
             calls * (p * (p - 1)) as u64,
             "p={p}: unexpected message delta"
         );
+    }
+}
+
+#[test]
+fn threaded_executor_reports_identical_traffic_counters() {
+    // The stats counters are atomics updated from p free-running
+    // threads under `executor=threads`; this pins them to the
+    // serialized simulator's values on the exact workload above, so a
+    // lost or double-counted update (a counter race) shows up as an
+    // inequality rather than flakiness.
+    let g = Arc::new(generators::grid2d(24, 18));
+    for p in [2usize, 5] {
+        let measure = |exec: Executor| {
+            let g = g.clone();
+            let (vals, stats) = comm::run_on(exec, p, move |c| {
+                let dg = DGraph::from_global(&c, &g);
+                run_workload(&c, &dg, false)
+            });
+            (vals, stats.bytes_sent, stats.msgs_sent)
+        };
+        let (sim_vals, sim_bytes, sim_msgs) = measure(Executor::Sim);
+        let (thr_vals, thr_bytes, thr_msgs) = measure(Executor::Threads);
+        assert_eq!(sim_vals, thr_vals, "p={p}: results diverged");
+        assert_eq!(sim_bytes, thr_bytes, "p={p}: per-rank sent bytes");
+        assert_eq!(sim_msgs, thr_msgs, "p={p}: per-rank sent messages");
     }
 }
 
