@@ -5,17 +5,24 @@
 //! cargo run --release --offline --example compare_engines [scale]
 //! ```
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::runtime::XlaRuntime;
-use ptscotch::strategy::Strategy;
+use std::sync::Arc;
 
 fn main() {
     let scale: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(1);
-    let g = generators::audikw_like(8 * scale, 8 * scale, 8 * scale, 0.02, 30, 1);
+    let g = Arc::new(generators::audikw_like(
+        8 * scale,
+        8 * scale,
+        8 * scale,
+        0.02,
+        30,
+        1,
+    ));
     println!(
         "graph: audikw-like |V|={} |E|={} max degree {}",
         g.n(),
@@ -23,15 +30,15 @@ fn main() {
         g.max_degree()
     );
     let svc = OrderingService::new(&XlaRuntime::default_dir());
-    let strat = Strategy::default();
-    let seq = svc.order(&g, Engine::Sequential, &strat).unwrap();
+    let run = |engine| svc.run(&OrderingRequest::from_arc(Arc::clone(&g)).engine(engine));
+    let seq = run(Engine::Sequential).unwrap();
     println!("sequential O_SS = {:.4e}", seq.stats.opc);
     println!();
     println!("{:>4} {:>14} {:>14} {:>10} {:>10}", "p", "O_PTS", "O_PM", "t_PTS", "t_PM");
     for p in [2usize, 3, 4, 6, 8] {
-        let pts = svc.order(&g, Engine::PtScotch { p }, &strat).unwrap();
+        let pts = run(Engine::PtScotch { p }).unwrap();
         let pm = if p.is_power_of_two() {
-            match svc.order(&g, Engine::ParMetisLike { p }, &strat) {
+            match run(Engine::ParMetisLike { p }) {
                 Ok(r) => format!("{:.4e}", r.stats.opc),
                 Err(e) => format!("† {e}"),
             }
@@ -39,7 +46,7 @@ fn main() {
             "† non-pow2".to_string() // the paper's dagger: PM cannot run
         };
         let tpm = if p.is_power_of_two() {
-            svc.order(&g, Engine::ParMetisLike { p }, &strat)
+            run(Engine::ParMetisLike { p })
                 .map(|r| format!("{:.2}", r.wall_seconds))
                 .unwrap_or_else(|_| "—".into())
         } else {

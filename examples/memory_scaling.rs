@@ -6,13 +6,12 @@
 //! cargo run --release --offline --example memory_scaling
 //! ```
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
-use ptscotch::strategy::Strategy;
+use std::sync::Arc;
 
 fn main() {
     let svc = OrderingService::new_cpu_only();
-    let strat = Strategy::default();
     for (name, g) in [
         (
             "audikw-like (high-degree cluster → imbalance)",
@@ -23,14 +22,16 @@ fn main() {
             generators::cage_like(6000, 8, 2),
         ),
     ] {
+        let g = Arc::new(g);
         println!("{name}: |V|={} |E|={}", g.n(), g.m());
         println!(
             "{:>4} {:>12} {:>12} {:>12} {:>10}",
             "p", "mem min", "mem avg", "mem max", "max/avg"
         );
         for p in [2usize, 4, 8, 16] {
-            let rep = svc.order(&g, Engine::PtScotch { p }, &strat).unwrap();
-            let (mn, avg, mx) = rep.mem_min_avg_max();
+            let req = OrderingRequest::from_arc(Arc::clone(&g)).engine(Engine::PtScotch { p });
+            let res = svc.run(&req).unwrap();
+            let (mn, avg, mx) = res.mem_min_avg_max();
             println!(
                 "{:>4} {:>10} KB {:>10.0} KB {:>10} KB {:>10.2}",
                 p,

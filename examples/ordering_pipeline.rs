@@ -10,18 +10,23 @@
 //! dissection on 8 simulated ranks with the **XLA diffusion band
 //! refiner** (the AOT-compiled Pallas kernel on the request path) →
 //! symbolic Cholesky → OPC/NNZ vs the sequential reference and the
-//! ParMETIS-like baseline, plus per-rank memory and traffic.
+//! ParMETIS-like baseline, plus per-rank memory and traffic. Requests
+//! go through the batch coordinator, so the closing replay is served
+//! from the fingerprint cache with zero rank work (DESIGN.md §6).
 
-use ptscotch::coordinator::{Engine, OrderingService, PhaseTimer};
+use ptscotch::coordinator::{
+    BatchCoordinator, Engine, OrderingRequest, OrderingService, PhaseTimer, Served,
+};
 use ptscotch::graph::generators;
 use ptscotch::runtime::XlaRuntime;
 use ptscotch::strategy::Strategy;
+use std::sync::Arc;
 
 fn main() {
     let mut timer = PhaseTimer::new();
     // ~46k unknowns: large enough to be a real workload on one core,
     // small enough to finish in seconds.
-    let g = generators::grid3d(36, 36, 36);
+    let g = Arc::new(generators::grid3d(36, 36, 36));
     timer.lap("generate");
     println!(
         "workload: grid3d 36^3 — |V|={} |E|={} ({} B CSR)",
@@ -30,8 +35,8 @@ fn main() {
         g.footprint_bytes()
     );
 
-    let svc = OrderingService::new(&XlaRuntime::default_dir());
-    let xla_ok = svc.has_xla();
+    let coord = BatchCoordinator::new(OrderingService::new(&XlaRuntime::default_dir()));
+    let xla_ok = coord.service().has_xla();
     println!("XLA runtime: {}", if xla_ok { "loaded" } else { "MISSING — run `make artifacts`" });
 
     // The three-layer hot path: XLA diffusion refiner when available.
@@ -41,17 +46,22 @@ fn main() {
         Strategy::default()
     };
     let p = 8;
-    let pts = svc
-        .order(&g, Engine::PtScotch { p }, &strat)
+    let pts_req = OrderingRequest::from_arc(Arc::clone(&g))
+        .strategy(strat)
+        .engine(Engine::PtScotch { p })
+        .tag("pts");
+    let pts = coord
+        .request(pts_req.clone())
+        .result
         .expect("pt-scotch ordering");
     timer.lap("pt-scotch p=8");
-    let seq = svc
-        .order(&g, Engine::Sequential, &Strategy::default())
-        .expect("sequential ordering");
+    let seq_req = OrderingRequest::from_arc(Arc::clone(&g)).tag("seq");
+    let seq = coord.request(seq_req).result.expect("sequential ordering");
     timer.lap("sequential");
-    let pm = svc
-        .order(&g, Engine::ParMetisLike { p }, &Strategy::default())
-        .expect("baseline ordering");
+    let pm_req = OrderingRequest::from_arc(Arc::clone(&g))
+        .engine(Engine::ParMetisLike { p })
+        .tag("pm");
+    let pm = coord.request(pm_req).result.expect("baseline ordering");
     timer.lap("parmetis-like p=8");
 
     println!();
@@ -94,5 +104,20 @@ fn main() {
         pm.stats.opc / seq.stats.opc
     );
     assert!(ratio < 1.6, "parallel quality regressed: {ratio}");
+
+    // Service layer: replaying the same request is a cache hit with a
+    // bit-identical result and zero rank work.
+    let replay = coord.request(pts_req);
+    assert_eq!(replay.served, Served::Hit);
+    let replayed = replay.result.expect("cached ordering");
+    assert_eq!(replayed.ordering, pts.ordering);
+    assert_eq!(replayed.blocks, pts.blocks);
+    let m = coord.metrics();
+    println!(
+        "service: {} requests, {} orderings run, hit-rate {:.0}% on replay",
+        m.requests(),
+        m.jobs_run,
+        m.hit_rate() * 100.0
+    );
     println!("E2E OK");
 }

@@ -9,14 +9,14 @@
 //! (3) the ParMETIS-like baseline, printing the paper's two quality
 //! metrics (OPC and NNZ) for each.
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::runtime::XlaRuntime;
-use ptscotch::strategy::Strategy;
+use std::sync::Arc;
 
 fn main() {
     // A 16×16×16 7-point mesh: 4096 unknowns, the classic ND test case.
-    let g = generators::grid3d(16, 16, 16);
+    let g = Arc::new(generators::grid3d(16, 16, 16));
     println!(
         "graph: grid3d 16^3  |V|={} |E|={} avg degree {:.2}",
         g.n(),
@@ -25,24 +25,29 @@ fn main() {
     );
 
     let svc = OrderingService::new(&XlaRuntime::default_dir());
-    let strat = Strategy::default();
     println!(
         "XLA artifacts: {}",
         if svc.has_xla() { "loaded" } else { "not built (CPU-only run; `make artifacts`)" }
     );
     println!(
-        "{:<22} {:>12} {:>12} {:>6} {:>8}",
-        "engine", "OPC", "NNZ(L)", "fill", "t(s)"
+        "{:<22} {:>12} {:>12} {:>6} {:>6} {:>8}",
+        "engine", "OPC", "NNZ(L)", "fill", "cblk", "t(s)"
     );
     for (name, engine) in [
         ("sequential", Engine::Sequential),
         ("pt-scotch p=4", Engine::PtScotch { p: 4 }),
         ("parmetis-like p=4", Engine::ParMetisLike { p: 4 }),
     ] {
-        let rep = svc.order(&g, engine, &strat).expect("ordering");
+        let req = OrderingRequest::from_arc(Arc::clone(&g)).engine(engine);
+        let res = svc.run(&req).expect("ordering");
         println!(
-            "{:<22} {:>12.4e} {:>12} {:>6.2} {:>8.2}",
-            name, rep.stats.opc, rep.stats.nnz, rep.stats.fill_ratio, rep.wall_seconds
+            "{:<22} {:>12.4e} {:>12} {:>6.2} {:>6} {:>8.2}",
+            name,
+            res.stats.opc,
+            res.stats.nnz,
+            res.stats.fill_ratio,
+            res.blocks.cblk,
+            res.wall_seconds
         );
     }
     println!();

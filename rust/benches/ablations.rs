@@ -17,10 +17,20 @@
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::runtime::XlaRuntime;
 use ptscotch::strategy::Strategy;
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
 
 fn main() {
     let scale = common::bench_scale();
@@ -33,7 +43,7 @@ fn main() {
     println!("{:<8} {:>12} {:>10} {:>8}", "width", "OPC", "NNZ", "t(s)");
     for w in [1u32, 2, 3, 5, 8] {
         let strat = Strategy::parse(&format!("band={w}")).unwrap();
-        let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
+        let rep = order(&svc, &g, Engine::Sequential, &strat).unwrap();
         println!(
             "{:<8} {:>12} {:>10} {:>8.2}",
             w,
@@ -58,7 +68,7 @@ fn main() {
         ("fold-dup, thresh=400", "folddup=1,foldthresh=400"),
     ] {
         let strat = Strategy::parse(spec).unwrap();
-        let rep = svc.order(&g, Engine::PtScotch { p: 8 }, &strat).unwrap();
+        let rep = order(&svc, &g, Engine::PtScotch { p: 8 }, &strat).unwrap();
         println!(
             "{:<22} {:>12} {:>8.2}",
             name,
@@ -77,8 +87,8 @@ fn main() {
     println!("{:<4} {:>12} {:>12} {:>8}", "p", "OPC_PTS", "OPC_PM", "ratio");
     for p in [2usize, 4, 8, 16] {
         let strat = Strategy::default();
-        let pts = svc.order(&g, Engine::PtScotch { p }, &strat).unwrap();
-        let pm = svc.order(&g, Engine::ParMetisLike { p }, &strat).unwrap();
+        let pts = order(&svc, &g, Engine::PtScotch { p }, &strat).unwrap();
+        let pm = order(&svc, &g, Engine::ParMetisLike { p }, &strat).unwrap();
         println!(
             "{:<4} {:>12} {:>12} {:>8.3}",
             p,
@@ -104,7 +114,7 @@ fn main() {
     }
     for (name, spec) in variants {
         let strat = Strategy::parse(spec).unwrap();
-        let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
+        let rep = order(&svc, &g, Engine::Sequential, &strat).unwrap();
         println!(
             "{:<12} {:>12} {:>8.2}",
             name,

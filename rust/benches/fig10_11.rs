@@ -10,9 +10,19 @@
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::strategy::Strategy;
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
 
 fn main() {
     let scale = common::bench_scale();
@@ -37,9 +47,7 @@ fn main() {
             "p", "mem min KiB", "mem avg KiB", "mem max KiB", "max/avg"
         );
         for p in common::proc_counts() {
-            let rep = svc
-                .order(&g, Engine::PtScotch { p }, &strat)
-                .expect("pts");
+            let rep = order(&svc, &g, Engine::PtScotch { p }, &strat).expect("pts");
             let (mn, avg, mx) = rep.mem_min_avg_max();
             println!(
                 "{:<4} {:>12} {:>12.0} {:>12} {:>9.2}",

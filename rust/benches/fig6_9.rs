@@ -16,9 +16,19 @@
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::strategy::Strategy;
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
 
 fn main() {
     let scale = common::bench_scale();
@@ -37,9 +47,7 @@ fn main() {
         ),
     ];
     for (name, csv, g) in graphs {
-        let seq = svc
-            .order(&g, Engine::Sequential, &strat)
-            .expect("sequential");
+        let seq = order(&svc, &g, Engine::Sequential, &strat).expect("sequential");
         println!("\n== {name}: |V|={} |E|={} ==", g.n(), g.m());
         println!(
             "sequential reference: OPC {}  fill {:.2}",
@@ -51,10 +59,8 @@ fn main() {
             "p", "OPC_PTS", "fill_PTS", "OPC_PM", "fill_PM", "wall_PTS", "speedup"
         );
         for p in common::proc_counts() {
-            let pts = svc
-                .order(&g, Engine::PtScotch { p }, &strat)
-                .expect("pts");
-            let pm = svc.order(&g, Engine::ParMetisLike { p }, &strat).ok();
+            let pts = order(&svc, &g, Engine::PtScotch { p }, &strat).expect("pts");
+            let pm = order(&svc, &g, Engine::ParMetisLike { p }, &strat).ok();
             let (opm, fpm) = pm
                 .as_ref()
                 .map(|r| (common::sci(r.stats.opc), format!("{:.2}", r.stats.fill_ratio)))

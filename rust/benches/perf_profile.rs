@@ -15,16 +15,21 @@
 //! `parallel_order` on grid3d under both executors
 //! (`executor=sim|threads`, DESIGN.md §3) at p ∈ {1, 4, 8} and reports
 //! real wallclock next to the fleet's critical path — the measured and
-//! the ≥ p-core-modeled speedup columns of EXPERIMENTS.md §Perf.3.
-//! `--json` additionally writes the whole profile (phases + quality +
-//! executor wallclocks) to `bench_out/BENCH_PR6.json` (run by the CI
-//! bench/quality-smoke step). Used to drive and document the
+//! the ≥ p-core-modeled speedup columns of EXPERIMENTS.md §Perf.3. The
+//! §Perf.4 section pushes a batch of identical requests through the
+//! `BatchCoordinator` twice — cold (one real job, the rest coalesced)
+//! and warm (pure fingerprint-cache hits) — and reports the hit rate
+//! and the per-request latency of each pass, asserting the cold batch
+//! ran exactly one ordering and the warm one ran zero. `--json`
+//! additionally writes the whole profile (phases + quality + executor
+//! wallclocks + service throughput) to `bench_out/BENCH_PR7.json` (run
+//! by the CI bench/quality-smoke step). Used to drive and document the
 //! optimization log in EXPERIMENTS.md §Perf.
 
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{BatchCoordinator, Engine, OrderingRequest, OrderingService, Served};
 use ptscotch::graph::generators;
 use ptscotch::order::hamd;
 use ptscotch::order::mmd::minimum_degree;
@@ -37,7 +42,7 @@ use ptscotch::sep::fm::{fm_refine, FmParams};
 use ptscotch::sep::initial::greedy_graph_growing;
 use ptscotch::sep::{multilevel_separator, FmRefiner};
 use ptscotch::strategy::{SepStrategy, Strategy};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Value of a `--engine <e>` / `--engine=<e>` argument, selecting which
@@ -56,13 +61,23 @@ fn engine_arg() -> Option<String> {
 
 /// `--json` mode: also write every profiled row (wallclock plus, for
 /// the distributed phases, bytes/messages on the wire), the
-/// per-leaf-method quality table and the sim-vs-threads executor
-/// wallclock rows to `bench_out/BENCH_PR6.json` — the machine-readable
+/// per-leaf-method quality table, the sim-vs-threads executor wallclock
+/// rows and the §Perf.4 service rows to `bench_out/BENCH_PR7.json` — the machine-readable
 /// perf/quality trajectory the EXPERIMENTS.md BENCH log points at. CI
 /// runs this in the bench-smoke step so the file regenerates on every
 /// push.
 fn json_mode() -> bool {
     std::env::args().any(|a| a == "--json")
+}
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
 }
 
 /// One profiled phase: wallclock plus the traffic counters of the rank
@@ -108,6 +123,22 @@ struct ERow {
 
 /// Executor rows accumulated for the table, the CSV and `--json`.
 static EROWS: Mutex<Vec<ERow>> = Mutex::new(Vec::new());
+
+/// One §Perf.4 service-throughput measurement: a batch of identical
+/// requests through the [`BatchCoordinator`], cold (empty cache) or
+/// warm (replay), with the jobs actually run, the batch hit rate and
+/// the mean per-request latency (queue + run).
+struct SRow {
+    pass: &'static str,
+    requests: usize,
+    jobs_run: usize,
+    hit_rate: f64,
+    mean_ms: f64,
+    wall_ms: f64,
+}
+
+/// Service rows accumulated for the table, the CSV and `--json`.
+static SROWS: Mutex<Vec<SRow>> = Mutex::new(Vec::new());
 
 /// Mean OPC per `(p, mmd, hamd)` over the accumulated quality rows —
 /// the single source for both the printed summary and the JSON
@@ -160,13 +191,14 @@ fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
     dt
 }
 
-/// Serialize the accumulated rows as `bench_out/BENCH_PR6.json`. Phase
+/// Serialize the accumulated rows as `bench_out/BENCH_PR7.json`. Phase
 /// names contain no quotes or backslashes, so the literal embedding is
 /// valid JSON.
 fn write_json(smoke: bool, scale: usize) {
     let rows = ROWS.lock().unwrap();
     let qrows = QROWS.lock().unwrap();
     let erows = EROWS.lock().unwrap();
+    let srows = SROWS.lock().unwrap();
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -225,6 +257,19 @@ fn write_json(smoke: bool, scale: usize) {
         ));
     }
     s.push_str("  ],\n");
+    // §Perf.4: service-throughput rows (cold vs warm batch through the
+    // batch coordinator; see EXPERIMENTS.md §Perf.4).
+    s.push_str("  \"service\": [\n");
+    for (i, r) in srows.iter().enumerate() {
+        let sep = if i + 1 < srows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"pass\": \"{}\", \"requests\": {}, \"jobs_run\": {}, \
+             \"hit_rate\": {:.4}, \"mean_ms_per_request\": {:.4}, \
+             \"wall_ms\": {:.4}}}{sep}\n",
+            r.pass, r.requests, r.jobs_run, r.hit_rate, r.mean_ms, r.wall_ms
+        ));
+    }
+    s.push_str("  ],\n");
     let (pmax, measured, modeled) = executor_speedup(&erows);
     s.push_str(&format!(
         "  \"speedup\": {{\"graph\": \"grid3d\", \"p\": {pmax}, \
@@ -236,8 +281,8 @@ fn write_json(smoke: bool, scale: usize) {
     s.push_str("}\n");
     let dir = std::path::Path::new("bench_out");
     let _ = std::fs::create_dir_all(dir);
-    let path = dir.join("BENCH_PR6.json");
-    std::fs::write(&path, s).expect("write BENCH_PR6.json");
+    let path = dir.join("BENCH_PR7.json");
+    std::fs::write(&path, s).expect("write BENCH_PR7.json");
     println!("\nwrote {}", path.display());
 }
 
@@ -280,8 +325,7 @@ fn executor_profile(smoke: bool, scale: usize) {
     for exec in ["sim", "threads"] {
         for p in [1usize, 4, 8] {
             let strat = Strategy::parse(&format!("executor={exec}")).unwrap();
-            let rep = svc
-                .order(&g, Engine::PtScotch { p }, &strat)
+            let rep = order(&svc, &g, Engine::PtScotch { p }, &strat)
                 .expect("executor profile ordering");
             let (wall, crit) = (rep.wall_seconds, rep.critical_path_seconds());
             println!(
@@ -338,9 +382,7 @@ fn quality_profile(smoke: bool, scale: usize) {
             for method in ["mmd", "hamd"] {
                 let strat = Strategy::parse(&format!("leafmethod={method}")).unwrap();
                 let t0 = Instant::now();
-                let rep = svc
-                    .order(g, Engine::PtScotch { p }, &strat)
-                    .expect("quality ordering");
+                let rep = order(&svc, g, Engine::PtScotch { p }, &strat).expect("ordering");
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
                 let st = rep.stats;
                 println!(
@@ -410,6 +452,85 @@ fn quality_profile(smoke: bool, scale: usize) {
     }
 }
 
+/// §Perf.4 — service throughput: push a batch of identical requests
+/// through the [`BatchCoordinator`] twice. The cold pass pays exactly
+/// one full ordering (the duplicates coalesce onto the leader's job);
+/// the warm pass is pure fingerprint-cache hits with zero rank work,
+/// so its per-request latency is the service-overhead floor
+/// (EXPERIMENTS.md §Perf.4). Both invariants are asserted, so a cache
+/// or coalescing regression fails the bench even in smoke mode.
+fn service_profile(smoke: bool, scale: usize) {
+    let s = scale.max(1);
+    let g = if smoke {
+        generators::grid3d(10, 10, 10)
+    } else {
+        generators::grid3d(12 * s, 12 * s, 12 * s)
+    };
+    let g = Arc::new(g);
+    let coord = BatchCoordinator::new(OrderingService::new_cpu_only());
+    let batch: Vec<OrderingRequest> = (0..6)
+        .map(|i| {
+            OrderingRequest::from_arc(Arc::clone(&g))
+                .engine(Engine::PtScotch { p: 4 })
+                .tag(format!("r{i}"))
+        })
+        .collect();
+    println!(
+        "\n-- service throughput (§Perf.4, grid3d n={}, batch of {}) --",
+        g.n(),
+        batch.len()
+    );
+    println!(
+        "{:<6} {:>9} {:>9} {:>9} {:>13} {:>10}",
+        "pass", "requests", "jobs", "hit_rate", "mean_ms/req", "wall_ms"
+    );
+    for pass in ["cold", "warm"] {
+        let t0 = Instant::now();
+        let reports = coord.submit(batch.clone());
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let n = reports.len();
+        let jobs = reports.iter().filter(|r| r.served == Served::Miss).count();
+        let mean_ms = reports
+            .iter()
+            .map(|r| (r.queue_seconds + r.run_seconds) * 1e3)
+            .sum::<f64>()
+            / n.max(1) as f64;
+        for r in &reports {
+            assert!(r.result.is_ok(), "{pass} request {} failed", r.tag);
+        }
+        let hit_rate = (n - jobs) as f64 / n.max(1) as f64;
+        let expected_jobs = if pass == "cold" { 1 } else { 0 };
+        assert_eq!(
+            jobs, expected_jobs,
+            "{pass} batch must run exactly {expected_jobs} ordering(s), ran {jobs}"
+        );
+        println!("{pass:<6} {n:>9} {jobs:>9} {hit_rate:>9.2} {mean_ms:>13.3} {wall_ms:>10.2}");
+        common::csv_row(
+            "service_throughput.csv",
+            "pass,requests,jobs_run,hit_rate,mean_ms_per_request,wall_ms",
+            &format!("{pass},{n},{jobs},{hit_rate:.4},{mean_ms:.4},{wall_ms:.4}"),
+        );
+        SROWS.lock().unwrap().push(SRow {
+            pass,
+            requests: n,
+            jobs_run: jobs,
+            hit_rate,
+            mean_ms,
+            wall_ms,
+        });
+    }
+    let m = coord.metrics();
+    println!(
+        "service totals: {} requests, {} ordering(s) run, {} hits, {} coalesced \
+         (aggregate hit-rate {:.0}%)",
+        m.requests(),
+        m.jobs_run,
+        m.hits,
+        m.coalesced,
+        m.hit_rate() * 100.0
+    );
+}
+
 fn main() {
     // Smoke mode (CI / `make check`): a tiny graph and single reps —
     // exercises every phase end-to-end in seconds so the bench can't
@@ -450,15 +571,12 @@ fn main() {
     let no_halo = vec![false; leaf.n()];
     time("hamd (leaf s³, empty halo)", reps(5), || hamd(&leaf, &no_halo));
     let svc = OrderingService::new(&XlaRuntime::default_dir());
-    let rep = svc
-        .order(&g, Engine::Sequential, &Strategy::default())
-        .unwrap();
+    let rep = order(&svc, &g, Engine::Sequential, &Strategy::default()).unwrap();
     time("symbolic_cholesky (eval)", reps(3), || {
         symbolic_cholesky(&g, &rep.ordering)
     });
     time("nested_dissection (end-to-end)", 1, || {
-        svc.order(&g, Engine::Sequential, &Strategy::default())
-            .unwrap()
+        order(&svc, &g, Engine::Sequential, &Strategy::default()).unwrap()
     });
     // Distributed diffusion on an oversized band — the scalable path of
     // `dist::dsep::band_refine_dist` (maxband forced tiny), kept in the
@@ -471,7 +589,6 @@ fn main() {
     {
         use ptscotch::comm;
         use ptscotch::runtime::load_shared;
-        use std::sync::Arc;
         let engines: Vec<String> = match engine_arg() {
             Some(e) => vec![e],
             None => vec!["cpu".into(), "xla".into()],
@@ -630,6 +747,7 @@ fn main() {
 
     quality_profile(smoke, scale);
     executor_profile(smoke, scale);
+    service_profile(smoke, scale);
 
     if json_mode() {
         write_json(smoke, scale);

@@ -9,9 +9,19 @@
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::strategy::Strategy;
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
 
 fn main() {
     let scale = common::bench_scale();
@@ -25,9 +35,7 @@ fn main() {
         let mut opcs = Vec::new();
         for seed in 1..=10u64 {
             let strat = Strategy::parse(&format!("seed={seed}")).unwrap();
-            let rep = svc
-                .order(&g, Engine::PtScotch { p: 8 }, &strat)
-                .expect("pts");
+            let rep = order(&svc, &g, Engine::PtScotch { p: 8 }, &strat).expect("pts");
             opcs.push(rep.stats.opc);
         }
         let min = opcs.iter().cloned().fold(f64::INFINITY, f64::min);

@@ -8,9 +8,19 @@
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::strategy::Strategy;
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
 
 fn main() {
     let scale = common::bench_scale();
@@ -22,9 +32,7 @@ fn main() {
         "graph", "|V|", "|E|", "avg deg", "O_SS", "t(s)"
     );
     for (name, g) in generators::table1_suite(scale) {
-        let rep = svc
-            .order(&g, Engine::Sequential, &strat)
-            .expect("sequential ordering");
+        let rep = order(&svc, &g, Engine::Sequential, &strat).expect("sequential ordering");
         println!(
             "{:<18} {:>9} {:>10} {:>8.2} {:>12} {:>8.2}",
             name,

@@ -15,9 +15,19 @@
 #[path = "common.rs"]
 mod common;
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 use ptscotch::graph::generators;
 use ptscotch::strategy::Strategy;
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &ptscotch::graph::Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
 
 fn main() {
     let scale = common::bench_scale();
@@ -35,10 +45,8 @@ fn main() {
             "p", "O_PTS", "O_PM", "t_PTS", "t_PM"
         );
         for &p in &ps {
-            let pts = svc
-                .order(&g, Engine::PtScotch { p }, &strat)
-                .expect("pt-scotch");
-            let (opm, tpm) = match svc.order(&g, Engine::ParMetisLike { p }, &strat) {
+            let pts = order(&svc, &g, Engine::PtScotch { p }, &strat).expect("pt-scotch");
+            let (opm, tpm) = match order(&svc, &g, Engine::ParMetisLike { p }, &strat) {
                 Ok(r) => (common::sci(r.stats.opc), format!("{:.2}", r.wall_seconds)),
                 Err(_) => ("†".to_string(), "†".to_string()),
             };

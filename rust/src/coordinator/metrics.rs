@@ -1,14 +1,16 @@
-//! Reports and phase timers.
+//! Reports, service counters and phase timers.
 
 use crate::comm::Executor;
-use crate::order::{Ordering, SymbolicStats};
+use crate::order::SymbolicStats;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::time::Instant;
 
 /// Everything a bench or example needs to print one paper-style row.
-#[derive(Debug)]
+/// The permutation itself lives next door in
+/// [`crate::coordinator::OrderingResult`], which the service caches and
+/// `Deref`s to this report. `Clone` so cached results can be shared.
+#[derive(Clone, Debug)]
 pub struct OrderingReport {
-    /// The computed ordering.
-    pub ordering: Ordering,
     /// Symbolic-factorization quality (NNZ, OPC, fill, tree height).
     pub stats: SymbolicStats,
     /// The executor that drove (or, for the sequential engine, would
@@ -71,6 +73,78 @@ impl OrderingReport {
     }
 }
 
+/// Aggregate counters of the batch coordinator, updated atomically by
+/// concurrent jobs (DESIGN.md §6). Read them as a coherent
+/// [`ServiceSnapshot`] via [`ServiceMetrics::snapshot`].
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    /// Requests served straight from the fingerprint cache.
+    pub hits: AtomicU64,
+    /// Requests whose fingerprint was absent: they became (or joined)
+    /// a job. Every miss that *led* the job is counted here…
+    pub misses: AtomicU64,
+    /// …while in-batch duplicates that merely rode an already
+    /// scheduled job are counted here instead.
+    pub coalesced: AtomicU64,
+    /// Cache entries evicted by the LRU policy.
+    pub evictions: AtomicU64,
+    /// Full orderings actually executed on the rank pool — the number
+    /// the replay acceptance test pins to 1.
+    pub jobs_run: AtomicU64,
+    /// Jobs that returned an error (errors are never cached).
+    pub errors: AtomicU64,
+}
+
+impl ServiceMetrics {
+    /// Copy the counters into a plain snapshot.
+    pub fn snapshot(&self) -> ServiceSnapshot {
+        let ld = |c: &AtomicU64| c.load(AtomicOrdering::Relaxed);
+        ServiceSnapshot {
+            hits: ld(&self.hits),
+            misses: ld(&self.misses),
+            coalesced: ld(&self.coalesced),
+            evictions: ld(&self.evictions),
+            jobs_run: ld(&self.jobs_run),
+            errors: ld(&self.errors),
+        }
+    }
+}
+
+/// A point-in-time copy of [`ServiceMetrics`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceSnapshot {
+    /// Requests served from the cache.
+    pub hits: u64,
+    /// Requests that led a new job.
+    pub misses: u64,
+    /// Requests that joined an in-flight job.
+    pub coalesced: u64,
+    /// LRU evictions.
+    pub evictions: u64,
+    /// Full orderings executed.
+    pub jobs_run: u64,
+    /// Failed jobs.
+    pub errors: u64,
+}
+
+impl ServiceSnapshot {
+    /// Total requests seen.
+    pub fn requests(&self) -> u64 {
+        self.hits + self.misses + self.coalesced
+    }
+
+    /// Fraction of requests that did no ordering work of their own
+    /// (cache hits plus coalesced riders); 0 for an empty history.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.requests();
+        if total == 0 {
+            0.0
+        } else {
+            (self.hits + self.coalesced) as f64 / total as f64
+        }
+    }
+}
+
 /// A simple named phase timer for the §Perf profiles.
 pub struct PhaseTimer {
     t0: Instant,
@@ -118,7 +192,6 @@ mod tests {
     #[test]
     fn mem_stats_aggregate() {
         let r = OrderingReport {
-            ordering: Ordering::identity(1),
             stats: SymbolicStats {
                 nnz: 1,
                 opc: 1.0,
@@ -155,5 +228,19 @@ mod tests {
         t.lap("b");
         assert_eq!(t.phases.len(), 2);
         assert!(t.summary().contains("a="));
+    }
+
+    #[test]
+    fn service_metrics_snapshot_and_hit_rate() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.snapshot(), ServiceSnapshot::default());
+        assert_eq!(m.snapshot().hit_rate(), 0.0);
+        m.hits.fetch_add(3, AtomicOrdering::Relaxed);
+        m.misses.fetch_add(1, AtomicOrdering::Relaxed);
+        m.coalesced.fetch_add(1, AtomicOrdering::Relaxed);
+        m.jobs_run.fetch_add(1, AtomicOrdering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests(), 5);
+        assert!((s.hit_rate() - 0.8).abs() < 1e-12);
     }
 }

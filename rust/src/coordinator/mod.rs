@@ -4,24 +4,34 @@
 //! jobs — Python never runs at request time), picks the band refiner per
 //! strategy, launches the rank fleet on the selected executor
 //! (`executor=sim|threads`, DESIGN.md §3), and returns orderings
-//! with the paper's quality metrics and per-rank telemetry. The CLI
+//! with the paper's quality metrics and per-rank telemetry. Work is
+//! described by an [`OrderingRequest`] (graph + strategy + engine + tag)
+//! and answered with an [`OrderingResult`] bundling the permutation, the
+//! solver-facing [`BlockOrdering`] and the [`OrderingReport`]. The
+//! [`service`] module stacks the batch driver with its
+//! graph-fingerprint cache on top (DESIGN.md §6). The CLI
 //! (`rust/src/main.rs`), examples and all benches go through this API.
 
 pub mod metrics;
+pub mod service;
 
-pub use metrics::{OrderingReport, PhaseTimer};
+pub use metrics::{OrderingReport, PhaseTimer, ServiceMetrics, ServiceSnapshot};
+pub use service::{BatchCoordinator, RequestReport, Served, ServiceConfig};
 
 use crate::baseline::parmetis_like_order;
 use crate::comm;
 use crate::dist::parallel_order;
 use crate::graph::Graph;
-use crate::order::{nested_dissection, symbolic_cholesky, Ordering};
+use crate::order::{
+    block_ordering, nested_dissection, symbolic_cholesky, BlockOrdering, Ordering,
+};
 use crate::rng::Rng;
 use crate::runtime::{load_shared, DiffusionRefiner, SharedRuntime};
 use crate::sep::diffusion::CpuDiffusionRefiner;
 use crate::sep::{BandRefiner, FmRefiner};
 use crate::strategy::{BandEngine, RefinerKind, Strategy};
 use crate::{Error, Result};
+use std::ops::Deref;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
@@ -35,6 +45,155 @@ pub enum Engine {
     PtScotch { p: usize },
     /// ParMETIS-like baseline on `p` simulated ranks (power of two).
     ParMetisLike { p: usize },
+}
+
+impl Engine {
+    /// `(discriminant, process count)` — the engine's contribution to
+    /// the request fingerprint.
+    fn fingerprint_words(self) -> (u64, u64) {
+        match self {
+            Engine::Sequential => (0, 1),
+            Engine::PtScotch { p } => (1, p as u64),
+            Engine::ParMetisLike { p } => (2, p as u64),
+        }
+    }
+}
+
+/// One unit of work for the service: *which graph*, ordered *how*, *on
+/// what engine*. Built fluently:
+///
+/// ```
+/// use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
+/// use ptscotch::graph::generators;
+///
+/// let g = generators::grid2d(12, 12);
+/// let req = OrderingRequest::new(&g)
+///     .parse_strategy("seed=7,executor=sim")?
+///     .engine(Engine::PtScotch { p: 4 })
+///     .tag("demo");
+/// let res = OrderingService::new_cpu_only().run(&req)?;
+/// assert_eq!(res.ordering.n(), 144);
+/// res.blocks.validate(144)?;
+/// # Ok::<(), ptscotch::Error>(())
+/// ```
+///
+/// The graph is held behind an [`Arc`] so queued and coalesced jobs
+/// share one CSR; [`OrderingRequest::fingerprint`] is the cache key the
+/// batch coordinator dedupes on (DESIGN.md §6).
+#[derive(Clone, Debug)]
+pub struct OrderingRequest {
+    /// The graph to order (shared, never copied per job).
+    pub graph: Arc<Graph>,
+    /// The ordering strategy; its canonical `Display` form enters the
+    /// fingerprint, so equal-valued strategies dedupe.
+    pub strategy: Strategy,
+    /// The engine (and its process count).
+    pub engine: Engine,
+    /// Free-form client label, carried through to the per-request
+    /// [`RequestReport`]; never part of the fingerprint.
+    pub tag: String,
+}
+
+impl OrderingRequest {
+    /// Start a request for `graph` (cloned once into shared ownership)
+    /// with the default strategy on the sequential engine.
+    pub fn new(graph: &Graph) -> OrderingRequest {
+        OrderingRequest::from_arc(Arc::new(graph.clone()))
+    }
+
+    /// Start a request for an already-shared graph without copying it.
+    pub fn from_arc(graph: Arc<Graph>) -> OrderingRequest {
+        OrderingRequest {
+            graph,
+            strategy: Strategy::default(),
+            engine: Engine::Sequential,
+            tag: String::new(),
+        }
+    }
+
+    /// Use this strategy.
+    pub fn strategy(mut self, strategy: Strategy) -> OrderingRequest {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Parse and use this `key=value,…` strategy spec.
+    pub fn parse_strategy(mut self, spec: &str) -> Result<OrderingRequest> {
+        self.strategy = Strategy::parse(spec)?;
+        Ok(self)
+    }
+
+    /// Run on this engine.
+    pub fn engine(mut self, engine: Engine) -> OrderingRequest {
+        self.engine = engine;
+        self
+    }
+
+    /// Attach a client label.
+    pub fn tag(mut self, tag: impl Into<String>) -> OrderingRequest {
+        self.tag = tag.into();
+        self
+    }
+
+    /// Content fingerprint of the request: a 128-bit FNV-1a over the
+    /// graph CSR arrays, the canonical strategy string and the engine
+    /// discriminant + process count. Two requests with equal
+    /// fingerprints describe the same computation, so the service may
+    /// serve one's cached result for the other (DESIGN.md §6).
+    pub fn fingerprint(&self) -> u128 {
+        const OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+        const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+        let mut h = OFFSET;
+        let mut mix = |w: u64| {
+            h = (h ^ w as u128).wrapping_mul(PRIME);
+        };
+        let g = &self.graph;
+        mix(g.n() as u64);
+        for &x in &g.xadj {
+            mix(x as u64);
+        }
+        for &a in &g.adj {
+            mix(a as u64);
+        }
+        for &w in &g.vwgt {
+            mix(w as u64);
+        }
+        for &w in &g.ewgt {
+            mix(w as u64);
+        }
+        let canon = self.strategy.to_string();
+        mix(canon.len() as u64);
+        for b in canon.bytes() {
+            mix(b as u64);
+        }
+        let (kind, p) = self.engine.fingerprint_words();
+        mix(kind);
+        mix(p);
+        h
+    }
+}
+
+/// The unified answer to an [`OrderingRequest`]: the permutation, the
+/// solver-facing block structure, and the quality/telemetry report.
+/// `Deref`s to [`OrderingReport`] so report fields read directly
+/// (`res.stats`, `res.wall_seconds`, …).
+#[derive(Clone, Debug)]
+pub struct OrderingResult {
+    /// The computed ordering (`perm`/`iperm`).
+    pub ordering: Ordering,
+    /// Supernode column ranges + block forest, the Tacho-facing
+    /// contract ([`BlockOrdering`]).
+    pub blocks: BlockOrdering,
+    /// Quality metrics and fleet telemetry.
+    pub report: OrderingReport,
+}
+
+impl Deref for OrderingResult {
+    type Target = OrderingReport;
+
+    fn deref(&self) -> &OrderingReport {
+        &self.report
+    }
 }
 
 /// The ordering service: reusable across jobs.
@@ -86,18 +245,22 @@ impl OrderingService {
         }
     }
 
-    /// Order `g` with the selected engine and strategy; returns the
-    /// ordering plus the full quality/telemetry report. The rank fleet
-    /// of the distributed engines runs on the executor named by the
+    /// Execute one [`OrderingRequest`] to completion — the unified
+    /// entry point behind the CLI, examples, benches and the batch
+    /// coordinator. Returns the permutation, the solver-facing block
+    /// structure and the quality/telemetry report. The rank fleet of
+    /// the distributed engines runs on the executor named by the
     /// `executor=` strategy knob, falling back to `PTSCOTCH_EXECUTOR`
     /// and then to the serialized simulator (DESIGN.md §3).
-    pub fn order(&self, g: &Graph, engine: Engine, strat: &Strategy) -> Result<OrderingReport> {
+    pub fn run(&self, req: &OrderingRequest) -> Result<OrderingResult> {
+        let g: &Graph = &req.graph;
+        let strat = &req.strategy;
         strat.validate()?;
         g.validate()?;
         let exec = strat.dist.executor.unwrap_or_else(comm::Executor::from_env);
         let t0 = Instant::now();
         type Telemetry = (Ordering, Vec<i64>, comm::StatsSnapshot);
-        let (ordering, peak_mem, fleet): Telemetry = match engine {
+        let (ordering, peak_mem, fleet): Telemetry = match req.engine {
             Engine::Sequential => {
                 let refiner = self.refiner(strat)?;
                 let mut rng = Rng::new(strat.seed);
@@ -111,7 +274,7 @@ impl OrderingService {
                 (o, vec![g.footprint_bytes() as i64], fleet)
             }
             Engine::PtScotch { p } => {
-                let ga = Arc::new(g.clone());
+                let ga = Arc::clone(&req.graph);
                 let strat2 = strat.clone();
                 let service_refiner: Arc<dyn BandRefiner + Send + Sync> =
                     Arc::from(self.refiner(strat)?);
@@ -141,7 +304,7 @@ impl OrderingService {
                 if !p.is_power_of_two() {
                     return Err(Error::NonPowerOfTwo(p));
                 }
-                let ga = Arc::new(g.clone());
+                let ga = Arc::clone(&req.graph);
                 let strat2 = strat.clone();
                 let (res, stats) = comm::run_on(exec, p, move |c| {
                     let r = parmetis_like_order(&c, &ga, &strat2)?;
@@ -160,17 +323,29 @@ impl OrderingService {
         let wall = t0.elapsed();
         ordering.validate()?;
         let stats = symbolic_cholesky(g, &ordering);
-        Ok(OrderingReport {
+        let blocks = block_ordering(g, &ordering);
+        debug_assert!(blocks.validate(g.n()).is_ok());
+        Ok(OrderingResult {
             ordering,
-            stats,
-            executor: exec,
-            wall_seconds: wall.as_secs_f64(),
-            peak_mem_per_rank: peak_mem,
-            bytes_sent_per_rank: fleet.bytes_sent,
-            msgs_sent_per_rank: fleet.msgs_sent,
-            wall_ns_per_rank: fleet.wall_ns,
-            blocked_ns_per_rank: fleet.blocked_ns,
+            blocks,
+            report: OrderingReport {
+                stats,
+                executor: exec,
+                wall_seconds: wall.as_secs_f64(),
+                peak_mem_per_rank: peak_mem,
+                bytes_sent_per_rank: fleet.bytes_sent,
+                msgs_sent_per_rank: fleet.msgs_sent,
+                wall_ns_per_rank: fleet.wall_ns,
+                blocked_ns_per_rank: fleet.blocked_ns,
+            },
         })
+    }
+
+    /// One-shot positional entry point, superseded by the
+    /// [`OrderingRequest`] builder + [`OrderingService::run`].
+    #[deprecated(since = "0.1.0", note = "build an OrderingRequest and call run()")]
+    pub fn order(&self, g: &Graph, engine: Engine, strat: &Strategy) -> Result<OrderingResult> {
+        self.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
     }
 }
 
@@ -183,25 +358,25 @@ mod tests {
     fn sequential_engine_reports_quality() {
         let g = generators::grid2d(16, 16);
         let svc = OrderingService::new_cpu_only();
-        let rep = svc
-            .order(&g, Engine::Sequential, &Strategy::default())
-            .unwrap();
-        rep.ordering.validate().unwrap();
-        assert!(rep.stats.opc > 0.0);
-        assert!(rep.stats.nnz >= g.n() as u64);
-        assert!(rep.wall_seconds >= 0.0);
+        let res = svc.run(&OrderingRequest::new(&g)).unwrap();
+        res.ordering.validate().unwrap();
+        res.blocks.validate(g.n()).unwrap();
+        assert!(res.stats.opc > 0.0);
+        assert!(res.stats.nnz >= g.n() as u64);
+        assert!(res.wall_seconds >= 0.0);
     }
 
     #[test]
     fn ptscotch_engine_multirank() {
         let g = generators::grid2d(18, 18);
         let svc = OrderingService::new_cpu_only();
-        let rep = svc
-            .order(&g, Engine::PtScotch { p: 4 }, &Strategy::default())
+        let res = svc
+            .run(&OrderingRequest::new(&g).engine(Engine::PtScotch { p: 4 }))
             .unwrap();
-        rep.ordering.validate().unwrap();
-        assert_eq!(rep.peak_mem_per_rank.len(), 4);
-        assert!(rep.bytes_sent_per_rank.iter().sum::<u64>() > 0);
+        res.ordering.validate().unwrap();
+        res.blocks.validate(g.n()).unwrap();
+        assert_eq!(res.peak_mem_per_rank.len(), 4);
+        assert!(res.bytes_sent_per_rank.iter().sum::<u64>() > 0);
     }
 
     #[test]
@@ -209,14 +384,20 @@ mod tests {
         let g = generators::grid2d(14, 14);
         let svc = OrderingService::new_cpu_only();
         let run = |spec: &str| {
-            svc.order(&g, Engine::PtScotch { p: 3 }, &Strategy::parse(spec).unwrap())
-                .unwrap()
+            svc.run(
+                &OrderingRequest::new(&g)
+                    .parse_strategy(spec)
+                    .unwrap()
+                    .engine(Engine::PtScotch { p: 3 }),
+            )
+            .unwrap()
         };
         let sim = run("executor=sim,seed=7");
         let thr = run("executor=threads,seed=7");
         assert_eq!(sim.executor, crate::comm::Executor::Sim);
         assert_eq!(thr.executor, crate::comm::Executor::Threads);
         assert_eq!(sim.ordering.iperm, thr.ordering.iperm);
+        assert_eq!(sim.blocks, thr.blocks);
         assert_eq!(sim.bytes_sent_per_rank, thr.bytes_sent_per_rank);
         assert_eq!(sim.msgs_sent_per_rank, thr.msgs_sent_per_rank);
         // The fleet's per-rank wallclock columns exist for both.
@@ -230,7 +411,7 @@ mod tests {
         let g = generators::grid2d(10, 10);
         let svc = OrderingService::new_cpu_only();
         let err = svc
-            .order(&g, Engine::ParMetisLike { p: 6 }, &Strategy::default())
+            .run(&OrderingRequest::new(&g).engine(Engine::ParMetisLike { p: 6 }))
             .unwrap_err();
         assert!(matches!(err, Error::NonPowerOfTwo(6)));
     }
@@ -239,8 +420,8 @@ mod tests {
     fn xla_strategy_without_artifacts_errors() {
         let g = generators::grid2d(8, 8);
         let svc = OrderingService::new_cpu_only();
-        let strat = Strategy::parse("refiner=xla").unwrap();
-        let err = svc.order(&g, Engine::Sequential, &strat).unwrap_err();
+        let req = OrderingRequest::new(&g).parse_strategy("refiner=xla").unwrap();
+        let err = svc.run(&req).unwrap_err();
         assert!(matches!(err, Error::NoArtifact(_)));
     }
 
@@ -248,8 +429,44 @@ mod tests {
     fn cpu_diffusion_strategy_works() {
         let g = generators::grid2d(14, 14);
         let svc = OrderingService::new_cpu_only();
-        let strat = Strategy::parse("refiner=diffcpu").unwrap();
-        let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
-        rep.ordering.validate().unwrap();
+        let req = OrderingRequest::new(&g).parse_strategy("refiner=diffcpu").unwrap();
+        let res = svc.run(&req).unwrap();
+        res.ordering.validate().unwrap();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_order_shim_matches_run() {
+        let g = generators::grid2d(12, 12);
+        let svc = OrderingService::new_cpu_only();
+        let strat = Strategy::parse("seed=5").unwrap();
+        let old = svc.order(&g, Engine::Sequential, &strat).unwrap();
+        let new = svc.run(&OrderingRequest::new(&g).strategy(strat)).unwrap();
+        assert_eq!(old.ordering, new.ordering);
+        assert_eq!(old.blocks, new.blocks);
+    }
+
+    #[test]
+    fn fingerprint_separates_graph_strategy_and_engine() {
+        let g = generators::grid2d(10, 10);
+        let base = OrderingRequest::new(&g);
+        let fp = base.fingerprint();
+        // Equal content — even via an independent clone of the graph —
+        // fingerprints equal; the tag never participates.
+        assert_eq!(OrderingRequest::new(&g).fingerprint(), fp);
+        assert_eq!(base.clone().tag("other").fingerprint(), fp);
+        // Any content change separates.
+        assert_ne!(base.clone().parse_strategy("seed=8").unwrap().fingerprint(), fp);
+        assert_ne!(base.clone().engine(Engine::PtScotch { p: 2 }).fingerprint(), fp);
+        assert_ne!(
+            base.clone().engine(Engine::PtScotch { p: 4 }).fingerprint(),
+            base.clone().engine(Engine::ParMetisLike { p: 4 }).fingerprint()
+        );
+        assert_ne!(OrderingRequest::new(&generators::grid2d(10, 11)).fingerprint(), fp);
+        // Equal-valued strategies built differently dedupe through the
+        // canonical form.
+        let a = base.clone().parse_strategy("seed=1,band=3").unwrap();
+        let b = base.parse_strategy("band=3,seed=1").unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
     }
 }

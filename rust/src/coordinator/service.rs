@@ -1,0 +1,451 @@
+//! Ordering-as-a-service: the batch coordinator (DESIGN.md §6).
+//!
+//! [`BatchCoordinator`] turns the one-shot [`OrderingService`] into a
+//! service: it accepts a queue of [`OrderingRequest`]s, dedupes them by
+//! content fingerprint (graph CSR bytes + canonical strategy + engine/p,
+//! [`OrderingRequest::fingerprint`]), serves repeats from an LRU cache
+//! with **bit-identical** results and zero rank work, and schedules the
+//! remaining misses as concurrent jobs over a shared pool of worker
+//! threads (each job launching its own rank fleet through
+//! [`OrderingService::run`]). This is the production shape for the
+//! same-mesh-ordered-again-and-again workload: one full ordering, then
+//! cache hits — the multi-client analogue of the multi-sequential
+//! selection the band refinement already uses per separator.
+//!
+//! Determinism makes the cache sound: a request's result is a pure
+//! function of its fingerprint (same seed → same permutation on every
+//! executor, DESIGN.md §3), so replaying a cached
+//! [`OrderingResult`] is indistinguishable from recomputing it.
+
+use super::metrics::{ServiceMetrics, ServiceSnapshot};
+use super::{OrderingRequest, OrderingResult, OrderingService};
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+/// Tuning knobs of the batch coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Maximum cached results; the least-recently-used entry is
+    /// evicted beyond this. `0` disables the cache entirely (requests
+    /// still coalesce within a batch).
+    pub cache_capacity: usize,
+    /// Maximum ordering jobs in flight at once. Each job runs its own
+    /// rank fleet, so this bounds total thread pressure per batch.
+    pub max_in_flight: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            cache_capacity: 64,
+            max_in_flight: 4,
+        }
+    }
+}
+
+/// How one request was satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Served {
+    /// Straight from the fingerprint cache: zero rank work.
+    Hit,
+    /// Led a new ordering job on the rank pool.
+    Miss,
+    /// Joined an identical job already scheduled in the same batch.
+    Coalesced,
+}
+
+/// The service-side story of one request: how it was served, how long
+/// it queued and ran, and the (shared) result. The `result` of every
+/// member of one coalesced job is the same [`Arc`]; a cache hit's is
+/// the `Arc` stored at insert time — bit-identical by construction.
+#[derive(Clone, Debug)]
+pub struct RequestReport {
+    /// The client label from [`OrderingRequest::tag`].
+    pub tag: String,
+    /// The request's content fingerprint (the cache key).
+    pub fingerprint: u128,
+    /// Hit, miss, or coalesced.
+    pub served: Served,
+    /// Seconds between batch submission and this request's job being
+    /// picked up by a worker (cache decision time for hits).
+    pub queue_seconds: f64,
+    /// Seconds the job ran (0 for cache hits; for coalesced riders,
+    /// the led job's run time — the wait they actually experienced).
+    pub run_seconds: f64,
+    /// The ordering, block structure and report — or the job's error,
+    /// replicated to every coalesced rider (errors are never cached).
+    pub result: Result<Arc<OrderingResult>>,
+}
+
+/// LRU fingerprint store. Stamp-based: `get`/`insert` advance a clock
+/// and eviction removes the smallest stamp — an O(capacity) scan, which
+/// is negligible next to even one leaf ordering.
+struct Cache {
+    capacity: usize,
+    clock: u64,
+    entries: HashMap<u128, (u64, Arc<OrderingResult>)>,
+}
+
+impl Cache {
+    fn new(capacity: usize) -> Cache {
+        Cache {
+            capacity,
+            clock: 0,
+            entries: HashMap::new(),
+        }
+    }
+
+    fn get(&mut self, fp: u128) -> Option<Arc<OrderingResult>> {
+        self.clock += 1;
+        let clock = self.clock;
+        self.entries.get_mut(&fp).map(|e| {
+            e.0 = clock;
+            Arc::clone(&e.1)
+        })
+    }
+
+    /// Insert and evict down to capacity; returns how many entries
+    /// were evicted.
+    fn insert(&mut self, fp: u128, res: Arc<OrderingResult>) -> u64 {
+        if self.capacity == 0 {
+            return 0;
+        }
+        self.clock += 1;
+        self.entries.insert(fp, (self.clock, res));
+        let mut evicted = 0;
+        while self.entries.len() > self.capacity {
+            let oldest = *self
+                .entries
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| k)
+                .expect("over-capacity cache is non-empty");
+            self.entries.remove(&oldest);
+            evicted += 1;
+        }
+        evicted
+    }
+}
+
+/// One scheduled ordering job and the batch slots riding on it.
+struct Job {
+    fingerprint: u128,
+    request: OrderingRequest,
+    /// `(batch slot, tag, served)` of the leader and every coalesced
+    /// rider — all receive clones of the same `Arc`'d outcome.
+    members: Vec<(usize, String, Served)>,
+}
+
+/// `(outcome, queue seconds, run seconds)` of one executed job.
+type JobOutcome = (Result<Arc<OrderingResult>>, f64, f64);
+
+/// The batch driver: a fingerprint cache and a bounded worker pool in
+/// front of an [`OrderingService`].
+///
+/// ```
+/// use ptscotch::coordinator::{BatchCoordinator, OrderingRequest, OrderingService, Served};
+/// use ptscotch::graph::generators;
+///
+/// let coord = BatchCoordinator::new(OrderingService::new_cpu_only());
+/// let g = generators::grid2d(10, 10);
+/// let batch = vec![
+///     OrderingRequest::new(&g).tag("cold"),
+///     OrderingRequest::new(&g).tag("dup"),
+/// ];
+/// let replies = coord.submit(batch);
+/// assert_eq!(replies[0].served, Served::Miss);
+/// assert_eq!(replies[1].served, Served::Coalesced); // same fingerprint
+/// // A later batch with the same request hits the cache.
+/// let warm = coord.submit(vec![OrderingRequest::new(&g).tag("warm")]);
+/// assert_eq!(warm[0].served, Served::Hit);
+/// assert_eq!(coord.metrics().jobs_run, 1); // one full ordering total
+/// ```
+pub struct BatchCoordinator {
+    service: OrderingService,
+    config: ServiceConfig,
+    cache: Mutex<Cache>,
+    metrics: ServiceMetrics,
+}
+
+impl BatchCoordinator {
+    /// Wrap `service` with the default cache/concurrency configuration.
+    pub fn new(service: OrderingService) -> BatchCoordinator {
+        BatchCoordinator::with_config(service, ServiceConfig::default())
+    }
+
+    /// Wrap `service` with an explicit configuration.
+    pub fn with_config(service: OrderingService, config: ServiceConfig) -> BatchCoordinator {
+        BatchCoordinator {
+            service,
+            config,
+            cache: Mutex::new(Cache::new(config.cache_capacity)),
+            metrics: ServiceMetrics::default(),
+        }
+    }
+
+    /// The wrapped one-shot service.
+    pub fn service(&self) -> &OrderingService {
+        &self.service
+    }
+
+    /// The configuration this coordinator runs with.
+    pub fn config(&self) -> ServiceConfig {
+        self.config
+    }
+
+    /// A snapshot of the lifetime hit/miss/job counters.
+    pub fn metrics(&self) -> ServiceSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Serve one request through the cache (a batch of one).
+    pub fn request(&self, req: OrderingRequest) -> RequestReport {
+        self.submit(vec![req])
+            .pop()
+            .expect("one reply per request")
+    }
+
+    /// Serve a batch: fingerprint every request, answer repeats from
+    /// the cache, coalesce in-batch duplicates onto one job, and run
+    /// the remaining jobs concurrently (at most
+    /// [`ServiceConfig::max_in_flight`] at a time). Replies come back
+    /// in request order, one per request, errors included — a bad
+    /// request never poisons its batch.
+    pub fn submit(&self, requests: Vec<OrderingRequest>) -> Vec<RequestReport> {
+        let t_batch = Instant::now();
+        let n = requests.len();
+        let mut reports: Vec<Option<RequestReport>> = (0..n).map(|_| None).collect();
+        let mut jobs: Vec<Job> = Vec::new();
+        {
+            // Admission, under one cache lock: hits answered on the
+            // spot, the rest planned into deduplicated jobs.
+            let mut job_of: HashMap<u128, usize> = HashMap::new();
+            let mut cache = self.cache.lock().expect("cache lock");
+            for (slot, req) in requests.into_iter().enumerate() {
+                let fp = req.fingerprint();
+                if let Some(cached) = cache.get(fp) {
+                    self.metrics.hits.fetch_add(1, AtomicOrdering::Relaxed);
+                    reports[slot] = Some(RequestReport {
+                        tag: req.tag,
+                        fingerprint: fp,
+                        served: Served::Hit,
+                        queue_seconds: t_batch.elapsed().as_secs_f64(),
+                        run_seconds: 0.0,
+                        result: Ok(cached),
+                    });
+                    continue;
+                }
+                match job_of.get(&fp) {
+                    Some(&j) => {
+                        self.metrics.coalesced.fetch_add(1, AtomicOrdering::Relaxed);
+                        jobs[j].members.push((slot, req.tag, Served::Coalesced));
+                    }
+                    None => {
+                        self.metrics.misses.fetch_add(1, AtomicOrdering::Relaxed);
+                        job_of.insert(fp, jobs.len());
+                        let tag = req.tag.clone();
+                        jobs.push(Job {
+                            fingerprint: fp,
+                            request: req,
+                            members: vec![(slot, tag, Served::Miss)],
+                        });
+                    }
+                }
+            }
+        }
+
+        // Execution: a bounded pool of workers drains the job list.
+        let outcomes: Vec<Mutex<Option<JobOutcome>>> =
+            jobs.iter().map(|_| Mutex::new(None)).collect();
+        if !jobs.is_empty() {
+            let next = AtomicUsize::new(0);
+            let workers = self.config.max_in_flight.max(1).min(jobs.len());
+            thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| loop {
+                        let j = next.fetch_add(1, AtomicOrdering::Relaxed);
+                        if j >= jobs.len() {
+                            break;
+                        }
+                        let job = &jobs[j];
+                        let queue_seconds = t_batch.elapsed().as_secs_f64();
+                        let t_run = Instant::now();
+                        let outcome = self.service.run(&job.request).map(Arc::new);
+                        let run_seconds = t_run.elapsed().as_secs_f64();
+                        self.metrics.jobs_run.fetch_add(1, AtomicOrdering::Relaxed);
+                        match &outcome {
+                            Ok(res) => {
+                                let evicted = self
+                                    .cache
+                                    .lock()
+                                    .expect("cache lock")
+                                    .insert(job.fingerprint, Arc::clone(res));
+                                self.metrics
+                                    .evictions
+                                    .fetch_add(evicted, AtomicOrdering::Relaxed);
+                            }
+                            Err(_) => {
+                                self.metrics.errors.fetch_add(1, AtomicOrdering::Relaxed);
+                            }
+                        }
+                        *outcomes[j].lock().expect("outcome slot") =
+                            Some((outcome, queue_seconds, run_seconds));
+                    });
+                }
+            });
+        }
+
+        // Reply assembly, in request order.
+        for (job, slot) in jobs.into_iter().zip(outcomes) {
+            let (outcome, queue_seconds, run_seconds) = slot
+                .into_inner()
+                .expect("outcome slot")
+                .expect("every job ran");
+            for (idx, tag, served) in job.members {
+                reports[idx] = Some(RequestReport {
+                    tag,
+                    fingerprint: job.fingerprint,
+                    served,
+                    queue_seconds,
+                    run_seconds,
+                    result: outcome.clone(),
+                });
+            }
+        }
+        reports
+            .into_iter()
+            .map(|r| r.expect("every slot answered"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Engine;
+    use crate::graph::generators;
+
+    fn coord(capacity: usize) -> BatchCoordinator {
+        BatchCoordinator::with_config(
+            OrderingService::new_cpu_only(),
+            ServiceConfig {
+                cache_capacity: capacity,
+                max_in_flight: 3,
+            },
+        )
+    }
+
+    #[test]
+    fn replayed_batch_runs_exactly_one_job() {
+        let c = coord(16);
+        let g = generators::grid2d(12, 12);
+        let batch: Vec<_> = (0..5)
+            .map(|i| OrderingRequest::new(&g).tag(format!("r{i}")))
+            .collect();
+        let replies = c.submit(batch);
+        assert_eq!(replies.len(), 5);
+        assert_eq!(replies[0].served, Served::Miss);
+        for r in &replies[1..] {
+            assert_eq!(r.served, Served::Coalesced);
+        }
+        // Later batches hit the cache instead.
+        let warm = c.submit(vec![OrderingRequest::new(&g).tag("again")]);
+        assert_eq!(warm[0].served, Served::Hit);
+        let m = c.metrics();
+        assert_eq!(m.jobs_run, 1);
+        assert_eq!((m.hits, m.misses, m.coalesced), (1, 1, 4));
+        assert!((m.hit_rate() - 5.0 / 6.0).abs() < 1e-12);
+        // Everyone shares the same result allocation.
+        let first = replies[0].result.as_ref().unwrap();
+        for r in replies[1..].iter().chain(warm.iter()) {
+            assert!(Arc::ptr_eq(first, r.result.as_ref().unwrap()));
+        }
+    }
+
+    #[test]
+    fn distinct_requests_each_run() {
+        let c = coord(16);
+        let g1 = generators::grid2d(10, 10);
+        let g2 = generators::grid2d(11, 10);
+        let replies = c.submit(vec![
+            OrderingRequest::new(&g1),
+            OrderingRequest::new(&g2),
+            OrderingRequest::new(&g1).parse_strategy("seed=9").unwrap(),
+            OrderingRequest::new(&g1).engine(Engine::PtScotch { p: 2 }),
+        ]);
+        assert!(replies.iter().all(|r| r.served == Served::Miss));
+        assert_eq!(c.metrics().jobs_run, 4);
+        // All four fingerprints are distinct.
+        let mut fps: Vec<u128> = replies.iter().map(|r| r.fingerprint).collect();
+        fps.sort_unstable();
+        fps.dedup();
+        assert_eq!(fps.len(), 4);
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_entry() {
+        let c = coord(2);
+        let graphs = [
+            generators::grid2d(8, 8),
+            generators::grid2d(9, 8),
+            generators::grid2d(10, 8),
+        ];
+        for g in &graphs {
+            c.submit(vec![OrderingRequest::new(g)]);
+        }
+        // Capacity 2: the first graph was evicted when the third landed.
+        assert_eq!(c.metrics().evictions, 1);
+        c.submit(vec![OrderingRequest::new(&graphs[2])]); // still cached
+        c.submit(vec![OrderingRequest::new(&graphs[0])]); // evicted: re-runs
+        let m = c.metrics();
+        assert_eq!(m.hits, 1);
+        assert_eq!(m.jobs_run, 4);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching_but_not_coalescing() {
+        let c = coord(0);
+        let g = generators::grid2d(9, 9);
+        let replies = c.submit(vec![OrderingRequest::new(&g), OrderingRequest::new(&g)]);
+        assert_eq!(replies[1].served, Served::Coalesced);
+        let again = c.request(OrderingRequest::new(&g));
+        assert_eq!(again.served, Served::Miss);
+        assert_eq!(c.metrics().jobs_run, 2);
+    }
+
+    #[test]
+    fn errors_propagate_to_riders_and_are_not_cached() {
+        let c = coord(16);
+        let g = generators::grid2d(8, 8);
+        let bad = |tag: &str| {
+            OrderingRequest::new(&g)
+                .parse_strategy("refiner=xla")
+                .unwrap()
+                .tag(tag)
+        };
+        let replies = c.submit(vec![bad("a"), bad("b")]);
+        for r in &replies {
+            assert!(matches!(
+                r.result.as_ref().unwrap_err(),
+                crate::Error::NoArtifact(_)
+            ));
+        }
+        // The failure was not cached: a retry runs (and fails) again.
+        let retry = c.request(bad("c"));
+        assert_eq!(retry.served, Served::Miss);
+        let m = c.metrics();
+        assert_eq!(m.errors, 2);
+        assert_eq!(m.hits, 0);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let c = coord(4);
+        assert!(c.submit(Vec::new()).is_empty());
+        assert_eq!(c.metrics(), ServiceSnapshot::default());
+    }
+}

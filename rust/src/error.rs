@@ -3,7 +3,10 @@
 use std::fmt;
 
 /// Errors produced by the ptscotch library.
-#[derive(Debug)]
+///
+/// `Clone` so the batch coordinator can hand one failed job's error to
+/// every request coalesced onto that job (DESIGN.md §6).
+#[derive(Clone, Debug)]
 pub enum Error {
     /// Malformed graph structure (asymmetric adjacency, out-of-range ids…).
     InvalidGraph(String),

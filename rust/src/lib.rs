@@ -29,8 +29,9 @@
 //! * an **XLA/PJRT runtime** that executes the AOT-compiled JAX/Pallas
 //!   band-diffusion and min-plus kernels from the Rust hot path
 //!   ([`runtime`]);
-//! * a **coordinator** exposing the whole system behind one strategy-driven
-//!   API and CLI ([`coordinator`]).
+//! * a **coordinator** exposing the whole system behind one
+//!   request/result API and CLI, with a batch service that dedupes
+//!   repeated requests by graph fingerprint ([`coordinator`]).
 //!
 //! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
 //! reproduced tables and figures.
@@ -38,21 +39,21 @@
 //! # Quickstart
 //!
 //! Order a sparse-matrix graph with parallel nested dissection on two
-//! emulated ranks and read off the paper's quality metrics:
+//! emulated ranks and read off the paper's quality metrics plus the
+//! solver-facing block structure:
 //!
 //! ```
-//! use ptscotch::coordinator::{Engine, OrderingService};
+//! use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
 //! use ptscotch::graph::generators;
-//! use ptscotch::strategy::Strategy;
 //!
 //! let g = generators::grid2d(12, 12); // a 144-unknown 5-point mesh
 //! let svc = OrderingService::new_cpu_only();
-//! let rep = svc
-//!     .order(&g, Engine::PtScotch { p: 2 }, &Strategy::default())
-//!     .expect("ordering succeeds");
-//! rep.ordering.validate().expect("valid permutation");
-//! assert!(rep.stats.opc > 0.0); // operation count of the factorization
-//! assert!(rep.stats.nnz >= g.n() as u64); // fill-in of the L factor
+//! let req = OrderingRequest::new(&g).engine(Engine::PtScotch { p: 2 });
+//! let res = svc.run(&req).expect("ordering succeeds");
+//! res.ordering.validate().expect("valid permutation");
+//! res.blocks.validate(g.n()).expect("postordered block forest");
+//! assert!(res.stats.opc > 0.0); // operation count of the factorization
+//! assert!(res.stats.nnz >= g.n() as u64); // fill-in of the L factor
 //! ```
 
 #![deny(missing_docs)]

@@ -4,18 +4,29 @@
 //! ptscotch order  --graph grid2d:64x64      -p 8 --engine pts [--strategy band=3,...]
 //! ptscotch order  --graph file:matrix.mtx   --engine seq
 //! ptscotch suite  --scale 1 -p 2,4,8        # Table-2/3-style sweep
+//! ptscotch batch  --requests reqs.txt [--repeat 2] [--cache 64] [--jobs 4]
 //! ptscotch info                             # artifact / runtime status
 //! ```
 //!
 //! Graph specs: `grid2d:NxM`, `grid3d:NxMxK`, `grid3d27:NxMxK`,
 //! `audikw:NxMxK`, `cage:N`, `qimonda:N`, `thread:N`, `file:PATH`.
+//!
+//! `batch` (alias `serve`) replays a request file through the
+//! [`BatchCoordinator`]: one request per line,
+//! `graph=<spec> [strategy=k=v;k=v] [engine=seq|pts|pm] [p=N] [tag=T]`,
+//! `#` starts a comment. Repeated identical requests are served from
+//! the fingerprint cache (DESIGN.md §6).
 
-use ptscotch::coordinator::{Engine, OrderingService};
+use ptscotch::coordinator::{
+    BatchCoordinator, Engine, OrderingRequest, OrderingService, Served, ServiceConfig,
+};
 use ptscotch::graph::{generators, io, Graph};
 use ptscotch::runtime::XlaRuntime;
 use ptscotch::strategy::Strategy;
+use std::collections::HashMap;
 use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn parse_graph(spec: &str) -> Result<Graph, String> {
     let (kind, arg) = spec.split_once(':').unwrap_or((spec, ""));
@@ -100,19 +111,22 @@ fn cmd_order(args: &[String]) -> Result<(), String> {
         g.avg_degree(),
         svc.has_xla()
     );
-    let rep = svc.order(&g, engine, &strat).map_err(|e| e.to_string())?;
-    let (mn, avg, mx) = rep.mem_min_avg_max();
+    let req = OrderingRequest::new(&g).strategy(strat).engine(engine);
+    let res = svc.run(&req).map_err(|e| e.to_string())?;
+    let (mn, avg, mx) = res.mem_min_avg_max();
     println!(
-        "OPC={:.3e} NNZ={} fill={:.2} height={} time={:.2}s mem(min/avg/max)={}/{:.0}/{} B comm={} B",
-        rep.stats.opc,
-        rep.stats.nnz,
-        rep.stats.fill_ratio,
-        rep.stats.tree_height,
-        rep.wall_seconds,
+        "OPC={:.3e} NNZ={} fill={:.2} height={} cblk={} time={:.2}s \
+         mem(min/avg/max)={}/{:.0}/{} B comm={} B",
+        res.stats.opc,
+        res.stats.nnz,
+        res.stats.fill_ratio,
+        res.stats.tree_height,
+        res.blocks.cblk,
+        res.wall_seconds,
         mn,
         avg,
         mx,
-        rep.total_comm_bytes()
+        res.total_comm_bytes()
     );
     Ok(())
 }
@@ -134,21 +148,144 @@ fn cmd_suite(args: &[String]) -> Result<(), String> {
         "graph", "|V|", "|E|", "p", "OPC", "t(s)"
     );
     for (name, g) in generators::table1_suite(scale) {
+        let shared = Arc::new(g);
         for &p in &ps {
-            let rep = svc
-                .order(&g, Engine::PtScotch { p }, &strat)
-                .map_err(|e| e.to_string())?;
+            let req = OrderingRequest::from_arc(Arc::clone(&shared))
+                .strategy(strat.clone())
+                .engine(Engine::PtScotch { p });
+            let res = svc.run(&req).map_err(|e| e.to_string())?;
             println!(
                 "{:<18} {:>8} {:>10} {:>4} {:>12.4e} {:>9.2}",
                 name,
-                g.n(),
-                g.m(),
+                shared.n(),
+                shared.m(),
                 p,
-                rep.stats.opc,
-                rep.wall_seconds
+                res.stats.opc,
+                res.wall_seconds
             );
         }
     }
+    Ok(())
+}
+
+/// Parse one `batch` request line:
+/// `graph=<spec> [strategy=k=v;k=v] [engine=seq|pts|pm] [p=N] [tag=T]`.
+/// Strategy pairs use `;` between keys so the line stays
+/// whitespace-tokenized. Graphs are shared per spec via `graphs`.
+fn parse_request_line(
+    line: &str,
+    graphs: &mut HashMap<String, Arc<Graph>>,
+) -> Result<OrderingRequest, String> {
+    let mut graph_spec: Option<String> = None;
+    let mut strat_spec = String::new();
+    let mut engine_name = "pts".to_string();
+    let mut p = 1usize;
+    let mut tag = String::new();
+    for tok in line.split_whitespace() {
+        let (k, v) = tok
+            .split_once('=')
+            .ok_or_else(|| format!("bad token {tok} (want key=value)"))?;
+        match k {
+            "graph" => graph_spec = Some(v.to_string()),
+            "strategy" => strat_spec = v.replace(';', ","),
+            "engine" => engine_name = v.to_string(),
+            "p" => p = v.parse().map_err(|_| format!("bad p {v}"))?,
+            "tag" => tag = v.to_string(),
+            other => return Err(format!("unknown request key {other}")),
+        }
+    }
+    let spec = graph_spec.ok_or("request line needs graph=<spec>")?;
+    let graph = match graphs.get(&spec) {
+        Some(g) => Arc::clone(g),
+        None => {
+            let g = Arc::new(parse_graph(&spec)?);
+            graphs.insert(spec.clone(), Arc::clone(&g));
+            g
+        }
+    };
+    let engine = match engine_name.as_str() {
+        "seq" => Engine::Sequential,
+        "pts" => Engine::PtScotch { p },
+        "pm" => Engine::ParMetisLike { p },
+        e => return Err(format!("unknown engine {e} (seq|pts|pm)")),
+    };
+    let strat = Strategy::parse(&strat_spec).map_err(|e| e.to_string())?;
+    Ok(OrderingRequest::from_arc(graph)
+        .strategy(strat)
+        .engine(engine)
+        .tag(if tag.is_empty() { spec } else { tag }))
+}
+
+fn cmd_batch(args: &[String]) -> Result<(), String> {
+    let path = get_flag(args, "--requests").ok_or("--requests FILE required")?;
+    let text = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
+    let repeat: usize = get_flag(args, "--repeat")
+        .map(|s| s.parse().unwrap_or(1))
+        .unwrap_or(1);
+    let config = ServiceConfig {
+        cache_capacity: get_flag(args, "--cache")
+            .map(|s| s.parse().unwrap_or(64))
+            .unwrap_or(64),
+        max_in_flight: get_flag(args, "--jobs")
+            .map(|s| s.parse().unwrap_or(4))
+            .unwrap_or(4),
+    };
+    let mut graphs = HashMap::new();
+    let mut requests = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let req = parse_request_line(line, &mut graphs)
+            .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        requests.push(req);
+    }
+    if requests.is_empty() {
+        return Err(format!("{path}: no requests"));
+    }
+    let svc = OrderingService::new(&XlaRuntime::default_dir());
+    let coord = BatchCoordinator::with_config(svc, config);
+    println!(
+        "{:<20} {:>5} {:>10} {:>10} {:>10} {:>12} {:>7}",
+        "tag", "round", "served", "queue(ms)", "run(ms)", "OPC", "cblk"
+    );
+    for round in 0..repeat.max(1) {
+        let replies = coord.submit(requests.clone());
+        for r in replies {
+            let served = match r.served {
+                Served::Hit => "hit",
+                Served::Miss => "miss",
+                Served::Coalesced => "coalesced",
+            };
+            match &r.result {
+                Ok(res) => println!(
+                    "{:<20} {:>5} {:>10} {:>10.2} {:>10.2} {:>12.4e} {:>7}",
+                    r.tag,
+                    round,
+                    served,
+                    r.queue_seconds * 1e3,
+                    r.run_seconds * 1e3,
+                    res.stats.opc,
+                    res.blocks.cblk
+                ),
+                Err(e) => println!("{:<20} {:>5} {:>10} error: {e}", r.tag, round, served),
+            }
+        }
+    }
+    let m = coord.metrics();
+    println!(
+        "served {} requests: {} hits, {} misses, {} coalesced ({} orderings run, \
+         hit-rate {:.1}%, {} evictions, {} errors)",
+        m.requests(),
+        m.hits,
+        m.misses,
+        m.coalesced,
+        m.jobs_run,
+        m.hit_rate() * 100.0,
+        m.evictions,
+        m.errors
+    );
     Ok(())
 }
 
@@ -172,11 +309,13 @@ fn main() -> ExitCode {
     let r = match args.first().map(String::as_str) {
         Some("order") => cmd_order(&args[1..]),
         Some("suite") => cmd_suite(&args[1..]),
+        Some("batch") | Some("serve") => cmd_batch(&args[1..]),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: ptscotch <order|suite|info> [--graph SPEC] [-p N] \
-                 [--engine seq|pts|pm] [--strategy k=v,...]"
+                "usage: ptscotch <order|suite|batch|info> [--graph SPEC] [-p N] \
+                 [--engine seq|pts|pm] [--strategy k=v,...] \
+                 [--requests FILE --repeat K --cache N --jobs N]"
             );
             return ExitCode::from(2);
         }

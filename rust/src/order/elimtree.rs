@@ -7,6 +7,7 @@
 
 use super::Ordering;
 use crate::graph::Graph;
+use crate::{Error, Result};
 
 /// Parent of each column in the elimination tree of `PAPᵀ`, in **new**
 /// (permuted) indices; roots have parent `usize::MAX`.
@@ -94,6 +95,141 @@ pub fn postorder(parent: &[usize]) -> Vec<usize> {
     post
 }
 
+/// The solver-facing block structure of an ordering — what downstream
+/// sparse factorization consumers (e.g. Tacho's `GraphTools_Scotch`
+/// wrapper) read off a Scotch ordering besides `perm`/`peri`: the
+/// supernode column ranges (`rangtab`) and the parent of each column
+/// block in the separator/elimination tree (`treetab`).
+///
+/// All indices are in **new** (permuted) column space. Blocks are
+/// maximal chains of the elimination tree: consecutive columns
+/// `i, i+1` share a block iff `parent[i] = i+1`, so every block's
+/// columns eliminate into the next and only the last column's parent
+/// leaves the block. Because elimination-tree parents always point to
+/// higher columns, block parents always point to higher block indices
+/// — the block forest is **postordered by construction**, which is the
+/// contract [`BlockOrdering::validate`] enforces.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockOrdering {
+    /// Number of column blocks (Scotch `cblkptr`).
+    pub cblk: usize,
+    /// Column range of block `b`: new columns `range[b]..range[b+1]`
+    /// (Scotch `rangtab`; `cblk + 1` entries, `range[0] = 0`,
+    /// strictly increasing, `range[cblk] = n`).
+    pub range: Vec<usize>,
+    /// Parent block of block `b` in the separator/elimination forest
+    /// (Scotch `treetab`); roots hold `usize::MAX`. Always
+    /// `tree[b] > b` for non-roots: children precede parents.
+    pub tree: Vec<usize>,
+}
+
+impl BlockOrdering {
+    /// Build the block structure from an elimination-tree parent vector
+    /// (as produced by [`etree`], in permuted indices).
+    pub fn from_etree(parent: &[usize]) -> BlockOrdering {
+        let n = parent.len();
+        let mut range = Vec::new();
+        range.push(0);
+        for i in 1..n {
+            if parent[i - 1] != i {
+                range.push(i);
+            }
+        }
+        if n > 0 {
+            range.push(n);
+        }
+        let cblk = range.len() - 1;
+        // Map each column to its block (ranges are sorted), then point
+        // each block at the block holding its last column's parent.
+        let mut block_of = vec![0usize; n];
+        for b in 0..cblk {
+            for col in range[b]..range[b + 1] {
+                block_of[col] = b;
+            }
+        }
+        let tree = (0..cblk)
+            .map(|b| {
+                let last = range[b + 1] - 1;
+                match parent[last] {
+                    usize::MAX => usize::MAX,
+                    p => block_of[p],
+                }
+            })
+            .collect();
+        BlockOrdering { cblk, range, tree }
+    }
+
+    /// Number of ordered columns covered by the blocks.
+    pub fn n(&self) -> usize {
+        *self.range.last().expect("range always holds at least [0]")
+    }
+
+    /// The block containing new column `col`.
+    pub fn block_of(&self, col: usize) -> usize {
+        debug_assert!(col < self.n());
+        match self.range.binary_search(&col) {
+            Ok(b) if b == self.cblk => self.cblk - 1,
+            Ok(b) => b,
+            Err(i) => i - 1,
+        }
+    }
+
+    /// Check the solver-facing contract: `range` is a strictly
+    /// increasing tiling of `0..n` with `cblk + 1` entries, `tree` has
+    /// `cblk` entries, and the block forest is **postordered** — every
+    /// non-root parent satisfies `b < tree[b] < cblk`, so children
+    /// always precede their parents (what a supernodal factorization
+    /// scheduler relies on).
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if self.range.len() != self.cblk + 1 {
+            return Err(Error::InvalidOrdering(format!(
+                "range has {} entries for cblk = {}",
+                self.range.len(),
+                self.cblk
+            )));
+        }
+        if self.range[0] != 0 || self.n() != n {
+            return Err(Error::InvalidOrdering(format!(
+                "range spans {}..{} but the ordering has {n} columns",
+                self.range[0],
+                self.n()
+            )));
+        }
+        for b in 0..self.cblk {
+            if self.range[b] >= self.range[b + 1] {
+                return Err(Error::InvalidOrdering(format!(
+                    "block {b} has empty or reversed range"
+                )));
+            }
+        }
+        if self.tree.len() != self.cblk {
+            return Err(Error::InvalidOrdering(format!(
+                "tree has {} entries for cblk = {}",
+                self.tree.len(),
+                self.cblk
+            )));
+        }
+        for (b, &p) in self.tree.iter().enumerate() {
+            if p != usize::MAX && (p <= b || p >= self.cblk) {
+                return Err(Error::InvalidOrdering(format!(
+                    "block {b} has non-postordered parent {p}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compute the [`BlockOrdering`] of `g` under `order` — the
+/// elimination tree of the permuted matrix, chain-merged into
+/// supernodal column blocks. Works for any valid ordering, so the
+/// sequential ([`crate::order::nd`]) and distributed
+/// ([`crate::dist::parallel_order`]) engines share this one emission
+/// path.
+pub fn block_ordering(g: &Graph, order: &Ordering) -> BlockOrdering {
+    BlockOrdering::from_etree(&etree(g, order))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +302,104 @@ mod tests {
         let roots = p.iter().filter(|&&x| x == usize::MAX).count();
         assert_eq!(roots, 2);
         assert_eq!(postorder(&p).len(), 4);
+    }
+
+    #[test]
+    fn blocks_of_path_chain_into_one_supernode() {
+        // etree of the natural-order path is one chain: a single block.
+        let g = generators::path(6, 1);
+        let b = block_ordering(&g, &Ordering::identity(6));
+        assert_eq!(b.cblk, 1);
+        assert_eq!(b.range, vec![0, 6]);
+        assert_eq!(b.tree, vec![usize::MAX]);
+        b.validate(6).unwrap();
+    }
+
+    #[test]
+    fn blocks_of_star_are_leaves_plus_center() {
+        // Leaves 0..3 each form their own block parented on the center's
+        // block; leaf 3 chains into the center (parent[3] = 4).
+        let mut bld = crate::graph::GraphBuilder::new(5);
+        for v in 0..4 {
+            bld.add_edge(v, 4);
+        }
+        let g = bld.build().unwrap();
+        let b = block_ordering(&g, &Ordering::identity(5));
+        assert_eq!(b.range, vec![0, 1, 2, 3, 5]);
+        assert_eq!(b.tree, vec![3, 3, 3, usize::MAX]);
+        b.validate(5).unwrap();
+    }
+
+    #[test]
+    fn blocks_of_forest_have_one_root_per_tree() {
+        let mut bld = crate::graph::GraphBuilder::new(4);
+        bld.add_edge(0, 1);
+        bld.add_edge(2, 3);
+        let g = bld.build().unwrap();
+        let b = block_ordering(&g, &Ordering::identity(4));
+        b.validate(4).unwrap();
+        let roots = b.tree.iter().filter(|&&p| p == usize::MAX).count();
+        assert_eq!(roots, 2);
+        assert_eq!(b.range, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn empty_graph_has_zero_blocks() {
+        let b = BlockOrdering::from_etree(&[]);
+        assert_eq!(b.cblk, 0);
+        assert_eq!(b.range, vec![0]);
+        assert!(b.tree.is_empty());
+        b.validate(0).unwrap();
+    }
+
+    #[test]
+    fn block_of_locates_columns() {
+        let b = BlockOrdering {
+            cblk: 3,
+            range: vec![0, 2, 3, 7],
+            tree: vec![2, 2, usize::MAX],
+        };
+        b.validate(7).unwrap();
+        let owners: Vec<usize> = (0..7).map(|c| b.block_of(c)).collect();
+        assert_eq!(owners, vec![0, 0, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn validate_rejects_non_postordered_tree() {
+        let mut b = BlockOrdering {
+            cblk: 2,
+            range: vec![0, 3, 5],
+            tree: vec![1, usize::MAX],
+        };
+        b.validate(5).unwrap();
+        b.tree = vec![usize::MAX, 0]; // parent before child
+        assert!(b.validate(5).is_err());
+        b.tree = vec![2, usize::MAX]; // parent out of range
+        assert!(b.validate(5).is_err());
+    }
+
+    #[test]
+    fn blocks_cover_grid_under_nd_ordering() {
+        let g = generators::grid2d(8, 8);
+        let strat = crate::strategy::Strategy::parse("seed=3").unwrap();
+        let refiner = crate::sep::FmRefiner::default();
+        let o = crate::order::nd::nested_dissection(
+            &g,
+            &strat,
+            &refiner,
+            &mut crate::rng::Rng::new(strat.seed),
+        );
+        let b = block_ordering(&g, &o);
+        b.validate(64).unwrap();
+        // Nested dissection on a grid must expose more than one supernode.
+        assert!(b.cblk > 1, "cblk = {}", b.cblk);
+        // Every column's block parent chain stays consistent with the etree.
+        let parent = etree(&g, &o);
+        for i in 0..64 {
+            if parent[i] != usize::MAX {
+                let (bi, bp) = (b.block_of(i), b.block_of(parent[i]));
+                assert!(bp == bi || bp > bi, "column {i}: block {bi} -> {bp}");
+            }
+        }
     }
 }

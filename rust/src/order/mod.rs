@@ -11,6 +11,7 @@ pub mod mmd;
 pub mod nd;
 pub mod symbolic;
 
+pub use elimtree::{block_ordering, BlockOrdering};
 pub use hamd::{hamd, HamdOrder};
 pub use nd::{nested_dissection, nested_dissection_with_halo};
 pub use symbolic::{symbolic_cholesky, SymbolicStats};

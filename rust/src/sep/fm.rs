@@ -17,7 +17,7 @@ use crate::rng::Rng;
 use std::collections::BinaryHeap;
 
 /// FM tuning parameters.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct FmParams {
     /// Maximum refinement passes (each pass ends in a rollback-to-best).
     pub max_passes: usize,

@@ -7,6 +7,7 @@
 use crate::comm::Executor;
 use crate::sep::fm::FmParams;
 use crate::{Error, Result};
+use std::fmt;
 
 /// Which band refiner the pipeline uses (ablation A5).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,7 +63,7 @@ pub enum BandEngine {
 }
 
 /// Parameters of the multilevel separator computation.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SepStrategy {
     /// Coarsen until at most this many vertices (paper: "a few hundreds").
     pub coarse_target: usize,
@@ -120,7 +121,7 @@ pub enum LeafMethod {
 }
 
 /// Parameters of nested dissection.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct NdStrategy {
     /// Subgraphs at most this large are ordered by minimum degree
     /// (the paper couples ND with (halo) minimum-degree methods [10]).
@@ -143,7 +144,7 @@ impl Default for NdStrategy {
 }
 
 /// Parameters of the distributed (PT-Scotch) layer.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DistStrategy {
     /// Fold-dup starts when the average number of vertices per process
     /// drops below this (paper default strategy: 100).
@@ -210,7 +211,7 @@ impl Default for DistStrategy {
 }
 
 /// Top-level strategy: everything the ordering pipeline needs.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Strategy {
     /// Root random seed (fixed by default for reproducibility, §4).
     pub seed: u64,
@@ -235,6 +236,32 @@ impl Default for Strategy {
         }
     }
 }
+
+/// Every `key` accepted by [`Strategy::parse`], in the canonical order
+/// the [`Strategy`] `Display` implementation emits them. Unknown keys
+/// are rejected with an error that names this list.
+pub const VALID_KEYS: &[&str] = &[
+    "seed",
+    "band",
+    "coarse",
+    "minratio",
+    "ggg",
+    "passes",
+    "neg",
+    "eps",
+    "leaf",
+    "maxsep",
+    "leafmethod",
+    "refiner",
+    "engine",
+    "executor",
+    "folddup",
+    "foldthresh",
+    "overlap",
+    "rounds",
+    "maxband",
+    "sweeps",
+];
 
 impl Strategy {
     /// Parse `key=value` pairs (comma-separated) over the default
@@ -266,6 +293,16 @@ impl Strategy {
                 }
                 "band" => s.sep.band_width = parse_usize(v)? as u32,
                 "coarse" => s.sep.coarse_target = parse_usize(v)?,
+                "minratio" => {
+                    s.sep.min_coarsen_ratio = v
+                        .parse()
+                        .map_err(|_| Error::InvalidStrategy(format!("bad minratio {v}")))?
+                }
+                "maxsep" => {
+                    s.nd.max_sep_fraction = v
+                        .parse()
+                        .map_err(|_| Error::InvalidStrategy(format!("bad maxsep {v}")))?
+                }
                 "ggg" => s.sep.ggg_tries = parse_usize(v)?,
                 "passes" => s.sep.fm.max_passes = parse_usize(v)?,
                 "neg" => s.sep.fm.max_neg_moves = parse_usize(v)?,
@@ -322,7 +359,12 @@ impl Strategy {
                         }
                     }
                 }
-                _ => return Err(Error::InvalidStrategy(format!("unknown key {k}"))),
+                _ => {
+                    return Err(Error::InvalidStrategy(format!(
+                        "unknown key {k} (valid keys: {})",
+                        VALID_KEYS.join(", ")
+                    )))
+                }
             }
         }
         s.validate()?;
@@ -340,6 +382,12 @@ impl Strategy {
         if self.sep.band_width == 0 {
             return Err(Error::InvalidStrategy("band width must be ≥ 1".into()));
         }
+        if !(0.0..=1.0).contains(&self.sep.min_coarsen_ratio) {
+            return Err(Error::InvalidStrategy("minratio must be in [0,1]".into()));
+        }
+        if !(0.0..=1.0).contains(&self.nd.max_sep_fraction) {
+            return Err(Error::InvalidStrategy("maxsep must be in [0,1]".into()));
+        }
         if self.nd.leaf_threshold < 1 {
             return Err(Error::InvalidStrategy("leaf threshold must be ≥ 1".into()));
         }
@@ -349,6 +397,70 @@ impl Strategy {
             ));
         }
         Ok(())
+    }
+}
+
+impl fmt::Display for Strategy {
+    /// The **canonical form** of the strategy: every [`VALID_KEYS`]
+    /// knob, in that fixed order, with its current value — so any two
+    /// `Strategy` values compare equal iff their canonical forms are
+    /// byte-identical. This string is the strategy component of the
+    /// service-layer request fingerprint (DESIGN.md §6), so it must
+    /// round-trip through [`Strategy::parse`] losslessly.
+    ///
+    /// ```
+    /// use ptscotch::strategy::Strategy;
+    ///
+    /// let s = Strategy::parse("band=5, seed=9,folddup=0").unwrap();
+    /// let canon = s.to_string();
+    /// // Round-trip: parsing the canonical form reproduces it exactly.
+    /// assert_eq!(Strategy::parse(&canon).unwrap().to_string(), canon);
+    /// assert!(canon.contains("band=5"));
+    /// assert!(canon.contains("seed=9"));
+    /// assert!(canon.contains("folddup=0"));
+    /// ```
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let executor = match self.dist.executor {
+            None => "env".to_string(),
+            Some(e) => e.name().to_string(),
+        };
+        let leafmethod = match self.nd.leaf_method {
+            LeafMethod::Mmd => "mmd",
+            LeafMethod::Hamd => "hamd",
+        };
+        let refiner = match self.refiner {
+            RefinerKind::Fm => "fm",
+            RefinerKind::DiffusionCpu => "diffcpu",
+            RefinerKind::DiffusionXla => "xla",
+        };
+        let engine = match self.dist.band_engine {
+            BandEngine::Auto => "auto",
+            BandEngine::Cpu => "cpu",
+            BandEngine::Xla => "xla",
+        };
+        write!(
+            f,
+            "seed={},band={},coarse={},minratio={},ggg={},passes={},neg={},eps={},\
+             leaf={},maxsep={},leafmethod={leafmethod},refiner={refiner},engine={engine},\
+             executor={executor},folddup={},foldthresh={},overlap={},rounds={},\
+             maxband={},sweeps={}",
+            self.seed,
+            self.sep.band_width,
+            self.sep.coarse_target,
+            self.sep.min_coarsen_ratio,
+            self.sep.ggg_tries,
+            self.sep.fm.max_passes,
+            self.sep.fm.max_neg_moves,
+            self.sep.fm.balance_eps,
+            self.nd.leaf_threshold,
+            self.nd.max_sep_fraction,
+            u8::from(self.dist.fold_dup),
+            self.dist.folddup_threshold,
+            u8::from(self.dist.overlap_folds),
+            self.dist.matching_rounds,
+            self.dist.max_centralized_band,
+            self.dist.diffusion_sweeps,
+        )
     }
 }
 
@@ -446,5 +558,57 @@ mod tests {
     fn parse_empty_is_default() {
         let s = Strategy::parse("").unwrap();
         assert_eq!(s.sep.coarse_target, Strategy::default().sep.coarse_target);
+    }
+
+    #[test]
+    fn unknown_key_error_names_the_valid_keys() {
+        let err = Strategy::parse("bogus=1").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown key bogus"), "{msg}");
+        for k in VALID_KEYS {
+            assert!(msg.contains(k), "error message misses valid key {k}: {msg}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        // The canonical form is the fingerprint input (DESIGN.md §6):
+        // parse(s).to_string() must be a fixed point, for the default
+        // and for every knob moved off its default.
+        let specs = [
+            "",
+            "band=5,seed=9,folddup=0",
+            "leafmethod=mmd,refiner=diffcpu,engine=cpu,executor=threads",
+            "coarse=60,minratio=0.7,ggg=2,passes=3,neg=10,eps=0.1",
+            "leaf=40,maxsep=0.4,foldthresh=50,overlap=0,rounds=3,maxband=500,sweeps=4",
+            "executor=sim",
+        ];
+        for spec in specs {
+            let s = Strategy::parse(spec).unwrap();
+            let canon = s.to_string();
+            let back = Strategy::parse(&canon).unwrap();
+            assert_eq!(back, s, "{spec} -> {canon}");
+            assert_eq!(back.to_string(), canon, "{spec}");
+        }
+    }
+
+    #[test]
+    fn canonical_form_is_equality() {
+        // Differently-written but equivalent specs canonicalize to one
+        // string; any knob difference changes it.
+        let a = Strategy::parse("seed=3,band=3").unwrap();
+        let b = Strategy::parse(" band=3 , seed=3 ").unwrap();
+        assert_eq!(a.to_string(), b.to_string());
+        let c = Strategy::parse("seed=4,band=3").unwrap();
+        assert_ne!(a.to_string(), c.to_string());
+    }
+
+    #[test]
+    fn parse_minratio_and_maxsep_knobs() {
+        let s = Strategy::parse("minratio=0.7,maxsep=0.4").unwrap();
+        assert!((s.sep.min_coarsen_ratio - 0.7).abs() < 1e-12);
+        assert!((s.nd.max_sep_fraction - 0.4).abs() < 1e-12);
+        assert!(Strategy::parse("minratio=1.5").is_err());
+        assert!(Strategy::parse("maxsep=-0.1").is_err());
     }
 }

@@ -82,10 +82,7 @@ fn stress_program(c: &comm::Comm, seed: u64) -> u64 {
                 let mine = script.next_u64() ^ ((me as u64) << 48) ^ op_idx as u64;
                 let red = c.allreduce(mine, |a, b| a.wrapping_add(b));
                 let all = c.allgatherv(vec![mine]);
-                let gathered = all
-                    .iter()
-                    .flatten()
-                    .fold(0u64, |a, &b| a.wrapping_add(b));
+                let gathered = all.iter().flatten().fold(0u64, |a, &b| a.wrapping_add(b));
                 assert_eq!(red, gathered, "allreduce disagrees with allgatherv");
                 acc = acc.wrapping_mul(31).wrapping_add(red);
             }
@@ -113,10 +110,7 @@ fn stress_program(c: &comm::Comm, seed: u64) -> u64 {
                 assert_eq!(sub.size(), members, "split subgroup size");
                 assert_eq!(sub.rank(), me / k, "split re-ranking");
                 let s = sub.allreduce_sum(1 + me as i64);
-                let expect: i64 = (0..p)
-                    .filter(|r| r % k == me % k)
-                    .map(|r| 1 + r as i64)
-                    .sum();
+                let expect: i64 = (0..p).filter(|r| r % k == me % k).map(|r| 1 + r as i64).sum();
                 assert_eq!(s, expect, "collective inside split subgroup");
                 acc = acc.wrapping_mul(31).wrapping_add(s as u64);
             }
@@ -130,11 +124,7 @@ fn stress_program(c: &comm::Comm, seed: u64) -> u64 {
                     uniq.sort_unstable();
                     uniq.dedup();
                     for &t in &uniq {
-                        c.send(
-                            (me + 1) % p,
-                            t,
-                            vec![t.wrapping_mul(me as u64 + 1), op_idx as u64],
-                        );
+                        c.send((me + 1) % p, t, vec![t.wrapping_mul(me as u64 + 1), op_idx as u64]);
                     }
                     // Receive in reverse tag order to force queue scans
                     // past non-matching packets.
@@ -155,9 +145,7 @@ fn stress_program(c: &comm::Comm, seed: u64) -> u64 {
 fn randomized_interleavings_agree_across_executors() {
     for p in [2usize, 3, 5, 8] {
         for seed in [1u64, 17, 4242] {
-            let run = |exec| {
-                run_with_watchdog(exec, p, 60, move |c| stress_program(&c, seed))
-            };
+            let run = |exec| run_with_watchdog(exec, p, 60, move |c| stress_program(&c, seed));
             let sim = run(Executor::Sim);
             let thr = run(Executor::Threads);
             assert_eq!(sim, thr, "p={p} seed={seed}: executors diverged");

@@ -6,37 +6,30 @@
 //! order on every transport operation, so agreement here proves the
 //! free-running fabric's scheduling freedom never leaks into results.
 
-use ptscotch::coordinator::{Engine, OrderingReport, OrderingService};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingResult, OrderingService};
 use ptscotch::graph::{generators, Graph};
 use ptscotch::strategy::Strategy;
 
 /// Order `g` on `p` ranks with the given extra strategy knobs under one
 /// executor.
-fn order_on(svc: &OrderingService, g: &Graph, p: usize, exec: &str, knobs: &str) -> OrderingReport {
+fn order_on(svc: &OrderingService, g: &Graph, p: usize, exec: &str, knobs: &str) -> OrderingResult {
     let spec = format!("executor={exec},seed=11,{knobs}");
     let strat = Strategy::parse(spec.trim_end_matches(',')).unwrap();
-    svc.order(g, Engine::PtScotch { p }, &strat).unwrap()
+    let req = OrderingRequest::new(g).strategy(strat).engine(Engine::PtScotch { p });
+    svc.run(&req).unwrap()
 }
 
-/// Assert every deterministic field of two reports matches.
-fn assert_reports_identical(sim: &OrderingReport, thr: &OrderingReport, ctx: &str) {
+/// Assert every deterministic field of two results matches.
+fn assert_reports_identical(sim: &OrderingResult, thr: &OrderingResult, ctx: &str) {
     assert_eq!(sim.ordering.perm, thr.ordering.perm, "{ctx}: perm");
     assert_eq!(sim.ordering.iperm, thr.ordering.iperm, "{ctx}: iperm");
-    assert_eq!(
-        sim.bytes_sent_per_rank, thr.bytes_sent_per_rank,
-        "{ctx}: bytes"
-    );
+    assert_eq!(sim.blocks, thr.blocks, "{ctx}: blocks");
+    assert_eq!(sim.bytes_sent_per_rank, thr.bytes_sent_per_rank, "{ctx}: bytes");
     assert_eq!(sim.msgs_sent_per_rank, thr.msgs_sent_per_rank, "{ctx}: msgs");
-    assert_eq!(
-        sim.peak_mem_per_rank, thr.peak_mem_per_rank,
-        "{ctx}: peak mem"
-    );
+    assert_eq!(sim.peak_mem_per_rank, thr.peak_mem_per_rank, "{ctx}: peak mem");
     assert_eq!(sim.stats.nnz, thr.stats.nnz, "{ctx}: nnz");
     assert_eq!(sim.stats.opc, thr.stats.opc, "{ctx}: opc");
-    assert_eq!(
-        sim.stats.tree_height, thr.stats.tree_height,
-        "{ctx}: tree height"
-    );
+    assert_eq!(sim.stats.tree_height, thr.stats.tree_height, "{ctx}: tree height");
 }
 
 #[test]

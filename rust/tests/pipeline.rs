@@ -2,13 +2,23 @@
 //! through the public coordinator API on every graph family, plus the
 //! paper's structural claims that don't need the XLA artifacts.
 
-use ptscotch::coordinator::{Engine, OrderingService};
-use ptscotch::graph::{generators, io};
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingResult, OrderingService};
+use ptscotch::graph::{generators, io, Graph};
 use ptscotch::order::{symbolic_cholesky, Ordering};
 use ptscotch::strategy::Strategy;
 
 fn service() -> OrderingService {
     OrderingService::new_cpu_only()
+}
+
+/// Run one request through the builder API.
+fn order(
+    svc: &OrderingService,
+    g: &Graph,
+    engine: Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<OrderingResult> {
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
 }
 
 #[test]
@@ -24,8 +34,7 @@ fn every_family_orders_validly_sequentially() {
         ("qimonda", generators::qimonda_like(900, 3)),
         ("thread", generators::thread_like(260, 60, 4)),
     ] {
-        let rep = svc
-            .order(&g, Engine::Sequential, &strat)
+        let rep = order(&svc, &g, Engine::Sequential, &strat)
             .unwrap_or_else(|e| panic!("{name}: {e}"));
         rep.ordering.validate().unwrap();
         // Natural order is already near-optimal for banded-dense
@@ -48,9 +57,9 @@ fn parallel_matches_quality_class_across_p() {
     let svc = service();
     let strat = Strategy::default();
     let g = generators::grid2d(26, 26);
-    let seq = svc.order(&g, Engine::Sequential, &strat).unwrap();
+    let seq = order(&svc, &g, Engine::Sequential, &strat).unwrap();
     for p in [2usize, 3, 4, 6, 8] {
-        let rep = svc.order(&g, Engine::PtScotch { p }, &strat).unwrap();
+        let rep = order(&svc, &g, Engine::PtScotch { p }, &strat).unwrap();
         rep.ordering.validate().unwrap();
         assert!(
             rep.stats.opc <= seq.stats.opc * 1.6,
@@ -76,7 +85,7 @@ fn quality_flat_in_p_for_ptscotch() {
             } else {
                 Engine::PtScotch { p }
             };
-            svc.order(&g, e, &strat).unwrap().stats.opc
+            order(&svc, &g, e, &strat).unwrap().stats.opc
         })
         .collect();
     let best = opcs.iter().cloned().fold(f64::INFINITY, f64::min);
@@ -93,12 +102,8 @@ fn band_width_three_is_no_worse_than_one() {
     // vs narrower bands.
     let svc = service();
     let g = generators::irregular_mesh(30, 30, 7);
-    let w1 = svc
-        .order(&g, Engine::Sequential, &Strategy::parse("band=1").unwrap())
-        .unwrap();
-    let w3 = svc
-        .order(&g, Engine::Sequential, &Strategy::parse("band=3").unwrap())
-        .unwrap();
+    let w1 = order(&svc, &g, Engine::Sequential, &Strategy::parse("band=1").unwrap()).unwrap();
+    let w3 = order(&svc, &g, Engine::Sequential, &Strategy::parse("band=3").unwrap()).unwrap();
     assert!(
         w3.stats.opc <= w1.stats.opc * 1.25,
         "band=3 OPC {} should compete with band=1 {}",
@@ -117,12 +122,7 @@ fn seed_variance_is_small() {
     let mut opcs = Vec::new();
     for seed in 1..=5u64 {
         let strat = Strategy::parse(&format!("seed={seed}")).unwrap();
-        opcs.push(
-            svc.order(&g, Engine::PtScotch { p: 4 }, &strat)
-                .unwrap()
-                .stats
-                .opc,
-        );
+        opcs.push(order(&svc, &g, Engine::PtScotch { p: 4 }, &strat).unwrap().stats.opc);
     }
     let best = opcs.iter().cloned().fold(f64::INFINITY, f64::min);
     let worst = opcs.iter().cloned().fold(0.0, f64::max);
@@ -140,8 +140,8 @@ fn chaco_roundtrip_preserves_ordering_quality() {
     let g2 = io::read_chaco(&buf[..]).unwrap();
     let svc = service();
     let strat = Strategy::default();
-    let a = svc.order(&g, Engine::Sequential, &strat).unwrap();
-    let b = svc.order(&g2, Engine::Sequential, &strat).unwrap();
+    let a = order(&svc, &g, Engine::Sequential, &strat).unwrap();
+    let b = order(&svc, &g2, Engine::Sequential, &strat).unwrap();
     assert_eq!(a.stats.nnz, b.stats.nnz);
     assert_eq!(a.ordering.iperm, b.ordering.iperm);
 }
@@ -153,11 +153,9 @@ fn overlap_strategy_toggle_gives_same_result() {
     // must not change results.
     let svc = service();
     let g = generators::grid2d(20, 20);
-    let on = svc
-        .order(&g, Engine::PtScotch { p: 4 }, &Strategy::parse("overlap=1").unwrap())
+    let on = order(&svc, &g, Engine::PtScotch { p: 4 }, &Strategy::parse("overlap=1").unwrap())
         .unwrap();
-    let off = svc
-        .order(&g, Engine::PtScotch { p: 4 }, &Strategy::parse("overlap=0").unwrap())
+    let off = order(&svc, &g, Engine::PtScotch { p: 4 }, &Strategy::parse("overlap=0").unwrap())
         .unwrap();
     assert_eq!(on.ordering.iperm, off.ordering.iperm);
 }
@@ -169,7 +167,7 @@ fn separator_indices_are_topmost_at_every_level() {
     let svc = service();
     let g = generators::grid2d(40, 8);
     let strat = Strategy::parse("leaf=30").unwrap();
-    let rep = svc.order(&g, Engine::Sequential, &strat).unwrap();
+    let rep = order(&svc, &g, Engine::Sequential, &strat).unwrap();
     // The ~8 highest-numbered unknowns must form a column (x constant).
     let n = g.n();
     let top: Vec<usize> = (n - 8..n).map(|k| rep.ordering.iperm[k] % 40).collect();
@@ -185,12 +183,8 @@ fn parmetis_like_quality_degrades_or_stagnates_with_p() {
     let svc = service();
     let strat = Strategy::default();
     let g = generators::grid2d(26, 26);
-    let p2 = svc
-        .order(&g, Engine::ParMetisLike { p: 2 }, &strat)
-        .unwrap();
-    let p8 = svc
-        .order(&g, Engine::ParMetisLike { p: 8 }, &strat)
-        .unwrap();
+    let p2 = order(&svc, &g, Engine::ParMetisLike { p: 2 }, &strat).unwrap();
+    let p8 = order(&svc, &g, Engine::ParMetisLike { p: 8 }, &strat).unwrap();
     // The baseline must not *improve* markedly with p (the paper shows it
     // worsening dramatically).
     assert!(

@@ -16,6 +16,17 @@ use ptscotch::sep::{multilevel_separator, FmRefiner, SepState, SEP};
 use ptscotch::strategy::{SepStrategy, Strategy};
 use std::sync::Arc;
 
+/// Run one request through the builder API.
+fn order(
+    svc: &ptscotch::coordinator::OrderingService,
+    g: &Graph,
+    engine: ptscotch::coordinator::Engine,
+    strat: &Strategy,
+) -> ptscotch::Result<ptscotch::coordinator::OrderingResult> {
+    use ptscotch::coordinator::OrderingRequest;
+    svc.run(&OrderingRequest::new(g).strategy(strat.clone()).engine(engine))
+}
+
 /// Random connected graph: a spanning path plus `extra` random edges.
 fn random_graph(seed: u64, n: usize, extra: usize) -> Graph {
     let mut rng = Rng::new(seed);
@@ -115,9 +126,7 @@ fn prop_nd_ordering_is_permutation_on_random_graphs() {
     for seed in 0..10u64 {
         let g = random_graph(seed, 300 + seed as usize * 40, 500);
         let strat = Strategy::parse(&format!("seed={seed}")).unwrap();
-        let rep = svc
-            .order(&g, ptscotch::coordinator::Engine::Sequential, &strat)
-            .unwrap();
+        let rep = order(&svc, &g, ptscotch::coordinator::Engine::Sequential, &strat).unwrap();
         rep.ordering
             .validate()
             .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
@@ -391,9 +400,7 @@ fn prop_parallel_order_valid_with_forced_distributed_bands() {
     for (seed, p) in [(0u64, 4usize), (1, 5)] {
         let g = generators::grid2d(40, 40);
         let strat = Strategy::parse(&format!("seed={seed},maxband=8,sweeps=16")).unwrap();
-        let rep = svc
-            .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
-            .unwrap();
+        let rep = order(&svc, &g, ptscotch::coordinator::Engine::PtScotch { p }, &strat).unwrap();
         rep.ordering
             .validate()
             .unwrap_or_else(|e| panic!("seed {seed} p={p}: {e}"));
@@ -431,7 +438,7 @@ fn prop_engines_agree_on_fill_lower_bound() {
         Engine::PtScotch { p: 3 },
         Engine::ParMetisLike { p: 4 },
     ] {
-        let rep = svc.order(&g, engine, &Strategy::default()).unwrap();
+        let rep = order(&svc, &g, engine, &Strategy::default()).unwrap();
         assert!(rep.stats.nnz >= lb, "{engine:?}");
     }
 }
@@ -554,15 +561,12 @@ fn prop_parallel_order_hamd_valid_and_deterministic_across_p() {
         let g = random_graph(seed, 500, 700);
         for method in ["hamd", "mmd"] {
             let strat = Strategy::parse(&format!("seed={seed},leafmethod={method}")).unwrap();
-            let a = svc
-                .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
-                .unwrap();
+            let eng = ptscotch::coordinator::Engine::PtScotch { p };
+            let a = order(&svc, &g, eng, &strat).unwrap();
             a.ordering
                 .validate()
                 .unwrap_or_else(|e| panic!("seed {seed} p={p} {method}: {e}"));
-            let b = svc
-                .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
-                .unwrap();
+            let b = order(&svc, &g, eng, &strat).unwrap();
             assert_eq!(
                 a.ordering.iperm, b.ordering.iperm,
                 "seed {seed} p={p} {method}: nondeterministic"

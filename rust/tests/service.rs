@@ -1,0 +1,241 @@
+//! Service-layer tests (DESIGN.md §6): the batch coordinator's
+//! fingerprint cache must serve bit-identical results with zero rank
+//! work, in-batch duplicates must coalesce onto one fleet job, mixed
+//! concurrent batches must stay deterministic under the threaded
+//! executor, and every result must carry a valid postordered
+//! `BlockOrdering` across the generator suite at p ∈ {1, 4}.
+
+use ptscotch::coordinator::{
+    BatchCoordinator, Engine, OrderingRequest, OrderingService, Served, ServiceConfig,
+};
+use ptscotch::graph::{generators, Graph};
+use std::sync::Arc;
+
+fn suite() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("grid2d", generators::grid2d(18, 18)),
+        ("grid3d", generators::grid3d(6, 6, 6)),
+        ("irregular", generators::irregular_mesh(14, 14, 3)),
+        ("cage", generators::cage_like(400, 6, 2)),
+        ("qimonda", generators::qimonda_like(500, 3)),
+    ]
+}
+
+#[test]
+fn cache_hits_are_bit_identical_across_executors() {
+    // Determinism is what makes the cache sound: the same computation
+    // under the serialized simulator and under the free-running
+    // threaded fabric yields one bit pattern (DESIGN.md §3), so a
+    // cached result is indistinguishable from a recomputation on
+    // either executor.
+    let coord = BatchCoordinator::new(OrderingService::new_cpu_only());
+    let g = Arc::new(generators::grid2d(20, 20));
+    let req = |exec: &str| {
+        OrderingRequest::from_arc(Arc::clone(&g))
+            .parse_strategy(&format!("executor={exec},seed=3"))
+            .unwrap()
+            .engine(Engine::PtScotch { p: 4 })
+            .tag(exec)
+    };
+    let cold = coord.submit(vec![req("sim"), req("threads")]);
+    assert!(cold.iter().all(|r| r.served == Served::Miss));
+    let sim = cold[0].result.as_ref().unwrap();
+    let thr = cold[1].result.as_ref().unwrap();
+    assert_eq!(sim.ordering, thr.ordering);
+    assert_eq!(sim.blocks, thr.blocks);
+    assert_eq!(sim.bytes_sent_per_rank, thr.bytes_sent_per_rank);
+    assert_eq!(sim.msgs_sent_per_rank, thr.msgs_sent_per_rank);
+    // Replays under either executor knob are cache hits sharing the
+    // exact allocation of the first computation: bit-identity for free.
+    let warm = coord.submit(vec![req("threads"), req("sim")]);
+    assert!(warm.iter().all(|r| r.served == Served::Hit));
+    assert!(Arc::ptr_eq(thr, warm[0].result.as_ref().unwrap()));
+    assert!(Arc::ptr_eq(sim, warm[1].result.as_ref().unwrap()));
+    assert_eq!(coord.metrics().jobs_run, 2);
+}
+
+#[test]
+fn fingerprints_do_not_collide_across_the_suite() {
+    // Every distinct (graph, strategy, engine) combination across the
+    // generator suite must map to a distinct 128-bit fingerprint — a
+    // collision would silently serve one problem's ordering for
+    // another's.
+    let mut fps = Vec::new();
+    for (_, g) in suite() {
+        let g = Arc::new(g);
+        for spec in ["seed=1", "seed=2", "band=5"] {
+            let engines = [
+                Engine::Sequential,
+                Engine::PtScotch { p: 2 },
+                Engine::PtScotch { p: 4 },
+                Engine::ParMetisLike { p: 4 },
+            ];
+            for engine in engines {
+                let fp = OrderingRequest::from_arc(Arc::clone(&g))
+                    .parse_strategy(spec)
+                    .unwrap()
+                    .engine(engine)
+                    .fingerprint();
+                fps.push(fp);
+            }
+        }
+    }
+    let n = fps.len();
+    fps.sort_unstable();
+    fps.dedup();
+    assert_eq!(fps.len(), n, "fingerprint collision across distinct requests");
+}
+
+#[test]
+fn replaying_one_request_n_times_runs_one_fleet_job() {
+    // The headline service property: the same graph + strategy
+    // submitted N times performs exactly one full ordering. In-batch
+    // duplicates coalesce onto the leader's job; later rounds are
+    // cache hits with zero rank work, so the fleet's traffic counters
+    // stay those of the single run.
+    let coord = BatchCoordinator::with_config(
+        OrderingService::new_cpu_only(),
+        ServiceConfig {
+            cache_capacity: 8,
+            max_in_flight: 4,
+        },
+    );
+    let g = Arc::new(generators::grid3d(6, 6, 6));
+    let mk = |i: usize| {
+        OrderingRequest::from_arc(Arc::clone(&g))
+            .engine(Engine::PtScotch { p: 4 })
+            .tag(format!("client-{i}"))
+    };
+    let first = coord.submit((0..4).map(mk).collect());
+    assert_eq!(first[0].served, Served::Miss);
+    let lead = first[0].result.as_ref().unwrap();
+    for r in &first[1..] {
+        assert_eq!(r.served, Served::Coalesced);
+        assert!(Arc::ptr_eq(lead, r.result.as_ref().unwrap()));
+    }
+    for round in 0..3 {
+        let replies = coord.submit((0..4).map(mk).collect());
+        for r in &replies {
+            assert_eq!(r.served, Served::Hit, "round {round}");
+            assert_eq!(r.run_seconds, 0.0, "round {round}: hits do no rank work");
+            let res = r.result.as_ref().unwrap();
+            assert!(Arc::ptr_eq(lead, res), "round {round}: not the cached result");
+            // Flat rank-pool traffic: replays add zero bytes/messages.
+            assert_eq!(res.bytes_sent_per_rank, lead.bytes_sent_per_rank);
+            assert_eq!(res.msgs_sent_per_rank, lead.msgs_sent_per_rank);
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.jobs_run, 1, "16 requests must cost exactly one ordering");
+    assert_eq!((m.misses, m.coalesced, m.hits), (1, 3, 12));
+    assert_eq!(m.requests(), 16);
+}
+
+#[test]
+fn mixed_concurrent_batches_are_deterministic_under_threads() {
+    // A mixed batch schedules several distinct jobs concurrently, each
+    // launching its own thread fleet under `executor=threads`. Two
+    // fresh coordinators must produce bit-identical results for every
+    // request, and both must agree with the serialized simulator
+    // oracle — concurrency between jobs must not leak into results any
+    // more than concurrency within a fleet does.
+    let g1 = Arc::new(generators::grid2d(16, 16));
+    let g2 = Arc::new(generators::grid3d(5, 5, 5));
+    let batch = |exec: &str| {
+        vec![
+            OrderingRequest::from_arc(Arc::clone(&g1))
+                .parse_strategy(&format!("executor={exec},seed=2"))
+                .unwrap()
+                .engine(Engine::PtScotch { p: 3 })
+                .tag("g1-pts3"),
+            OrderingRequest::from_arc(Arc::clone(&g2))
+                .parse_strategy(&format!("executor={exec},seed=2"))
+                .unwrap()
+                .engine(Engine::PtScotch { p: 4 })
+                .tag("g2-pts4"),
+            OrderingRequest::from_arc(Arc::clone(&g1))
+                .parse_strategy(&format!("executor={exec},seed=5"))
+                .unwrap()
+                .engine(Engine::ParMetisLike { p: 4 })
+                .tag("g1-pm4"),
+            OrderingRequest::from_arc(Arc::clone(&g2))
+                .parse_strategy(&format!("executor={exec},seed=2"))
+                .unwrap()
+                .tag("g2-seq"),
+        ]
+    };
+    let run_batch = |exec: &str| {
+        let coord = BatchCoordinator::with_config(
+            OrderingService::new_cpu_only(),
+            ServiceConfig {
+                cache_capacity: 16,
+                max_in_flight: 4,
+            },
+        );
+        let replies = coord.submit(batch(exec));
+        assert!(replies.iter().all(|r| r.served == Served::Miss));
+        replies
+    };
+    let a = run_batch("threads");
+    let b = run_batch("threads");
+    let oracle = run_batch("sim");
+    for ((ra, rb), ro) in a.iter().zip(&b).zip(&oracle) {
+        let tag = &ra.tag;
+        let ra = ra.result.as_ref().unwrap();
+        let rb = rb.result.as_ref().unwrap();
+        let ro = ro.result.as_ref().unwrap();
+        assert_eq!(ra.ordering, rb.ordering, "{tag}: threads run-to-run");
+        assert_eq!(ra.blocks, rb.blocks, "{tag}: threads run-to-run");
+        assert_eq!(ra.ordering, ro.ordering, "{tag}: threads vs sim oracle");
+        assert_eq!(ra.blocks, ro.blocks, "{tag}: threads vs sim oracle");
+        assert_eq!(ra.bytes_sent_per_rank, ro.bytes_sent_per_rank, "{tag}: bytes");
+        assert_eq!(ra.msgs_sent_per_rank, ro.msgs_sent_per_rank, "{tag}: msgs");
+    }
+}
+
+#[test]
+fn block_ordering_is_a_postordered_forest_across_the_suite() {
+    // The solver-facing contract: for every graph family at p ∈ {1, 4}
+    // the result's `BlockOrdering` tiles 0..n with non-empty supernode
+    // ranges and its block tree is a postordered forest — every
+    // non-root block's parent comes later, so children complete before
+    // their parent when a supernodal solver walks blocks in order.
+    let svc = OrderingService::new_cpu_only();
+    for (name, g) in suite() {
+        let g = Arc::new(g);
+        for p in [1usize, 4] {
+            let engine = if p == 1 {
+                Engine::Sequential
+            } else {
+                Engine::PtScotch { p }
+            };
+            let req = OrderingRequest::from_arc(Arc::clone(&g)).engine(engine);
+            let res = svc.run(&req).unwrap_or_else(|e| panic!("{name} p={p}: {e}"));
+            let blocks = &res.blocks;
+            blocks.validate(g.n()).unwrap_or_else(|e| panic!("{name} p={p}: {e}"));
+            assert_eq!(blocks.n(), g.n(), "{name} p={p}: ranges must tile 0..n");
+            let mut roots = 0usize;
+            for b in 0..blocks.cblk {
+                let parent = blocks.tree[b];
+                if parent == usize::MAX {
+                    roots += 1;
+                } else {
+                    assert!(
+                        parent > b && parent < blocks.cblk,
+                        "{name} p={p}: block {b} has parent {parent}"
+                    );
+                }
+            }
+            assert!(roots >= 1, "{name} p={p}: forest needs at least one root");
+            for b in 0..blocks.cblk {
+                assert!(
+                    blocks.range[b] < blocks.range[b + 1],
+                    "{name} p={p}: empty block {b}"
+                );
+                for col in blocks.range[b]..blocks.range[b + 1] {
+                    assert_eq!(blocks.block_of(col), b, "{name} p={p}: col {col}");
+                }
+            }
+        }
+    }
+}

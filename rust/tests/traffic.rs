@@ -146,13 +146,13 @@ fn plans_stay_correct_across_split_subgroups_in_dnd_recursion() {
     // graphs' plans are built through the parent communicator and used
     // on the sub-communicator after the split. A misrouted plan would
     // corrupt ghost values and invalidate the permutation.
-    let svc = ptscotch::coordinator::OrderingService::new_cpu_only();
+    use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
+    let svc = OrderingService::new_cpu_only();
     for p in [3usize, 5] {
         let g = generators::grid2d(20, 20);
         let strat = ptscotch::strategy::Strategy::parse("seed=4").unwrap();
-        let rep = svc
-            .order(&g, ptscotch::coordinator::Engine::PtScotch { p }, &strat)
-            .unwrap();
+        let req = OrderingRequest::new(&g).strategy(strat).engine(Engine::PtScotch { p });
+        let rep = svc.run(&req).unwrap();
         rep.ordering
             .validate()
             .unwrap_or_else(|e| panic!("p={p}: {e}"));

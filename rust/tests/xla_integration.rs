@@ -9,10 +9,10 @@
 
 use ptscotch::graph::generators;
 use ptscotch::rng::Rng;
-use ptscotch::runtime::{load_shared, pack_ell, Bucket, DiffusionRefiner, XlaRuntime};
+use ptscotch::runtime::{load_shared, pack_ell, DiffusionRefiner, XlaRuntime};
 use ptscotch::sep::band::extract_band;
 use ptscotch::sep::diffusion::{diffusion_iterations, initial_field};
-use ptscotch::sep::{BandRefiner, SepState, P0, P1, SEP};
+use ptscotch::sep::{SepState, P0, P1, SEP};
 use std::path::PathBuf;
 
 fn artifact_dir() -> Option<PathBuf> {
@@ -225,20 +225,18 @@ fn bucket_fallback_on_oversize_band() {
 #[test]
 fn full_parallel_ordering_with_xla_refiner() {
     let dir = require_artifacts!();
-    use ptscotch::coordinator::{Engine, OrderingService};
+    use ptscotch::coordinator::{Engine, OrderingRequest, OrderingService};
     use ptscotch::strategy::Strategy;
     let svc = OrderingService::new(&dir);
     assert!(svc.has_xla());
     let strat = Strategy::parse("refiner=xla").unwrap();
     let g = generators::grid2d(24, 24);
-    let rep = svc
-        .order(&g, Engine::PtScotch { p: 4 }, &strat)
-        .expect("xla-backed parallel ordering");
+    let req = OrderingRequest::new(&g).strategy(strat).engine(Engine::PtScotch { p: 4 });
+    let rep = svc.run(&req).expect("xla-backed parallel ordering");
     rep.ordering.validate().unwrap();
     // Quality must stay in the same class as the FM-only pipeline.
-    let fm = svc
-        .order(&g, Engine::PtScotch { p: 4 }, &Strategy::default())
-        .unwrap();
+    let fm_req = OrderingRequest::new(&g).engine(Engine::PtScotch { p: 4 });
+    let fm = svc.run(&fm_req).unwrap();
     assert!(
         rep.stats.opc <= fm.stats.opc * 1.3,
         "xla refiner opc {} vs fm {}",
