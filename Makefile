@@ -51,7 +51,7 @@ tsan:
 	  PTSCOTCH_EXECUTOR=threads \
 	  cargo +nightly test -Zbuild-std \
 	    --target x86_64-unknown-linux-gnu \
-	    --release -q --test comm_stress --test traffic --test service; \
+	    --release -q --test comm_stress --test traffic --test service --test refiner_diff; \
 	else \
 	  echo "tsan: no nightly toolchain installed (rustup toolchain install nightly --component rust-src); skipping"; \
 	fi
@@ -65,16 +65,19 @@ bench:
 
 # Quick pass over the profile bench only (seconds; used by `check`/CI),
 # swept over both band-engine settings so the dispatch path stays green,
-# plus one `--json` run over both engines that regenerates the
-# machine-readable perf/quality trajectory in bench_out/BENCH_PR7.json.
-# Every smoke run doubles as the ordering-quality gate: it asserts the
-# grid3d OPC stays under the recorded ceiling per leaf method
-# (EXPERIMENTS.md §Perf.2) and that the §Perf.4 service pass runs
-# exactly one ordering cold and zero warm, so neither leaf quality nor
-# the fingerprint cache can regress silently.
+# once with the flow refiner forced so the flow-only path is exercised
+# end-to-end (no OPC gate there — the ceilings are recorded for the
+# default ladder), plus one `--json` run over both engines that
+# regenerates the machine-readable perf/quality trajectory in
+# bench_out/BENCH_PR8.json. Every un-pinned smoke run doubles as the
+# ordering-quality gate: it asserts the grid3d OPC stays under the
+# recorded ceiling per leaf method (EXPERIMENTS.md §Perf.2) and that the
+# §Perf.4 service pass runs exactly one ordering cold and zero warm, so
+# neither leaf quality nor the fingerprint cache can regress silently.
 bench-smoke:
 	cargo bench --bench perf_profile -- --smoke --engine cpu
 	cargo bench --bench perf_profile -- --smoke --engine xla
+	cargo bench --bench perf_profile -- --smoke --refine flow
 	cargo bench --bench perf_profile -- --smoke --json
 
 clean:

@@ -35,8 +35,8 @@ use crate::graph::GraphBuilder;
 use crate::rng::Rng;
 use crate::runtime::SharedRuntime;
 use crate::sep::band::BandGraph;
-use crate::sep::{multilevel_separator, BandRefiner, SepState, P0, P1, SEP};
-use crate::strategy::Strategy;
+use crate::sep::{multilevel_separator, refine_band_with_mode, BandRefiner, SepState, P0, P1, SEP};
+use crate::strategy::{SepStrategy, Strategy};
 use std::collections::HashMap;
 
 /// Compute a vertex separator of the distributed graph; returns one
@@ -238,7 +238,7 @@ pub fn band_refine_dist(
         band_refine_diffusion_dist(comm, dg, part, strat, xla, mem, &dist);
         return;
     }
-    band_refine_centralized(comm, dg, part, refiner, rng, mem, &band, &dist);
+    band_refine_centralized(comm, dg, part, &strat.sep, refiner, rng, mem, &band, &dist);
 }
 
 /// Scalable band refinement (§3.3 taken to large bands): extract the
@@ -287,13 +287,17 @@ fn band_refine_diffusion_dist(
 
 /// Multi-sequential band refinement on small bands (§3.3): centralize
 /// the band on every rank with anchor vertices standing for the
-/// excluded parts, refine every copy with a decorrelated seed, and
-/// commit the best strictly-improving result. Collective.
+/// excluded parts, refine every copy with a decorrelated seed under the
+/// `refine=` mode dispatch (so each rank also competes the
+/// deterministic flow cut against its seeded FM/diffusion result when
+/// the mode allows), and commit the best strictly-improving result.
+/// Collective.
 #[allow(clippy::too_many_arguments)]
 fn band_refine_centralized(
     comm: &Comm,
     dg: &DGraph,
     part: &mut [u8],
+    sep_strat: &SepStrategy,
     refiner: &dyn BandRefiner,
     rng: &Rng,
     mem: &MemTracker,
@@ -404,9 +408,12 @@ fn band_refine_centralized(
     };
 
     // Multi-sequential refinement: every rank refines the same band
-    // with a different seed; the best strictly-improving copy wins.
+    // with a different seed; the best strictly-improving copy wins. The
+    // `refine=` dispatch layers the flow candidate on top per rank —
+    // flow is deterministic, so it adds no collective traffic and
+    // preserves the sim ≡ threads bit-identity.
     let mut r = rng.derive(0xF17 ^ comm.global_rank() as u64);
-    refiner.refine_band(&mut bg, &mut r);
+    refine_band_with_mode(&mut bg, refiner, sep_strat, &mut r);
     debug_assert!(bg.state.validate(&bg.graph).is_ok());
     let keys = comm.allgatherv(vec![bg.state.quality_key()]);
     let winner = (0..comm.size())

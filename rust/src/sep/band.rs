@@ -5,9 +5,11 @@
 //! the separator to the band — the paper's key quality/scalability lever,
 //! with width 3 found optimal.
 
-use super::{SepState, BandRefiner, P0, P1, SEP};
+use super::diffusion::CpuDiffusionRefiner;
+use super::{flow, BandRefiner, FmRefiner, SepState, P0, P1, SEP};
 use crate::graph::{Graph, GraphBuilder};
 use crate::rng::Rng;
+use crate::strategy::{RefineMode, SepStrategy};
 
 /// A band graph: the extracted subgraph, the map back to parent vertices,
 /// the two anchor ids, the separator state restricted to the band, and
@@ -116,22 +118,59 @@ pub fn project_band(band: &BandGraph, g: &Graph, state: &mut SepState) {
     debug_assert!(state.validate(g).is_ok());
 }
 
-/// One band-refinement step: extract a band of `width`, run `refiner`,
-/// project back. Keeps the better of (refined, original) by quality key —
-/// refiners are not required to be monotone. Returns `true` if a band
-/// existed.
+/// Refine a band under the `refine=` mode of `strat` (DESIGN.md §4):
+/// `fm` and `diffusion` force the corresponding refiner regardless of
+/// the `refiner=` base object, `flow` runs only the max-flow
+/// min-vertex-cut pass, and `auto` (the default ladder) runs the base
+/// refiner and then additionally competes the flow cut whenever the
+/// band fits the `flowband=` size budget — each stage already commits
+/// only strict quality-key improvements, so the result is the best of
+/// the ladder. Shared by the sequential uncoarsening path and the
+/// distributed multi-sequential selection (`dist::dsep`).
+pub fn refine_band_with_mode(
+    band: &mut BandGraph,
+    base: &dyn BandRefiner,
+    strat: &SepStrategy,
+    rng: &mut Rng,
+) {
+    match strat.refine {
+        RefineMode::Fm => FmRefiner {
+            params: strat.fm.clone(),
+        }
+        .refine_band(band, rng),
+        RefineMode::Diffusion => CpuDiffusionRefiner {
+            fm: strat.fm.clone(),
+            ..CpuDiffusionRefiner::default()
+        }
+        .refine_band(band, rng),
+        RefineMode::Flow => {
+            flow::flow_refine_band(band);
+        }
+        RefineMode::Auto => {
+            base.refine_band(band, rng);
+            if band.graph.n() <= strat.flow_max_band {
+                flow::flow_refine_band(band);
+            }
+        }
+    }
+}
+
+/// One band-refinement step: extract a band of `strat.band_width`, run
+/// the `refine=` dispatch over `refiner`, project back. Keeps the
+/// better of (refined, original) by quality key — refiners are not
+/// required to be monotone. Returns `true` if a band existed.
 pub fn band_refine_step(
     g: &Graph,
     state: &mut SepState,
-    width: u32,
+    strat: &SepStrategy,
     refiner: &dyn BandRefiner,
     rng: &mut Rng,
 ) -> bool {
-    let Some(mut band) = extract_band(g, state, width) else {
+    let Some(mut band) = extract_band(g, state, strat.band_width) else {
         return false;
     };
     let before = state.quality_key();
-    refiner.refine_band(&mut band, rng);
+    refine_band_with_mode(&mut band, refiner, strat, rng);
     debug_assert!(band.state.validate(&band.graph).is_ok());
     if band.state.quality_key() < before {
         project_band(&band, g, state);
@@ -214,7 +253,11 @@ mod tests {
         let refiner = FmRefiner {
             params: FmParams::default(),
         };
-        let had_band = band_refine_step(&g, &mut s, 3, &refiner, &mut rng);
+        let strat = SepStrategy {
+            band_width: 3,
+            ..SepStrategy::default()
+        };
+        let had_band = band_refine_step(&g, &mut s, &strat, &refiner, &mut rng);
         assert!(had_band);
         s.validate(&g).unwrap();
         assert!(s.quality_key() <= before);
@@ -231,7 +274,11 @@ mod tests {
             params: FmParams::default(),
         };
         let mut rng = Rng::new(7);
-        band_refine_step(&g, &mut s, 1, &refiner, &mut rng);
+        let strat = SepStrategy {
+            band_width: 1,
+            ..SepStrategy::default()
+        };
+        band_refine_step(&g, &mut s, &strat, &refiner, &mut rng);
         s.validate(&g).unwrap();
         for v in s.sep_vertices() {
             assert!(dist[v] <= 1, "separator escaped the band at {v}");

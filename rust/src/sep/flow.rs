@@ -1,0 +1,814 @@
+//! Flow-based band refinement — the third band refiner (DESIGN.md §4).
+//!
+//! The band around a projected separator is small by construction, which
+//! makes an *exact* minimum vertex cut affordable there: grow a source
+//! and a sink supernode by BFS from the two anchor sides inside the band
+//! graph, run FIFO push-relabel with gap relabeling on the vertex-split
+//! network to a max flow, recover the minimum vertex cut from the
+//! residual reachability set, and pick the most-balanced minimum cut
+//! among the cuts the residual graph admits (a sweep over the strongly
+//! connected components of the residual graph in reverse topological
+//! order). The candidate is committed only when strictly better under
+//! the existing [`SepState::quality_key`], like every other refiner.
+//!
+//! The whole pass is deterministic — no RNG is consulted — so it
+//! preserves the `executor=sim` ≡ `executor=threads` bit-identity
+//! contract when dispatched from the distributed best-of-p selection.
+
+use super::band::BandGraph;
+use super::{BandRefiner, SepState, P0, P1, SEP};
+use crate::rng::Rng;
+
+/// Maximum-flow solver: FIFO push-relabel with gap relabeling, run to a
+/// full max flow (excess is drained back to the source, so the residual
+/// capacities describe a feasible maximum flow, not a preflow).
+///
+/// Arcs are stored in forward/reverse pairs (`e ^ 1` is the reverse of
+/// `e`); `cap` holds *residual* capacities after [`MaxFlow::run`].
+pub struct MaxFlow {
+    n: usize,
+    to: Vec<u32>,
+    cap: Vec<i64>,
+    adj: Vec<Vec<u32>>,
+}
+
+impl MaxFlow {
+    /// An empty network on `n` nodes.
+    pub fn new(n: usize) -> MaxFlow {
+        MaxFlow {
+            n,
+            to: Vec::new(),
+            cap: Vec::new(),
+            adj: vec![Vec::new(); n],
+        }
+    }
+
+    /// Add a directed arc `u -> v` of capacity `cap` (plus its zero-
+    /// capacity reverse arc). Returns the forward arc id.
+    pub fn add_arc(&mut self, u: usize, v: usize, cap: i64) -> usize {
+        let e = self.to.len();
+        self.to.push(v as u32);
+        self.cap.push(cap);
+        self.to.push(u as u32);
+        self.cap.push(0);
+        self.adj[u].push(e as u32);
+        self.adj[v].push(e as u32 + 1);
+        e
+    }
+
+    /// Compute the maximum `s -> t` flow and leave the residual
+    /// capacities in `cap`. FIFO push-relabel with gap relabeling;
+    /// heights are bounded by `2n`, and emptying a height bucket below
+    /// `n` lifts every node stranded above the gap straight past `n`.
+    pub fn run(&mut self, s: usize, t: usize) -> i64 {
+        let n = self.n;
+        if s == t {
+            return 0;
+        }
+        let mut h = vec![0usize; n];
+        let mut excess = vec![0i64; n];
+        let mut count = vec![0usize; 2 * n + 2];
+        let mut cur = vec![0usize; n];
+        count[0] = n - 1;
+        h[s] = n;
+        count[n] += 1;
+        let mut queue = std::collections::VecDeque::new();
+        let mut queued = vec![false; n];
+        let src_arcs = self.adj[s].clone();
+        for &e in &src_arcs {
+            let e = e as usize;
+            let c = self.cap[e];
+            if c <= 0 {
+                continue;
+            }
+            let v = self.to[e] as usize;
+            self.cap[e] = 0;
+            self.cap[e ^ 1] += c;
+            excess[v] += c;
+            excess[s] -= c;
+            if v != s && v != t && !queued[v] {
+                queued[v] = true;
+                queue.push_back(v);
+            }
+        }
+        while let Some(u) = queue.pop_front() {
+            queued[u] = false;
+            while excess[u] > 0 {
+                if cur[u] == self.adj[u].len() {
+                    // Relabel (with the gap heuristic).
+                    let old = h[u];
+                    let mut nh = 2 * n + 1;
+                    for &e in &self.adj[u] {
+                        let e = e as usize;
+                        if self.cap[e] > 0 {
+                            nh = nh.min(h[self.to[e] as usize] + 1);
+                        }
+                    }
+                    count[old] -= 1;
+                    h[u] = nh;
+                    count[nh] += 1;
+                    cur[u] = 0;
+                    if count[old] == 0 && old < n {
+                        for v in 0..n {
+                            if v != s && old < h[v] && h[v] < n {
+                                count[h[v]] -= 1;
+                                h[v] = n + 1;
+                                count[n + 1] += 1;
+                            }
+                        }
+                    }
+                    if nh == 2 * n + 1 {
+                        break; // no residual arc at all (isolated excess)
+                    }
+                    continue;
+                }
+                let e = self.adj[u][cur[u]] as usize;
+                let v = self.to[e] as usize;
+                if self.cap[e] > 0 && h[u] == h[v] + 1 {
+                    let delta = excess[u].min(self.cap[e]);
+                    self.cap[e] -= delta;
+                    self.cap[e ^ 1] += delta;
+                    excess[u] -= delta;
+                    excess[v] += delta;
+                    if v != s && v != t && !queued[v] {
+                        queued[v] = true;
+                        queue.push_back(v);
+                    }
+                } else {
+                    cur[u] += 1;
+                }
+            }
+        }
+        excess[t]
+    }
+
+    /// Nodes reachable from `src` through residual arcs (`cap > 0`).
+    /// After [`MaxFlow::run`] this is the source side of the canonical
+    /// minimum cut.
+    pub fn residual_reachable(&self, src: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n];
+        seen[src] = true;
+        let mut stack = vec![src];
+        while let Some(u) = stack.pop() {
+            for &e in &self.adj[u] {
+                let e = e as usize;
+                if self.cap[e] > 0 {
+                    let v = self.to[e] as usize;
+                    if !seen[v] {
+                        seen[v] = true;
+                        stack.push(v);
+                    }
+                }
+            }
+        }
+        seen
+    }
+
+    /// Nodes that can reach `dst` through residual arcs. After
+    /// [`MaxFlow::run`] the complement is the sink side of the widest
+    /// minimum cut.
+    pub fn residual_coreachable(&self, dst: usize) -> Vec<bool> {
+        let mut seen = vec![false; self.n];
+        seen[dst] = true;
+        let mut stack = vec![dst];
+        while let Some(v) = stack.pop() {
+            // `e` runs v -> w; its pair `e ^ 1` is the arc w -> v, so w
+            // can step to v exactly when that pair is residual.
+            for &e in &self.adj[v] {
+                let e = e as usize;
+                if self.cap[e ^ 1] > 0 {
+                    let w = self.to[e] as usize;
+                    if !seen[w] {
+                        seen[w] = true;
+                        stack.push(w);
+                    }
+                }
+            }
+        }
+        seen
+    }
+
+    /// Strongly connected components of the residual graph (arcs with
+    /// `cap > 0`), as `(component id per node, component count)`.
+    /// Component ids follow Tarjan emission order, which is reverse
+    /// topological on the condensation: every residual arc between two
+    /// distinct components points from a higher id to a lower one.
+    fn residual_sccs(&self) -> (Vec<u32>, usize) {
+        let n = self.n;
+        const UNSEEN: u32 = u32::MAX;
+        let mut index = vec![UNSEEN; n];
+        let mut low = vec![0u32; n];
+        let mut on_stack = vec![false; n];
+        let mut stack: Vec<u32> = Vec::new();
+        let mut comp = vec![UNSEEN; n];
+        let mut ncomp = 0usize;
+        let mut next = 0u32;
+        let mut call: Vec<(u32, u32)> = Vec::new();
+        for root in 0..n {
+            if index[root] != UNSEEN {
+                continue;
+            }
+            call.push((root as u32, 0));
+            while let Some(frame) = call.last_mut() {
+                let v = frame.0 as usize;
+                if index[v] == UNSEEN {
+                    index[v] = next;
+                    low[v] = next;
+                    next += 1;
+                    stack.push(v as u32);
+                    on_stack[v] = true;
+                }
+                let mut descended = false;
+                while (frame.1 as usize) < self.adj[v].len() {
+                    let e = self.adj[v][frame.1 as usize] as usize;
+                    frame.1 += 1;
+                    if self.cap[e] <= 0 {
+                        continue;
+                    }
+                    let w = self.to[e] as usize;
+                    if index[w] == UNSEEN {
+                        call.push((w as u32, 0));
+                        descended = true;
+                        break;
+                    } else if on_stack[w] {
+                        low[v] = low[v].min(index[w]);
+                    }
+                }
+                if descended {
+                    continue;
+                }
+                call.pop();
+                if let Some(parent) = call.last() {
+                    let p = parent.0 as usize;
+                    low[p] = low[p].min(low[v]);
+                }
+                if low[v] == index[v] {
+                    loop {
+                        let w = stack.pop().expect("Tarjan stack underflow") as usize;
+                        on_stack[w] = false;
+                        comp[w] = ncomp as u32;
+                        if w == v {
+                            break;
+                        }
+                    }
+                    ncomp += 1;
+                }
+            }
+        }
+        (comp, ncomp)
+    }
+}
+
+/// Terminal labels of the vertex-cut instance built over a band graph.
+const TERM0: u8 = 0;
+const TERM1: u8 = 1;
+const FREE: u8 = 2;
+
+/// Grow the source/sink supernodes by BFS from the two anchor sides:
+/// side `s`'s terminal set is its anchor, its vertices on the *farthest*
+/// BFS layer from the current separator, and any side-`s` vertex the
+/// separator cannot reach inside the band. Everything else (separator
+/// included) is free to end up on either side of the new cut. Returns
+/// `None` for degenerate bands (empty separator, or a side without any
+/// non-anchor vertex) so the caller keeps the existing state.
+fn grow_terminals(band: &BandGraph) -> Option<Vec<u8>> {
+    let g = &band.graph;
+    let n = g.n();
+    let seps = band.state.sep_vertices();
+    if seps.is_empty() {
+        return None;
+    }
+    let dist = g.multi_source_bfs(&seps, u32::MAX);
+    let mut dmax = [0u32; 2];
+    let mut side_n = [0usize; 2];
+    for v in 0..n {
+        if v == band.anchor0 || v == band.anchor1 {
+            continue;
+        }
+        let p = band.state.part[v];
+        if p == SEP {
+            continue;
+        }
+        side_n[p as usize] += 1;
+        if dist[v] != u32::MAX {
+            dmax[p as usize] = dmax[p as usize].max(dist[v]);
+        }
+    }
+    if side_n[0] == 0 || side_n[1] == 0 {
+        return None;
+    }
+    let mut term = vec![FREE; n];
+    term[band.anchor0] = TERM0;
+    term[band.anchor1] = TERM1;
+    for v in 0..n {
+        if v == band.anchor0 || v == band.anchor1 {
+            continue;
+        }
+        let p = band.state.part[v];
+        if p == SEP {
+            continue;
+        }
+        if dist[v] == u32::MAX || dist[v] == dmax[p as usize] {
+            term[v] = p;
+        }
+    }
+    Some(term)
+}
+
+/// Compute a minimum-vertex-cut separator candidate for the band:
+/// the most-balanced minimum cut between the BFS-grown terminal sides,
+/// or `None` when the band is degenerate (see [`grow_terminals`]).
+/// Deterministic; edge weights are irrelevant to a vertex cut and are
+/// ignored. The candidate always satisfies the separator invariant and
+/// its separator weight never exceeds the current one (the current
+/// separator is itself a valid terminal cut).
+pub fn flow_candidate(band: &BandGraph) -> Option<SepState> {
+    let g = &band.graph;
+    let n = g.n();
+    let term = grow_terminals(band)?;
+    // Vertex-split network: free vertex i gets nodes 2i (in) / 2i+1
+    // (out) joined by an arc of capacity vwgt; undirected band edges
+    // become arc pairs of effectively-infinite capacity, so only node
+    // arcs can saturate and the min cut is a vertex set.
+    let mut free_idx = vec![u32::MAX; n];
+    let mut free: Vec<u32> = Vec::new();
+    let mut free_wgt = 0i64;
+    for v in 0..n {
+        if term[v] == FREE {
+            free_idx[v] = free.len() as u32;
+            free.push(v as u32);
+            free_wgt += g.vwgt[v];
+        }
+    }
+    let nf = free.len();
+    let (s, t) = (2 * nf, 2 * nf + 1);
+    let big = free_wgt + 1;
+    let mut mf = MaxFlow::new(2 * nf + 2);
+    for (i, &v) in free.iter().enumerate() {
+        mf.add_arc(2 * i, 2 * i + 1, g.vwgt[v as usize]);
+    }
+    for v in 0..n {
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            match (term[v], term[u]) {
+                (FREE, FREE) => {
+                    // Each ordered pair appears once, covering both
+                    // directions of the undirected edge.
+                    let (i, j) = (free_idx[v] as usize, free_idx[u] as usize);
+                    mf.add_arc(2 * i + 1, 2 * j, big);
+                }
+                (TERM0, FREE) => {
+                    mf.add_arc(s, 2 * free_idx[u] as usize, big);
+                }
+                (FREE, TERM1) => {
+                    mf.add_arc(2 * free_idx[v] as usize + 1, t, big);
+                }
+                (TERM0, TERM1) | (TERM1, TERM0) => {
+                    debug_assert!(false, "terminal sides touch: {v} -- {u}");
+                    return None;
+                }
+                _ => {}
+            }
+        }
+    }
+    let flow = mf.run(s, t);
+    debug_assert!(flow <= band.state.sep_weight());
+
+    // Most-balanced minimum cut: any residual-closed set S with s ∈ S
+    // and t ∉ S induces a minimum cut (crossing arcs are saturated, and
+    // only node arcs can saturate). Sweep the residual SCCs in reverse
+    // topological order, greedily growing S from reach(s) toward the
+    // complement of coreach(t), and keep the prefix whose induced cut
+    // has the best quality key.
+    let reach = mf.residual_reachable(s);
+    let coreach = mf.residual_coreachable(t);
+    let (comp, ncomp) = mf.residual_sccs();
+    let nn = 2 * nf + 2;
+    let mut comp_in_s = vec![false; ncomp];
+    let mut comp_co = vec![false; ncomp];
+    for x in 0..nn {
+        let c = comp[x] as usize;
+        if reach[x] {
+            comp_in_s[c] = true;
+        }
+        if coreach[x] {
+            comp_co[c] = true;
+        }
+        debug_assert!(!(reach[x] && coreach[x]), "s reaches t in the residual");
+    }
+    // Nodes per component, grouped by counting sort on component id.
+    let mut comp_start = vec![0usize; ncomp + 1];
+    for &c in &comp {
+        comp_start[c as usize + 1] += 1;
+    }
+    for c in 0..ncomp {
+        comp_start[c + 1] += comp_start[c];
+    }
+    let mut comp_nodes = vec![0u32; nn];
+    let mut fill = comp_start.clone();
+    for x in 0..nn {
+        let c = comp[x] as usize;
+        comp_nodes[fill[c]] = x as u32;
+        fill[c] += 1;
+    }
+
+    // Per-node S membership and the induced labels. A free vertex is on
+    // the source side when its *out* node is in S (closure then forces
+    // every neighbor's in-node into S), in the cut when only its
+    // in-node is, and on the sink side otherwise. Every closed S labels
+    // the cut as exactly the saturated crossing node arcs, so each
+    // prefix of the sweep is a minimum cut of weight `flow` and the
+    // sweep only trades balance.
+    let mut node_in_s: Vec<bool> = reach[..2 * nf].to_vec();
+    let label = |node_in_s: &[bool], i: usize| -> usize {
+        if node_in_s[2 * i + 1] {
+            0
+        } else if node_in_s[2 * i] {
+            2
+        } else {
+            1
+        }
+    };
+    let mut wgts = [0i64; 3];
+    for v in 0..n {
+        match term[v] {
+            TERM0 => wgts[0] += g.vwgt[v],
+            TERM1 => wgts[1] += g.vwgt[v],
+            _ => {}
+        }
+    }
+    for (i, &v) in free.iter().enumerate() {
+        wgts[label(&node_in_s, i)] += g.vwgt[v as usize];
+    }
+    debug_assert_eq!(wgts[2], flow);
+    let key_of = |wgts: &[i64; 3]| (wgts[2], (wgts[0] - wgts[1]).abs());
+    let mut best_key = key_of(&wgts);
+    let mut best_len = 0usize;
+    let mut added: Vec<u32> = Vec::new();
+    // One pass suffices: Tarjan emission order guarantees every
+    // residual out-neighbor component of c has a smaller id, so its
+    // membership is already decided when c is considered.
+    for c in 0..ncomp {
+        if comp_in_s[c] || comp_co[c] {
+            continue;
+        }
+        let nodes = &comp_nodes[comp_start[c]..comp_start[c + 1]];
+        let addable = nodes.iter().all(|&x| {
+            mf.adj[x as usize].iter().all(|&e| {
+                let e = e as usize;
+                if mf.cap[e] <= 0 {
+                    return true;
+                }
+                let d = comp[mf.to[e] as usize] as usize;
+                d == c || comp_in_s[d]
+            })
+        });
+        if !addable {
+            continue;
+        }
+        comp_in_s[c] = true;
+        for &x in nodes {
+            let x = x as usize;
+            debug_assert!(x < 2 * nf, "s/t joined a growable SCC");
+            let i = x / 2;
+            let v = free[i] as usize;
+            wgts[label(&node_in_s, i)] -= g.vwgt[v];
+            node_in_s[x] = true;
+            wgts[label(&node_in_s, i)] += g.vwgt[v];
+        }
+        added.push(c as u32);
+        debug_assert_eq!(wgts[2], flow);
+        let key = key_of(&wgts);
+        if key < best_key {
+            best_key = key;
+            best_len = added.len();
+        }
+    }
+
+    // Replay the best prefix from the canonical cut.
+    node_in_s.copy_from_slice(&reach[..2 * nf]);
+    for &c in &added[..best_len] {
+        let c = c as usize;
+        for &x in &comp_nodes[comp_start[c]..comp_start[c + 1]] {
+            node_in_s[x as usize] = true;
+        }
+    }
+    let mut part = vec![SEP; n];
+    for v in 0..n {
+        match term[v] {
+            TERM0 => part[v] = P0,
+            TERM1 => part[v] = P1,
+            _ => {
+                part[v] = match label(&node_in_s, free_idx[v] as usize) {
+                    0 => P0,
+                    2 => SEP,
+                    _ => P1,
+                }
+            }
+        }
+    }
+    let cand = SepState::from_parts(g, part);
+    debug_assert!(cand.validate(g).is_ok());
+    debug_assert_eq!(cand.sep_weight(), flow);
+    Some(cand)
+}
+
+/// Run the flow pass on a band and commit the candidate iff it is
+/// strictly better under the quality key. Returns whether the state
+/// changed.
+pub fn flow_refine_band(band: &mut BandGraph) -> bool {
+    let Some(cand) = flow_candidate(band) else {
+        return false;
+    };
+    if cand.quality_key() < band.state.quality_key() {
+        band.state = cand;
+        true
+    } else {
+        false
+    }
+}
+
+/// [`BandRefiner`] adapter for the flow pass (`refine=flow`); ignores
+/// the RNG — the pass is fully deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct FlowRefiner;
+
+impl BandRefiner for FlowRefiner {
+    fn refine_band(&self, band: &mut BandGraph, _rng: &mut Rng) {
+        flow_refine_band(band);
+    }
+
+    fn name(&self) -> &'static str {
+        "flow"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, Graph, GraphBuilder};
+    use crate::sep::band::extract_band;
+
+    #[test]
+    fn maxflow_path_network() {
+        // s -> a (5) -> b (3) -> t (7): bottleneck 3.
+        let mut mf = MaxFlow::new(4);
+        mf.add_arc(0, 1, 5);
+        mf.add_arc(1, 2, 3);
+        mf.add_arc(2, 3, 7);
+        assert_eq!(mf.run(0, 3), 3);
+        let reach = mf.residual_reachable(0);
+        let coreach = mf.residual_coreachable(3);
+        // The a -> b arc is the saturated cut.
+        assert_eq!(reach, vec![true, true, false, false]);
+        assert_eq!(coreach, vec![false, false, true, true]);
+    }
+
+    #[test]
+    fn maxflow_grid_network() {
+        // Two s->t paths of bottlenecks 2 and 4, plus a wide cross arc
+        // 1 -> 4 that lets 1's surplus bypass its own bottleneck: the
+        // min cut is {1 -> 2 (2), 4 -> t (10)}, so the max flow is 12.
+        let mut mf = MaxFlow::new(6);
+        let (s, t) = (0, 5);
+        mf.add_arc(s, 1, 10);
+        mf.add_arc(1, 2, 2);
+        mf.add_arc(2, t, 10);
+        mf.add_arc(s, 3, 10);
+        mf.add_arc(3, 4, 4);
+        mf.add_arc(4, t, 10);
+        mf.add_arc(1, 4, 10);
+        assert_eq!(mf.run(s, t), 12);
+    }
+
+    #[test]
+    fn maxflow_disconnected_is_zero() {
+        let mut mf = MaxFlow::new(4);
+        mf.add_arc(0, 1, 5);
+        mf.add_arc(2, 3, 5);
+        assert_eq!(mf.run(0, 3), 0);
+        assert!(mf.residual_reachable(0)[1]);
+        assert!(!mf.residual_reachable(0)[3]);
+    }
+
+    #[test]
+    fn gap_relabeling_terminates_on_staircase() {
+        // Adversarial staircase: many parallel high-capacity stubs feed
+        // one unit bottleneck, so almost all preflow must climb back
+        // above n to return to the source — the regime gap relabeling
+        // short-circuits. The test passing at all is the termination
+        // assertion; the value pins correctness.
+        let k = 60;
+        let mut mf = MaxFlow::new(k + 3);
+        let (s, b, t) = (0, k + 1, k + 2);
+        for i in 0..k {
+            mf.add_arc(s, 1 + i, 7);
+            mf.add_arc(1 + i, b, 7);
+        }
+        mf.add_arc(b, t, 1);
+        assert_eq!(mf.run(s, t), 1);
+    }
+
+    #[test]
+    fn maxflow_descending_staircase_value() {
+        // Chain with strictly descending capacities k, k-1, …, 1: every
+        // relabel wave walks the whole chain; flow = 1.
+        let k = 40;
+        let mut mf = MaxFlow::new(k + 1);
+        for i in 0..k {
+            mf.add_arc(i, i + 1, (k - i) as i64);
+        }
+        assert_eq!(mf.run(0, k), 1);
+    }
+
+    /// Band over the whole of `g` for a given part labeling.
+    fn whole_band(g: &Graph, part: Vec<u8>) -> BandGraph {
+        let state = SepState::from_parts(g, part);
+        state.validate(g).unwrap();
+        extract_band(g, &state, u32::MAX - 1).unwrap()
+    }
+
+    #[test]
+    fn flow_candidate_on_path_band_finds_unit_cut() {
+        // Unit path, separator parked off-center at v2: every single
+        // vertex is a weight-1 cut; flow must find weight 1.
+        let g = generators::path(9, 1);
+        let mut part = vec![P1; 9];
+        part[0] = P0;
+        part[1] = P0;
+        part[2] = SEP;
+        let band = whole_band(&g, part);
+        let cand = flow_candidate(&band).unwrap();
+        cand.validate(&band.graph).unwrap();
+        assert_eq!(cand.sep_weight(), 1);
+    }
+
+    #[test]
+    fn most_balanced_selection_prefers_center_cut() {
+        // All min cuts on the unit path have weight 1; the most-balanced
+        // one is the middle vertex, far from the starting separator.
+        let g = generators::path(9, 1);
+        let mut part = vec![P1; 9];
+        part[0] = P0;
+        part[1] = P0;
+        part[2] = SEP;
+        let band = whole_band(&g, part);
+        let cand = flow_candidate(&band).unwrap();
+        assert_eq!(cand.sep_weight(), 1);
+        assert_eq!(cand.imbalance(), 0, "parts: {:?}", cand.part);
+        assert_eq!(cand.part[4], SEP);
+    }
+
+    #[test]
+    fn flow_candidate_respects_vertex_weights() {
+        // Heavy separator vertex: the min cut dodges it.
+        let mut b = GraphBuilder::new(5);
+        for v in 0..4 {
+            b.add_edge(v, v + 1);
+        }
+        b.set_vwgt(2, 5);
+        let g = b.build().unwrap();
+        let band = whole_band(&g, vec![P0, P0, SEP, P1, P1]);
+        let cand = flow_candidate(&band).unwrap();
+        cand.validate(&band.graph).unwrap();
+        assert_eq!(cand.sep_weight(), 1);
+        assert_ne!(cand.part[2], SEP);
+    }
+
+    #[test]
+    fn flow_candidate_on_grid_band() {
+        // 7×5 grid, mid-column separator, whole-graph band: the min
+        // vertex cut between the outer columns is one full column (5),
+        // and the balanced choice is the middle column.
+        let g = generators::grid2d(7, 5);
+        let part = generators::column_separator_part(7, 5, 3, 1);
+        let band = whole_band(&g, part);
+        let cand = flow_candidate(&band).unwrap();
+        cand.validate(&band.graph).unwrap();
+        assert_eq!(cand.sep_weight(), 5);
+        assert_eq!(cand.imbalance(), 0);
+    }
+
+    #[test]
+    fn flow_candidate_on_clique_bridge() {
+        // Two 10-cliques joined through an articulation vertex; the
+        // starting separator is fat ({x, a0}), the min cut is width 1.
+        let n = 21; // 0..10 clique A, 10..20 clique B, 20 = bridge x
+        let mut b = GraphBuilder::new(n);
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                b.add_edge(i, j);
+                b.add_edge(10 + i, 10 + j);
+            }
+        }
+        b.add_edge(0, 20);
+        b.add_edge(10, 20);
+        let g = b.build().unwrap();
+        let mut part = vec![P0; n];
+        for v in 10..20 {
+            part[v] = P1;
+        }
+        part[20] = SEP;
+        part[0] = SEP; // fatten the separator with a0
+        let band = whole_band(&g, part);
+        assert_eq!(band.state.sep_weight(), 2);
+        let cand = flow_candidate(&band).unwrap();
+        cand.validate(&band.graph).unwrap();
+        assert_eq!(cand.sep_weight(), 1);
+        assert_eq!(cand.imbalance(), 0);
+    }
+
+    #[test]
+    fn flow_candidate_on_disconnected_band() {
+        // Two disjoint paths with a redundant separator vertex on each:
+        // the components are already disconnected, so the min cut is
+        // empty and the whole separator weight (2) is recoverable.
+        let mut b = GraphBuilder::new(8);
+        for v in 0..3 {
+            b.add_edge(v, v + 1);
+        }
+        for v in 4..7 {
+            b.add_edge(v, v + 1);
+        }
+        let g = b.build().unwrap();
+        let band = whole_band(&g, vec![P0, P0, P0, SEP, SEP, P1, P1, P1]);
+        let cand = flow_candidate(&band).unwrap();
+        cand.validate(&band.graph).unwrap();
+        assert_eq!(cand.sep_weight(), 0);
+    }
+
+    #[test]
+    fn anchors_and_terminals_stay_on_their_sides() {
+        let g = generators::grid2d(9, 5);
+        let part = generators::column_separator_part(9, 5, 4, 1);
+        let state = SepState::from_parts(&g, part);
+        let band = extract_band(&g, &state, 2).unwrap();
+        let term = grow_terminals(&band).unwrap();
+        assert_eq!(term[band.anchor0], TERM0);
+        assert_eq!(term[band.anchor1], TERM1);
+        let cand = flow_candidate(&band).unwrap();
+        assert_eq!(cand.part[band.anchor0], P0);
+        assert_eq!(cand.part[band.anchor1], P1);
+        for v in 0..band.band_n() {
+            if term[v] != FREE {
+                assert_eq!(cand.part[v], term[v], "terminal {v} switched sides");
+            }
+        }
+    }
+
+    #[test]
+    fn flow_refine_band_commits_only_strict_improvements() {
+        // Unit path with the separator already on the centered min cut:
+        // nothing strictly better exists, so no commit.
+        let g = generators::path(9, 1);
+        let mut part = vec![P0; 9];
+        part[4] = SEP;
+        for v in 5..9 {
+            part[v] = P1;
+        }
+        let mut band = whole_band(&g, part);
+        let before = band.state.part.clone();
+        assert!(!flow_refine_band(&mut band));
+        assert_eq!(band.state.part, before);
+
+        // Off-center separator: the balanced unit cut wins and commits.
+        let mut part = vec![P1; 9];
+        part[0] = P0;
+        part[1] = P0;
+        part[2] = SEP;
+        let mut band = whole_band(&g, part);
+        assert!(flow_refine_band(&mut band));
+        assert_eq!(band.state.quality_key(), (1, 0));
+    }
+
+    #[test]
+    fn degenerate_bands_yield_no_candidate() {
+        // A band whose part-1 side is only the anchor: bail out.
+        let g = generators::path(4, 1);
+        let state = SepState::from_parts(&g, vec![P0, P0, P0, SEP]);
+        let band = extract_band(&g, &state, u32::MAX - 1).unwrap();
+        assert!(flow_candidate(&band).is_none());
+    }
+
+    #[test]
+    fn flow_never_worse_on_random_meshes() {
+        use crate::sep::initial::greedy_graph_growing;
+        for seed in 1..6u64 {
+            let g = generators::irregular_mesh(13, 11, seed);
+            let mut rng = Rng::new(seed);
+            let state = greedy_graph_growing(&g, 3, &mut rng);
+            for width in [1u32, 2, 3] {
+                let Some(mut band) = extract_band(&g, &state, width) else {
+                    continue;
+                };
+                let before = band.state.quality_key();
+                flow_refine_band(&mut band);
+                band.state.validate(&band.graph).unwrap();
+                assert!(
+                    band.state.quality_key() <= before,
+                    "flow degraded the band: seed {seed} width {width}"
+                );
+            }
+        }
+    }
+}

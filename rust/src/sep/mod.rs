@@ -5,12 +5,14 @@
 pub mod band;
 pub mod coarsen;
 pub mod diffusion;
+pub mod flow;
 pub mod fm;
 pub mod initial;
 pub mod multilevel;
 
-pub use band::{extract_band, BandGraph};
+pub use band::{extract_band, refine_band_with_mode, BandGraph};
 pub use coarsen::{coarsen_hem, Coarsening};
+pub use flow::{flow_candidate, flow_refine_band, FlowRefiner};
 pub use fm::{fm_refine, FmParams};
 pub use multilevel::multilevel_separator;
 

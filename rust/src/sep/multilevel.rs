@@ -65,7 +65,7 @@ pub fn multilevel_separator(
     for li in (0..levels.len()).rev() {
         let fine: &Graph = if li == 0 { g } else { &levels[li - 1].coarse };
         state = project_state(fine, &state, &levels[li].map);
-        if !band_refine_step(fine, &mut state, strat.band_width, refiner, rng) {
+        if !band_refine_step(fine, &mut state, strat, refiner, rng) {
             // Empty separator (disconnected component split): nothing to
             // refine at this level.
             continue;

@@ -62,6 +62,46 @@ pub enum BandEngine {
     Xla,
 }
 
+/// Which algorithm refines each extracted band — the `refine=` strategy
+/// knob, dispatched by `sep::band::refine_band_with_mode` at every
+/// uncoarsening level, sequential and distributed alike (DESIGN.md §4).
+///
+/// Orthogonal to [`RefinerKind`] (`refiner=`), which picks the *base*
+/// refiner object (FM vs CPU/XLA diffusion): `refine=` decides whether
+/// that base refiner runs at all and whether the max-flow min-vertex-cut
+/// pass (`sep::flow`) competes with it.
+///
+/// ```
+/// use ptscotch::strategy::{RefineMode, Strategy};
+///
+/// assert_eq!(Strategy::default().sep.refine, RefineMode::Auto);
+/// assert_eq!(
+///     Strategy::parse("refine=flow").unwrap().sep.refine,
+///     RefineMode::Flow,
+/// );
+/// assert_eq!(
+///     Strategy::parse("refine=diffusion").unwrap().sep.refine,
+///     RefineMode::Diffusion,
+/// );
+/// assert!(Strategy::parse("refine=simulated-annealing").is_err());
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RefineMode {
+    /// Sequential vertex FM only, ignoring the `refiner=` base choice.
+    Fm,
+    /// CPU diffusion smoothing + FM polish only.
+    Diffusion,
+    /// The max-flow min-vertex-cut pass (`sep::flow`) only, with no FM
+    /// polish and no band-size budget — committed, like every refiner,
+    /// only when strictly better under the quality key.
+    Flow,
+    /// Today's ladder: run the `refiner=` base refiner, then also try
+    /// the flow cut whenever the band fits the `flowband=` size budget
+    /// and keep whichever result wins the quality key.
+    #[default]
+    Auto,
+}
+
 /// Parameters of the multilevel separator computation.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SepStrategy {
@@ -75,6 +115,12 @@ pub struct SepStrategy {
     pub ggg_tries: usize,
     /// FM refinement parameters.
     pub fm: FmParams,
+    /// Band refinement mode (`refine=fm|diffusion|flow|auto`).
+    pub refine: RefineMode,
+    /// Band-size budget (vertex count, anchors included) under which
+    /// [`RefineMode::Auto`] tries the flow cut (`flowband=`). Forced
+    /// `refine=flow` ignores the budget.
+    pub flow_max_band: usize,
 }
 
 impl Default for SepStrategy {
@@ -85,6 +131,8 @@ impl Default for SepStrategy {
             band_width: 3,
             ggg_tries: 4,
             fm: FmParams::default(),
+            refine: RefineMode::default(),
+            flow_max_band: 30_000,
         }
     }
 }
@@ -253,6 +301,8 @@ pub const VALID_KEYS: &[&str] = &[
     "maxsep",
     "leafmethod",
     "refiner",
+    "refine",
+    "flowband",
     "engine",
     "executor",
     "folddup",
@@ -291,7 +341,11 @@ impl Strategy {
                         .parse()
                         .map_err(|_| Error::InvalidStrategy(format!("bad seed {v}")))?
                 }
-                "band" => s.sep.band_width = parse_usize(v)? as u32,
+                "band" => {
+                    s.sep.band_width = u32::try_from(parse_usize(v)?).map_err(|_| {
+                        Error::InvalidStrategy(format!("band width {v} exceeds u32"))
+                    })?
+                }
                 "coarse" => s.sep.coarse_target = parse_usize(v)?,
                 "minratio" => {
                     s.sep.min_coarsen_ratio = v
@@ -359,6 +413,20 @@ impl Strategy {
                         }
                     }
                 }
+                "refine" => {
+                    s.sep.refine = match v {
+                        "fm" => RefineMode::Fm,
+                        "diffusion" => RefineMode::Diffusion,
+                        "flow" => RefineMode::Flow,
+                        "auto" => RefineMode::Auto,
+                        _ => {
+                            return Err(Error::InvalidStrategy(format!(
+                                "unknown refine mode {v} (fm|diffusion|flow|auto)"
+                            )))
+                        }
+                    }
+                }
+                "flowband" => s.sep.flow_max_band = parse_usize(v)?,
                 _ => {
                     return Err(Error::InvalidStrategy(format!(
                         "unknown key {k} (valid keys: {})",
@@ -433,6 +501,12 @@ impl fmt::Display for Strategy {
             RefinerKind::DiffusionCpu => "diffcpu",
             RefinerKind::DiffusionXla => "xla",
         };
+        let refine = match self.sep.refine {
+            RefineMode::Fm => "fm",
+            RefineMode::Diffusion => "diffusion",
+            RefineMode::Flow => "flow",
+            RefineMode::Auto => "auto",
+        };
         let engine = match self.dist.band_engine {
             BandEngine::Auto => "auto",
             BandEngine::Cpu => "cpu",
@@ -441,7 +515,8 @@ impl fmt::Display for Strategy {
         write!(
             f,
             "seed={},band={},coarse={},minratio={},ggg={},passes={},neg={},eps={},\
-             leaf={},maxsep={},leafmethod={leafmethod},refiner={refiner},engine={engine},\
+             leaf={},maxsep={},leafmethod={leafmethod},refiner={refiner},refine={refine},\
+             flowband={},engine={engine},\
              executor={executor},folddup={},foldthresh={},overlap={},rounds={},\
              maxband={},sweeps={}",
             self.seed,
@@ -454,6 +529,7 @@ impl fmt::Display for Strategy {
             self.sep.fm.balance_eps,
             self.nd.leaf_threshold,
             self.nd.max_sep_fraction,
+            self.sep.flow_max_band,
             u8::from(self.dist.fold_dup),
             self.dist.folddup_threshold,
             u8::from(self.dist.overlap_folds),
@@ -555,6 +631,37 @@ mod tests {
     }
 
     #[test]
+    fn parse_refine_mode_knob() {
+        assert_eq!(Strategy::default().sep.refine, RefineMode::Auto);
+        for (spec, want) in [
+            ("refine=fm", RefineMode::Fm),
+            ("refine=diffusion", RefineMode::Diffusion),
+            ("refine=flow", RefineMode::Flow),
+            ("refine=auto", RefineMode::Auto),
+        ] {
+            assert_eq!(Strategy::parse(spec).unwrap().sep.refine, want, "{spec}");
+        }
+        assert!(Strategy::parse("refine=annealing").is_err());
+    }
+
+    #[test]
+    fn parse_flowband_knob() {
+        assert_eq!(Strategy::default().sep.flow_max_band, 30_000);
+        let s = Strategy::parse("flowband=128").unwrap();
+        assert_eq!(s.sep.flow_max_band, 128);
+        assert!(Strategy::parse("flowband=tiny").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_band_width_overflow() {
+        // `band=` used to truncate silently through `as u32`; it must
+        // reject values that do not fit instead.
+        assert!(Strategy::parse("band=4294967295").is_ok());
+        assert!(Strategy::parse("band=4294967296").is_err());
+        assert!(Strategy::parse("band=99999999999").is_err());
+    }
+
+    #[test]
     fn parse_empty_is_default() {
         let s = Strategy::parse("").unwrap();
         assert_eq!(s.sep.coarse_target, Strategy::default().sep.coarse_target);
@@ -589,6 +696,66 @@ mod tests {
             let back = Strategy::parse(&canon).unwrap();
             assert_eq!(back, s, "{spec} -> {canon}");
             assert_eq!(back.to_string(), canon, "{spec}");
+        }
+    }
+
+    #[test]
+    fn every_knob_round_trips_off_default() {
+        // Exhaustive per-knob enumeration: one off-default sample per
+        // VALID_KEYS entry. A future knob added to VALID_KEYS without a
+        // row here fails the coverage assertion below, so no knob can
+        // silently skip the Display→parse→Display contract.
+        let samples: &[(&str, &str)] = &[
+            ("seed", "9"),
+            ("band", "5"),
+            ("coarse", "60"),
+            ("minratio", "0.7"),
+            ("ggg", "2"),
+            ("passes", "3"),
+            ("neg", "10"),
+            ("eps", "0.1"),
+            ("leaf", "40"),
+            ("maxsep", "0.4"),
+            ("leafmethod", "mmd"),
+            ("refiner", "diffcpu"),
+            ("refine", "flow"),
+            ("flowband", "777"),
+            ("engine", "cpu"),
+            ("executor", "threads"),
+            ("folddup", "0"),
+            ("foldthresh", "50"),
+            ("overlap", "0"),
+            ("rounds", "3"),
+            ("maxband", "500"),
+            ("sweeps", "4"),
+        ];
+        let covered: Vec<&str> = samples.iter().map(|(k, _)| *k).collect();
+        assert_eq!(
+            covered, VALID_KEYS,
+            "every VALID_KEYS knob needs an off-default sample, in order"
+        );
+        let default_canon = Strategy::default().to_string();
+        for &(k, v) in samples {
+            let spec = format!("{k}={v}");
+            let s = Strategy::parse(&spec).unwrap();
+            let canon = s.to_string();
+            // The sample value survives into the canonical form…
+            assert!(canon.contains(&spec), "{spec} lost in canonical {canon}");
+            // …actually moved a knob off its default…
+            assert_ne!(canon, default_canon, "{spec} did not change the strategy");
+            // …and the canonical form is a parse fixed point.
+            let back = Strategy::parse(&canon).unwrap();
+            assert_eq!(back, s, "{spec} -> {canon}");
+            assert_eq!(back.to_string(), canon, "{spec}");
+        }
+        // The canonical form lists every knob in VALID_KEYS order.
+        let mut pos = 0;
+        for k in VALID_KEYS {
+            let needle = format!("{k}=");
+            let at = default_canon[pos..]
+                .find(&needle)
+                .unwrap_or_else(|| panic!("canonical form misses {k}: {default_canon}"));
+            pos += at + needle.len();
         }
     }
 

@@ -1,0 +1,223 @@
+//! Refiner-differential property suite for the flow-based band refiner
+//! (`sep::flow`, DESIGN.md §4): across the generator suite and rank
+//! counts p ∈ {1, 2, 4, 5}, (a) every flow cut is a *valid separator* —
+//! removing it genuinely disconnects the two sides, proven by
+//! reachability, not just by edge inspection — (b) the flow-refined
+//! quality key is never worse than the unrefined projection it started
+//! from, and (c) `refine=auto` (and forced `refine=flow`) stays
+//! bit-identical between `executor=sim` and `executor=threads` — the
+//! flow pass is deterministic and adds no collective traffic, so it
+//! must not open a schedule dependence in the best-of-p selection.
+
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingResult, OrderingService};
+use ptscotch::graph::{generators, Graph};
+use ptscotch::rng::Rng;
+use ptscotch::sep::initial::greedy_graph_growing;
+use ptscotch::sep::{
+    extract_band, flow_candidate, flow_refine_band, multilevel_separator, FmRefiner, SepState, P0,
+    P1, SEP,
+};
+use ptscotch::strategy::{SepStrategy, Strategy};
+
+/// The shared generator suite of the differential tests.
+fn suite() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("grid2d", generators::grid2d(16, 16)),
+        ("grid3d", generators::grid3d(7, 7, 7)),
+        ("irregular", generators::irregular_mesh(14, 14, 7)),
+        ("cage", generators::cage_like(700, 8, 2)),
+        ("thread", generators::thread_like(260, 60, 4)),
+    ]
+}
+
+/// The rank counts the end-to-end properties sweep.
+const RANK_COUNTS: [usize; 4] = [1, 2, 4, 5];
+
+/// Prove the separator property by reachability: walking the graph from
+/// the part-0 side without ever stepping on a separator vertex must
+/// stay inside part 0. This is the "removing the cut disconnects the
+/// two sides" statement itself, independent of `SepState::validate`'s
+/// edge scan.
+fn assert_separator_disconnects(g: &Graph, state: &SepState, ctx: &str) {
+    let mut seen = vec![false; g.n()];
+    let mut stack: Vec<usize> = Vec::new();
+    for v in 0..g.n() {
+        if state.part[v] == P0 {
+            seen[v] = true;
+            stack.push(v);
+        }
+    }
+    while let Some(v) = stack.pop() {
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if state.part[u] == SEP {
+                continue;
+            }
+            assert_eq!(
+                state.part[u],
+                P0,
+                "{ctx}: part-1 vertex {u} reachable from part 0 without crossing the separator"
+            );
+            if !seen[u] {
+                seen[u] = true;
+                stack.push(u);
+            }
+        }
+    }
+}
+
+/// Order `g` on `p` ranks with extra strategy knobs under one executor.
+fn order_on(svc: &OrderingService, g: &Graph, p: usize, exec: &str, knobs: &str) -> OrderingResult {
+    let spec = format!("executor={exec},seed=11,{knobs}");
+    let strat = Strategy::parse(spec.trim_end_matches(',')).unwrap();
+    let req = OrderingRequest::new(g).strategy(strat).engine(Engine::PtScotch { p });
+    svc.run(&req).unwrap()
+}
+
+/// Assert every deterministic field of two results matches.
+fn assert_reports_identical(a: &OrderingResult, b: &OrderingResult, ctx: &str) {
+    assert_eq!(a.ordering.perm, b.ordering.perm, "{ctx}: perm");
+    assert_eq!(a.ordering.iperm, b.ordering.iperm, "{ctx}: iperm");
+    assert_eq!(a.blocks, b.blocks, "{ctx}: blocks");
+    assert_eq!(a.bytes_sent_per_rank, b.bytes_sent_per_rank, "{ctx}: bytes");
+    assert_eq!(a.msgs_sent_per_rank, b.msgs_sent_per_rank, "{ctx}: msgs");
+    assert_eq!(a.peak_mem_per_rank, b.peak_mem_per_rank, "{ctx}: peak mem");
+    assert_eq!(a.stats.nnz, b.stats.nnz, "{ctx}: nnz");
+    assert_eq!(a.stats.opc, b.stats.opc, "{ctx}: opc");
+    assert_eq!(a.stats.tree_height, b.stats.tree_height, "{ctx}: tree height");
+}
+
+#[test]
+fn flow_cuts_are_valid_separators_on_multilevel_bands() {
+    // Property (a) at the band level, where the flow pass actually
+    // runs: for bands extracted around real multilevel separators at
+    // every paper-relevant width, the flow candidate is a valid
+    // separator state whose removal disconnects the sides, and its cut
+    // weight never exceeds the separator it started from.
+    let strat = SepStrategy::default();
+    let refiner = FmRefiner::default();
+    for (name, g) in &suite() {
+        for seed in [1u64, 2] {
+            let mut rng = Rng::new(seed);
+            let state = multilevel_separator(g, &strat, &refiner, &mut rng);
+            state.validate(g).unwrap();
+            for width in [1u32, 2, 3] {
+                let Some(band) = extract_band(g, &state, width) else {
+                    continue;
+                };
+                let ctx = format!("{name} seed={seed} width={width}");
+                let Some(cand) = flow_candidate(&band) else {
+                    continue;
+                };
+                cand.validate(&band.graph)
+                    .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                assert_separator_disconnects(&band.graph, &cand, &ctx);
+                assert!(
+                    cand.sep_weight() <= band.state.sep_weight(),
+                    "{ctx}: flow cut {} above the current separator {}",
+                    cand.sep_weight(),
+                    band.state.sep_weight()
+                );
+                // Anchors never end up in the cut (they are terminals).
+                assert_eq!(cand.part[band.anchor0], P0, "{ctx}: anchor0 moved");
+                assert_eq!(cand.part[band.anchor1], P1, "{ctx}: anchor1 moved");
+            }
+        }
+    }
+}
+
+#[test]
+fn flow_refinement_never_worse_than_unrefined_projection() {
+    // Property (b): starting from *unrefined* initial separators (the
+    // shape a projection has before any band pass), the committed flow
+    // result never degrades the quality key, and keeps the state valid.
+    for (name, g) in &suite() {
+        for seed in [3u64, 4, 5] {
+            let mut rng = Rng::new(seed);
+            let state = greedy_graph_growing(g, 2, &mut rng);
+            state.validate(g).unwrap();
+            for width in [1u32, 3] {
+                let Some(mut band) = extract_band(g, &state, width) else {
+                    continue;
+                };
+                let before = band.state.quality_key();
+                flow_refine_band(&mut band);
+                band.state.validate(&band.graph).unwrap();
+                assert!(
+                    band.state.quality_key() <= before,
+                    "{name} seed={seed} width={width}: flow degraded {:?} -> {:?}",
+                    before,
+                    band.state.quality_key()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_flow_orderings_valid_across_suite_and_rank_counts() {
+    // Property (a) end-to-end: `refine=flow` replaces every band pass
+    // (sequential levels and the distributed best-of-p alike) with the
+    // flow cut alone; the full pipeline must still produce valid
+    // permutations and block trees everywhere.
+    let svc = OrderingService::new_cpu_only();
+    for (name, g) in &suite() {
+        for p in RANK_COUNTS {
+            let res = order_on(&svc, g, p, "sim", "refine=flow");
+            res.ordering
+                .validate()
+                .unwrap_or_else(|e| panic!("{name} p={p}: {e}"));
+            res.blocks
+                .validate(g.n())
+                .unwrap_or_else(|e| panic!("{name} p={p}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn refine_auto_bit_identical_across_executors() {
+    // Property (c): the default ladder with the flow stage on top must
+    // not introduce any schedule dependence — sim and threads agree
+    // bit-for-bit on every deterministic field at every rank count.
+    let svc = OrderingService::new_cpu_only();
+    for (name, g) in &suite() {
+        for p in RANK_COUNTS {
+            let sim = order_on(&svc, g, p, "sim", "refine=auto");
+            let thr = order_on(&svc, g, p, "threads", "refine=auto");
+            assert_reports_identical(&sim, &thr, &format!("{name} p={p} refine=auto"));
+        }
+    }
+}
+
+#[test]
+fn forced_flow_bit_identical_across_executors() {
+    // Forced flow exercises the distributed best-of-p selection with a
+    // fully deterministic refiner: every rank computes the same cut, so
+    // the winner pick must agree across fabrics too.
+    let svc = OrderingService::new_cpu_only();
+    let graphs: Vec<(&'static str, Graph)> = vec![
+        ("grid3d", generators::grid3d(7, 7, 7)),
+        ("irregular", generators::irregular_mesh(12, 12, 3)),
+    ];
+    for (name, g) in &graphs {
+        for p in [2usize, 5] {
+            let sim = order_on(&svc, g, p, "sim", "refine=flow");
+            let thr = order_on(&svc, g, p, "threads", "refine=flow");
+            assert_reports_identical(&sim, &thr, &format!("{name} p={p} refine=flow"));
+        }
+    }
+}
+
+#[test]
+fn zero_flow_budget_reduces_auto_to_the_base_refiner() {
+    // `flowband=0` starves the auto ladder of its flow stage, which
+    // must make it bit-identical to forcing the base FM refiner — the
+    // budget knob really is the only thing gating the flow pass.
+    let svc = OrderingService::new_cpu_only();
+    let g = generators::irregular_mesh(14, 14, 7);
+    for p in [2usize, 5] {
+        let starved = order_on(&svc, &g, p, "sim", "refine=auto,flowband=0");
+        let fm = order_on(&svc, &g, p, "sim", "refine=fm");
+        assert_reports_identical(&starved, &fm, &format!("p={p} flowband=0 vs fm"));
+    }
+}
