@@ -9,7 +9,7 @@
 # the stub cannot execute them. Only run `test-xla` after wiring the
 # real `xla` crate into Cargo.toml (see README.md).
 
-.PHONY: artifacts check test test-threads test-xla tsan bench bench-smoke clean
+.PHONY: artifacts check test test-threads test-xla tsan bench bench-smoke fault-smoke clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -26,6 +26,7 @@ check:
 	cargo test --release --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 	$(MAKE) bench-smoke
+	$(MAKE) fault-smoke
 
 test:
 	cargo test --release -q
@@ -51,7 +52,8 @@ tsan:
 	  PTSCOTCH_EXECUTOR=threads \
 	  cargo +nightly test -Zbuild-std \
 	    --target x86_64-unknown-linux-gnu \
-	    --release -q --test comm_stress --test traffic --test service --test refiner_diff; \
+	    --release -q --test comm_stress --test traffic --test service \
+	    --test refiner_diff --test fault_injection; \
 	else \
 	  echo "tsan: no nightly toolchain installed (rustup toolchain install nightly --component rust-src); skipping"; \
 	fi
@@ -79,6 +81,18 @@ bench-smoke:
 	cargo bench --bench perf_profile -- --smoke --engine xla
 	cargo bench --bench perf_profile -- --smoke --refine flow
 	cargo bench --bench perf_profile -- --smoke --json
+
+# Fault-injection smoke (DESIGN.md §3.2): a scripted panic at rank 0's
+# 60th transport op must make the CLI *fail* — cleanly, with a
+# structured error, on both executors. The `!` inverts the exit status,
+# so the target breaks if the fault is ever swallowed. (`order` has no
+# retry ladder; only `batch`/`serve` recover.)
+fault-smoke:
+	cargo build --release --bins
+	! PTSCOTCH_FAULT="0@60:panic" \
+	  ./target/release/ptscotch order --graph grid2d:20x20 -p 2 --engine pts
+	! PTSCOTCH_FAULT="0@60:panic" PTSCOTCH_EXECUTOR=threads \
+	  ./target/release/ptscotch order --graph grid2d:20x20 -p 2 --engine pts
 
 clean:
 	rm -rf artifacts bench_out target

@@ -641,12 +641,15 @@ fn service_profile(smoke: bool, scale: usize) {
     let m = coord.metrics();
     println!(
         "service totals: {} requests, {} ordering(s) run, {} hits, {} coalesced \
-         (aggregate hit-rate {:.0}%)",
+         (aggregate hit-rate {:.0}%; recovery: {} aborts, {} retries, {} degraded)",
         m.requests(),
         m.jobs_run,
         m.hits,
         m.coalesced,
-        m.hit_rate() * 100.0
+        m.hit_rate() * 100.0,
+        m.aborts,
+        m.retries,
+        m.degraded
     );
 }
 

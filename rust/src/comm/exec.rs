@@ -60,16 +60,19 @@ impl Executor {
     }
 
     /// Resolve the executor from [`EXECUTOR_ENV`]; unset or empty means
-    /// [`Executor::Sim`]. A set-but-unrecognized value panics loudly —
+    /// [`Executor::Sim`]. A set-but-unrecognized value is a structured
+    /// [`crate::Error::BadEnv`] surfaced through the service and CLI —
     /// a misspelled executor silently falling back to the simulator
-    /// would invalidate every "threaded" measurement taken under it.
-    pub fn from_env() -> Executor {
+    /// would invalidate every "threaded" measurement taken under it,
+    /// and a `panic!` here used to kill the whole process instead of
+    /// failing the one request.
+    pub fn from_env() -> crate::Result<Executor> {
         match std::env::var(EXECUTOR_ENV) {
-            Ok(v) if v.trim().is_empty() => Executor::Sim,
+            Ok(v) if v.trim().is_empty() => Ok(Executor::Sim),
             Ok(v) => v
                 .parse()
-                .unwrap_or_else(|e: String| panic!("{EXECUTOR_ENV}: {e}")),
-            Err(_) => Executor::Sim,
+                .map_err(|e: String| crate::Error::BadEnv(format!("{EXECUTOR_ENV}: {e}"))),
+            Err(_) => Ok(Executor::Sim),
         }
     }
 }

@@ -1,0 +1,271 @@
+//! Deterministic fault injection for the comm fabric (DESIGN.md §3.2).
+//!
+//! A [`FaultPlan`] is a *script*: a set of one-shot triggers keyed on
+//! `(rank, transport-op index)`. Every transport operation a rank
+//! performs — each mailbox push and each (possibly blocking) pop —
+//! advances that rank's op counter, and when the counter hits an armed
+//! trigger the scripted [`FaultAction`] fires:
+//!
+//! * [`FaultAction::Panic`] — the rank unwinds as if its program
+//!   panicked, exercising the panic-isolation and abort-propagation
+//!   path (`Error::RankPanicked`);
+//! * [`FaultAction::Delay`] — the rank sleeps before the op proceeds.
+//!   By the determinism contract (DESIGN.md §3) a delay must never
+//!   change results or traffic counters, only wallclock — the
+//!   fault-injection suite pins this bit-for-bit;
+//! * [`FaultAction::Stall`] — the rank stops making progress without
+//!   panicking, exercising the stall-deadline path
+//!   (`Error::FleetStalled`).
+//!
+//! Op-count triggers make injection *deterministic*: the same plan on
+//! the same program fires at exactly the same point in the rank's
+//! transport history on either executor, with no flaky sleeps. Plans
+//! come from code ([`FaultPlan::panic_at`] and friends) or from the
+//! [`FAULT_ENV`] environment variable; an absent/empty plan costs one
+//! branch per transport op.
+//!
+//! Triggers are **one-shot**: a trigger that fired stays consumed for
+//! the lifetime of the plan, across every fleet sharing it (clones
+//! share trigger state). This is what makes the service-level recovery
+//! ladder testable — a one-shot panic fails the first attempt and lets
+//! the retry complete (DESIGN.md §6).
+
+use crate::{Error, Result};
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering as AOrd};
+use std::sync::Arc;
+
+/// Environment variable holding a fault spec applied to every fleet
+/// launched without a programmatic plan. Grammar (entries joined by
+/// `;`): `RANK@OP:panic`, `RANK@OP:stall`, `RANK@OP:delay(MS)` — e.g.
+/// `PTSCOTCH_FAULT="1@50:panic;0@10:delay(5)"`. A malformed spec is
+/// surfaced as [`Error::BadEnv`] through the fallible run entry points,
+/// the service and the CLI.
+pub const FAULT_ENV: &str = "PTSCOTCH_FAULT";
+
+/// What an armed trigger does when its `(rank, op)` point is reached.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Unwind the rank as if its program panicked. The fleet reports
+    /// `Error::RankPanicked` with an "injected panic" message.
+    Panic,
+    /// Sleep this many milliseconds before the op proceeds. Results
+    /// must be bit-identical to the fault-free run.
+    Delay(u64),
+    /// Park the rank until the fleet aborts; if nothing else trips the
+    /// stall deadline first, the parked rank raises
+    /// `Error::FleetStalled` itself when its own deadline expires.
+    Stall,
+}
+
+impl fmt::Display for FaultAction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultAction::Panic => f.write_str("panic"),
+            FaultAction::Delay(ms) => write!(f, "delay({ms})"),
+            FaultAction::Stall => f.write_str("stall"),
+        }
+    }
+}
+
+/// One armed `(rank, op) → action` trigger with its consumed flag.
+#[derive(Debug)]
+struct Trigger {
+    rank: usize,
+    op: u64,
+    action: FaultAction,
+    fired: AtomicBool,
+}
+
+/// A scripted, deterministic fault-injection plan (module docs above).
+///
+/// Cloning is cheap and **shares** trigger state: a plan handed to a
+/// service fires each trigger exactly once across all the fleets (and
+/// retries) that service runs.
+///
+/// ```
+/// use ptscotch::comm::{FaultAction, FaultPlan};
+///
+/// let plan = FaultPlan::parse("1@5:panic;0@3:delay(10);2@7:stall").unwrap();
+/// assert_eq!(plan.len(), 3);
+/// // Programmatic construction is equivalent:
+/// let same = FaultPlan::new().panic_at(1, 5).delay_at(0, 3, 10).stall_at(2, 7);
+/// assert_eq!(same.len(), 3);
+/// assert!(FaultPlan::new().is_empty());
+/// assert!(FaultPlan::parse("1@5:reboot").is_err());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    triggers: Arc<Vec<Trigger>>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing; useful as a builder seed).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    fn push(mut self, rank: usize, op: u64, action: FaultAction) -> FaultPlan {
+        Arc::get_mut(&mut self.triggers)
+            .expect("extend a FaultPlan before cloning/sharing it")
+            .push(Trigger {
+                rank,
+                op,
+                action,
+                fired: AtomicBool::new(false),
+            });
+        self
+    }
+
+    /// Arm a one-shot panic at `rank`'s `op`-th transport operation.
+    pub fn panic_at(self, rank: usize, op: u64) -> FaultPlan {
+        self.push(rank, op, FaultAction::Panic)
+    }
+
+    /// Arm a one-shot `millis`-millisecond delay at `rank`'s `op`-th
+    /// transport operation.
+    pub fn delay_at(self, rank: usize, op: u64, millis: u64) -> FaultPlan {
+        self.push(rank, op, FaultAction::Delay(millis))
+    }
+
+    /// Arm a one-shot stall at `rank`'s `op`-th transport operation.
+    pub fn stall_at(self, rank: usize, op: u64) -> FaultPlan {
+        self.push(rank, op, FaultAction::Stall)
+    }
+
+    /// Number of triggers in the plan (fired or not).
+    pub fn len(&self) -> usize {
+        self.triggers.len()
+    }
+
+    /// Does the plan hold no triggers at all?
+    pub fn is_empty(&self) -> bool {
+        self.triggers.is_empty()
+    }
+
+    /// Consume and return the action of the first unfired trigger armed
+    /// at `(rank, op)`, if any. Several triggers may share a `(rank,
+    /// op)` point; each call consumes at most one, so a plan with k
+    /// identical panic triggers fails exactly k fleet runs.
+    pub(crate) fn check(&self, rank: usize, op: u64) -> Option<FaultAction> {
+        for t in self.triggers.iter() {
+            if t.rank == rank && t.op == op && !t.fired.swap(true, AOrd::AcqRel) {
+                return Some(t.action);
+            }
+        }
+        None
+    }
+
+    /// Parse a [`FAULT_ENV`]-grammar spec (see the constant's docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let bad = |entry: &str, why: &str| {
+            Error::BadEnv(format!(
+                "{FAULT_ENV}: bad fault entry {entry:?}: {why} \
+                 (grammar: RANK@OP:panic|stall|delay(MS), entries joined by ';')"
+            ))
+        };
+        let mut plan = FaultPlan::new();
+        for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (pos, action) = entry
+                .split_once(':')
+                .ok_or_else(|| bad(entry, "missing ':'"))?;
+            let (rank, op) = pos
+                .split_once('@')
+                .ok_or_else(|| bad(entry, "missing '@'"))?;
+            let rank: usize = rank
+                .trim()
+                .parse()
+                .map_err(|_| bad(entry, "rank is not a number"))?;
+            let op: u64 = op
+                .trim()
+                .parse()
+                .map_err(|_| bad(entry, "op index is not a number"))?;
+            let action = match action.trim() {
+                "panic" => FaultAction::Panic,
+                "stall" => FaultAction::Stall,
+                other => {
+                    let ms = other
+                        .strip_prefix("delay(")
+                        .and_then(|s| s.strip_suffix(')'))
+                        .ok_or_else(|| bad(entry, "unknown action"))?;
+                    FaultAction::Delay(
+                        ms.trim()
+                            .parse()
+                            .map_err(|_| bad(entry, "delay millis is not a number"))?,
+                    )
+                }
+            };
+            plan = plan.push(rank, op, action);
+        }
+        Ok(plan)
+    }
+
+    /// The plan named by [`FAULT_ENV`]: `Ok(None)` when the variable is
+    /// unset or empty, [`Error::BadEnv`] when it is set but malformed.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULT_ENV) {
+            Ok(v) if v.trim().is_empty() => Ok(None),
+            Ok(v) => FaultPlan::parse(&v).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_action() {
+        let plan = FaultPlan::parse(" 1@5:panic ; 0@3:delay( 10 ) ; 2@7:stall ").unwrap();
+        assert_eq!(plan.len(), 3);
+        assert_eq!(plan.check(1, 5), Some(FaultAction::Panic));
+        assert_eq!(plan.check(0, 3), Some(FaultAction::Delay(10)));
+        assert_eq!(plan.check(2, 7), Some(FaultAction::Stall));
+        assert_eq!(plan.check(1, 6), None);
+    }
+
+    #[test]
+    fn triggers_are_one_shot_and_shared_across_clones() {
+        let plan = FaultPlan::new().panic_at(0, 4).panic_at(0, 4);
+        let alias = plan.clone();
+        // Two triggers at the same point: each check consumes one,
+        // through either handle.
+        assert_eq!(plan.check(0, 4), Some(FaultAction::Panic));
+        assert_eq!(alias.check(0, 4), Some(FaultAction::Panic));
+        assert_eq!(plan.check(0, 4), None);
+        assert_eq!(alias.check(0, 4), None);
+    }
+
+    #[test]
+    fn malformed_specs_are_bad_env() {
+        for spec in [
+            "nonsense",
+            "1@2",
+            "1@2:reboot",
+            "x@2:panic",
+            "1@y:panic",
+            "1@2:delay(ms)",
+            "1@2:delay(5",
+        ] {
+            let err = FaultPlan::parse(spec).unwrap_err();
+            assert!(
+                matches!(err, Error::BadEnv(_)),
+                "{spec:?}: expected BadEnv, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_spec_parses_to_empty_plan() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse(" ; ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn actions_display_in_spec_grammar() {
+        assert_eq!(FaultAction::Panic.to_string(), "panic");
+        assert_eq!(FaultAction::Delay(25).to_string(), "delay(25)");
+        assert_eq!(FaultAction::Stall.to_string(), "stall");
+    }
+}

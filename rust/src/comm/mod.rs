@@ -29,21 +29,108 @@
 //! construction — every receive names its source rank, tags are scoped
 //! per communicator, and collectives are sequence-numbered — so both
 //! executors produce bit-identical results and identical
-//! `sent_bytes`/`sent_msgs` tallies for the same program
-//! (`rust/tests/traffic.rs` pins this). Only the wallclock columns of
-//! [`StatsSnapshot`] may differ between executors.
+//! `sent_bytes`/`sent_msgs`/`transport_ops` tallies for the same
+//! program (`rust/tests/traffic.rs` pins this). Only the wallclock
+//! columns of [`StatsSnapshot`] may differ between executors.
+//!
+//! **Fault model (DESIGN.md §3.2).** A rank panic no longer kills the
+//! process or hangs its peers: each rank body runs under
+//! `catch_unwind`, the first dying rank raises a fleet-wide abort flag
+//! on the shared transport and wakes every mailbox condvar, and every
+//! subsequent or blocked transport operation on surviving ranks
+//! unwinds with a dedicated abort payload. The fallible entry points
+//! ([`try_run_on`] / [`try_run_with`]) surface this as
+//! `Err(Error::RankPanicked)`; a configurable stall deadline on every
+//! blocking wait turns silent no-progress into `Err(Error::FleetStalled)`
+//! instead of a hang. Deterministic scripted faults — panics, delays,
+//! stalls at a given rank's Nth transport op — are injected through
+//! [`FaultPlan`] (or the [`FAULT_ENV`] env spec) to test all of this
+//! without flaky sleeps.
 
 pub mod exec;
+pub mod fault;
 pub mod stats;
 
 pub use exec::Executor;
+pub use fault::{FaultAction, FaultPlan, FAULT_ENV};
 pub use stats::{MemTracker, StatsSnapshot};
 
+use crate::{Error, Result};
 use std::any::Any;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering as AOrd};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AOrd};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
+
+/// Default per-wait stall deadline of the transport: how long a rank
+/// may block on one receive (or injected stall) before the fleet is
+/// declared stalled and unwound with [`Error::FleetStalled`]. Generous
+/// on purpose — it is a liveness backstop, not a performance knob;
+/// tests that want fast failure lower it via [`RunConfig`].
+pub const DEFAULT_STALL_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Per-fleet run configuration for the fallible entry points: the
+/// fault-injection plan (if any) and the stall deadline.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Scripted fault plan; `None` (or an empty plan) injects nothing
+    /// and costs one branch per transport op.
+    pub fault: Option<FaultPlan>,
+    /// Per-blocking-wait deadline before the fleet is declared stalled.
+    pub stall_deadline: Duration,
+}
+
+impl Default for RunConfig {
+    fn default() -> RunConfig {
+        RunConfig {
+            fault: None,
+            stall_deadline: DEFAULT_STALL_DEADLINE,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Default config with the fault plan taken from [`FAULT_ENV`]
+    /// (`Err(Error::BadEnv)` if the variable is set but malformed).
+    pub fn from_env() -> Result<RunConfig> {
+        Ok(RunConfig {
+            fault: FaultPlan::from_env()?,
+            ..RunConfig::default()
+        })
+    }
+}
+
+/// Unwind payload of a scripted [`FaultAction::Panic`]; carries the op
+/// index so the reported `RankPanicked` message names the trigger.
+/// Raised via `resume_unwind` so the panic hook stays quiet — an
+/// injected fault is expected, not a bug worth a backtrace on stderr.
+struct InjectedPanic {
+    op: u64,
+}
+
+/// Unwind payload used to tear down surviving ranks once the fleet is
+/// aborting. Recognized (and swallowed) by the `catch_unwind` in
+/// [`try_run_with`]; the root-cause error is already in the abort cell.
+struct FleetAbort;
+
+/// Fleet-wide abort state: a fast flag checked on every transport op,
+/// the first-raiser-wins root-cause error, and a condvar that parked
+/// (injected-stall) ranks wait on.
+#[derive(Default)]
+struct AbortCell {
+    flag: AtomicBool,
+    err: Mutex<Option<Error>>,
+    cv: Condvar,
+}
+
+/// Lock a mutex, ignoring poisoning. The transport must stay usable
+/// while ranks unwind through it during an abort — the data under
+/// these locks (message queues, the abort cell) is never left in a
+/// torn state by the operations that can unwind.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One in-flight message. The source rank is implicit in the mailbox
 /// the packet sits in (one queue per ordered (receiver, sender) pair).
@@ -91,18 +178,25 @@ struct RankStats {
     sent_msgs: AtomicU64,
     blocked_ns: AtomicU64,
     wall_ns: AtomicU64,
+    transport_ops: AtomicU64,
 }
 
 /// Shared transport: the executor-selected fabric plus per-rank
-/// telemetry.
+/// telemetry, the fault-injection plan, and the fleet abort state.
 struct Transport {
     p: usize,
     fabric: Fabric,
     ranks: Vec<RankStats>,
+    /// Non-empty scripted fault plan, if any (empty plans are dropped
+    /// at construction so the hot path pays one `Option` branch).
+    fault: Option<FaultPlan>,
+    /// Per-blocking-wait deadline (see [`DEFAULT_STALL_DEADLINE`]).
+    stall_deadline: Duration,
+    abort: AbortCell,
 }
 
 impl Transport {
-    fn new(exec: Executor, p: usize) -> Transport {
+    fn new(exec: Executor, p: usize, cfg: RunConfig) -> Transport {
         let fabric = match exec {
             Executor::Sim => Fabric::Sim {
                 state: Mutex::new((0..p * p).map(|_| VecDeque::new()).collect()),
@@ -116,17 +210,136 @@ impl Transport {
             p,
             fabric,
             ranks: (0..p).map(|_| RankStats::default()).collect(),
+            fault: cfg.fault.filter(|plan| !plan.is_empty()),
+            stall_deadline: cfg.stall_deadline,
+            abort: AbortCell::default(),
+        }
+    }
+
+    /// Has some rank raised the fleet abort?
+    #[inline]
+    fn aborted(&self) -> bool {
+        self.abort.flag.load(AOrd::Acquire)
+    }
+
+    /// The root-cause error of the abort, if one was raised.
+    fn abort_error(&self) -> Option<Error> {
+        plock(&self.abort.err).clone()
+    }
+
+    /// Raise the fleet abort: record the root cause (first raiser
+    /// wins), set the flag, and wake *every* waiter — parked stalls on
+    /// the abort condvar and blocked receivers on every mailbox
+    /// condvar. Each notify happens while holding the lock its waiters
+    /// wait under (waiters re-check the flag under that same lock
+    /// before sleeping), so no wakeup can be lost.
+    fn raise(&self, err: Error) {
+        {
+            let mut cell = plock(&self.abort.err);
+            if cell.is_none() {
+                *cell = Some(err);
+            }
+            self.abort.flag.store(true, AOrd::Release);
+            self.abort.cv.notify_all();
+        }
+        match &self.fabric {
+            Fabric::Sim { state, avail } => {
+                let _g = plock(state);
+                for cv in avail {
+                    cv.notify_all();
+                }
+            }
+            Fabric::Threads { boxes } => {
+                for mbox in boxes {
+                    let _g = plock(&mbox.queue);
+                    mbox.avail.notify_all();
+                }
+            }
+        }
+    }
+
+    /// Unwind the calling rank with the abort payload. Only called
+    /// once the abort flag is set (the root cause is already recorded).
+    fn unwind_abort(&self) -> ! {
+        resume_unwind(Box::new(FleetAbort))
+    }
+
+    /// Per-transport-op bookkeeping and fault hook: advance `rank`'s op
+    /// counter, bail out if the fleet is aborting, and fire any
+    /// scripted fault armed at this `(rank, op)` point. Called at the
+    /// top of every push and pop; with no plan and no abort this is one
+    /// relaxed increment and two loads.
+    fn op_event(&self, rank: usize) {
+        let op = self.ranks[rank].transport_ops.fetch_add(1, AOrd::Relaxed);
+        if self.aborted() {
+            self.unwind_abort();
+        }
+        if let Some(plan) = &self.fault {
+            match plan.check(rank, op) {
+                None => {}
+                Some(FaultAction::Delay(ms)) => {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+                Some(FaultAction::Panic) => {
+                    resume_unwind(Box::new(InjectedPanic { op }));
+                }
+                Some(FaultAction::Stall) => self.stall(rank, op),
+            }
+        }
+    }
+
+    /// A blocked receive ran past the stall deadline: raise
+    /// [`Error::FleetStalled`] naming the waiting rank and the stuck
+    /// operation, then unwind. Callers must have dropped the queue
+    /// guard first ([`Transport::raise`] re-acquires it to notify).
+    fn raise_stall(&self, dst: usize, src: usize, tag: u64) -> ! {
+        self.raise(Error::FleetStalled {
+            rank: dst,
+            op: format!("recv from rank {src} (tag {tag:#x})"),
+        });
+        self.unwind_abort()
+    }
+
+    /// Execute an injected stall: park on the abort condvar until the
+    /// fleet aborts for some other reason, or this rank's own stall
+    /// deadline expires — in which case the stalled rank itself raises
+    /// [`Error::FleetStalled`] — then unwind.
+    fn stall(&self, rank: usize, op: u64) -> ! {
+        let deadline = Instant::now() + self.stall_deadline;
+        let mut g = plock(&self.abort.err);
+        loop {
+            if self.aborted() {
+                drop(g);
+                self.unwind_abort();
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(g);
+                self.raise(Error::FleetStalled {
+                    rank,
+                    op: format!("injected stall at transport op {op}"),
+                });
+                self.unwind_abort();
+            }
+            g = self
+                .abort
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner)
+                .0;
         }
     }
 
     /// Deposit a packet into the (dst, src) queue and wake dst's
     /// waiters. Never blocks (queues are unbounded), so no send/send
-    /// deadlock is possible.
+    /// deadlock is possible — but it does unwind if the fleet is
+    /// aborting, so no rank keeps computing into a dead fleet.
     fn push(&self, dst: usize, src: usize, tag: u64, data: Box<dyn Any + Send>) {
+        self.op_event(src);
         let slot = dst * self.p + src;
         match &self.fabric {
             Fabric::Sim { state, avail } => {
-                let mut q = state.lock().unwrap();
+                let mut q = plock(state);
                 q[slot].push_back(Packet { tag, data });
                 // notify_all, not notify_one: the rank's main thread and
                 // its overlap thread may both wait on this receiver for
@@ -135,26 +348,47 @@ impl Transport {
             }
             Fabric::Threads { boxes } => {
                 let mbox = &boxes[slot];
-                mbox.queue.lock().unwrap().push_back(Packet { tag, data });
+                plock(&mbox.queue).push_back(Packet { tag, data });
                 mbox.avail.notify_all();
             }
         }
     }
 
     /// Take the first packet matching `tag` out of the (dst, src)
-    /// queue, blocking until one arrives. Time spent waiting is charged
-    /// to `dst`'s `blocked_ns` (the busy-time column of the stats).
+    /// queue, blocking until one arrives, the fleet aborts (unwinds
+    /// with the abort payload), or the stall deadline expires (raises
+    /// [`Error::FleetStalled`] and unwinds). Time spent waiting is
+    /// charged to `dst`'s `blocked_ns` (the busy-time column).
+    ///
+    /// The abort flag is checked *under the queue lock* before every
+    /// wait, and [`Transport::raise`] notifies under that same lock
+    /// after setting the flag, so a waiter either sees the flag or is
+    /// woken by the notify — never a lost wakeup.
     fn pop(&self, dst: usize, src: usize, tag: u64) -> Box<dyn Any + Send> {
+        self.op_event(dst);
         let slot = dst * self.p + src;
+        let deadline = Instant::now() + self.stall_deadline;
         match &self.fabric {
             Fabric::Sim { state, avail } => {
-                let mut q = state.lock().unwrap();
+                let mut q = plock(state);
                 loop {
                     if let Some(pos) = q[slot].iter().position(|pk| pk.tag == tag) {
                         return q[slot].remove(pos).unwrap().data;
                     }
+                    if self.aborted() {
+                        drop(q);
+                        self.unwind_abort();
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(q);
+                        self.raise_stall(dst, src, tag);
+                    }
                     let t0 = Instant::now();
-                    q = avail[dst].wait(q).unwrap();
+                    q = avail[dst]
+                        .wait_timeout(q, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0;
                     self.ranks[dst]
                         .blocked_ns
                         .fetch_add(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
@@ -162,13 +396,26 @@ impl Transport {
             }
             Fabric::Threads { boxes } => {
                 let mbox = &boxes[slot];
-                let mut q = mbox.queue.lock().unwrap();
+                let mut q = plock(&mbox.queue);
                 loop {
                     if let Some(pos) = q.iter().position(|pk| pk.tag == tag) {
                         return q.remove(pos).unwrap().data;
                     }
+                    if self.aborted() {
+                        drop(q);
+                        self.unwind_abort();
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(q);
+                        self.raise_stall(dst, src, tag);
+                    }
                     let t0 = Instant::now();
-                    q = mbox.avail.wait(q).unwrap();
+                    q = mbox
+                        .avail
+                        .wait_timeout(q, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0;
                     self.ranks[dst]
                         .blocked_ns
                         .fetch_add(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
@@ -186,7 +433,21 @@ impl Transport {
             msgs_sent: col(|r| &r.sent_msgs),
             wall_ns: col(|r| &r.wall_ns),
             blocked_ns: col(|r| &r.blocked_ns),
+            transport_ops: col(|r| &r.transport_ops),
         }
+    }
+}
+
+/// Render a caught rank-thread unwind payload as a panic message.
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(inj) = payload.downcast_ref::<InjectedPanic>() {
+        format!("injected panic at transport op {}", inj.op)
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -209,15 +470,18 @@ pub struct Comm {
 }
 
 /// Spawn `p` ranks on the executor named by `PTSCOTCH_EXECUTOR`
-/// (`sim` default — see [`Executor::from_env`], which panics loudly on
-/// an unrecognized value), run `f(comm)` on each, join, and return the
-/// results in rank order together with the traffic statistics.
+/// (`sim` default — see [`Executor::from_env`]), run `f(comm)` on
+/// each, join, and return the results in rank order together with the
+/// traffic statistics. Infallible wrapper: a bad environment, rank
+/// panic, or stalled fleet panics here (see [`try_run_on`] for the
+/// structured-error variant the service layer uses).
 pub fn run<R, F>(p: usize, f: F) -> (Vec<R>, StatsSnapshot)
 where
     R: Send + 'static,
     F: Fn(Comm) -> R + Send + Sync + 'static,
 {
-    run_on(Executor::from_env(), p, f)
+    let exec = Executor::from_env().unwrap_or_else(|e| panic!("{e}"));
+    run_on(exec, p, f)
 }
 
 /// Spawn `p` ranks on an explicit [`Executor`], run `f(comm)` on each,
@@ -226,13 +490,55 @@ where
 /// they differ only in the fabric under the mailboxes (DESIGN.md §3),
 /// so `f` needs no executor awareness and results are bit-identical
 /// across executors.
+///
+/// Infallible wrapper over [`try_run_on`] for callers (tests, benches)
+/// that treat any fleet failure as fatal: a rank panic, stalled fleet,
+/// or malformed [`FAULT_ENV`] spec panics with the structured error's
+/// message instead of returning it.
 pub fn run_on<R, F>(exec: Executor, p: usize, f: F) -> (Vec<R>, StatsSnapshot)
 where
     R: Send + 'static,
     F: Fn(Comm) -> R + Send + Sync + 'static,
 {
+    try_run_on(exec, p, f).unwrap_or_else(|e| panic!("fleet failed: {e}"))
+}
+
+/// Fallible [`run_on`]: the fault plan comes from [`FAULT_ENV`]
+/// (`Err(Error::BadEnv)` if set but malformed) and the stall deadline
+/// is [`DEFAULT_STALL_DEADLINE`]. See [`try_run_with`].
+pub fn try_run_on<R, F>(exec: Executor, p: usize, f: F) -> Result<(Vec<R>, StatsSnapshot)>
+where
+    R: Send + 'static,
+    F: Fn(Comm) -> R + Send + Sync + 'static,
+{
+    try_run_with(exec, p, RunConfig::from_env()?, f)
+}
+
+/// Spawn `p` ranks under an explicit [`RunConfig`] and return either
+/// every rank's result or the first fleet-level fault:
+///
+/// * `Err(Error::RankPanicked)` — some rank's program (or an injected
+///   [`FaultAction::Panic`]) panicked. The panic is caught in that
+///   rank's thread, every surviving rank is unwound through the abort
+///   protocol (DESIGN.md §3.2), and the process neither aborts nor
+///   hangs.
+/// * `Err(Error::FleetStalled)` — some rank blocked past
+///   `cfg.stall_deadline` without the fleet making progress.
+///
+/// On `Ok`, results are bit-identical across executors and unaffected
+/// by injected [`FaultAction::Delay`]s (the determinism contract).
+pub fn try_run_with<R, F>(
+    exec: Executor,
+    p: usize,
+    cfg: RunConfig,
+    f: F,
+) -> Result<(Vec<R>, StatsSnapshot)>
+where
+    R: Send + 'static,
+    F: Fn(Comm) -> R + Send + Sync + 'static,
+{
     assert!(p >= 1, "need at least one rank");
-    let transport = Arc::new(Transport::new(exec, p));
+    let transport = Arc::new(Transport::new(exec, p, cfg));
     let members = Arc::new((0..p).collect::<Vec<_>>());
     let f = Arc::new(f);
     let mut handles = Vec::with_capacity(p);
@@ -253,21 +559,41 @@ where
                 .stack_size(16 << 20)
                 .spawn(move || {
                     let t0 = Instant::now();
-                    let out = f(comm);
+                    let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
                     t.ranks[r]
                         .wall_ns
                         .store(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
-                    out
+                    match out {
+                        Ok(v) => Some(v),
+                        Err(payload) => {
+                            // The abort payload is the *consequence* of a
+                            // fleet abort, not a new root cause.
+                            if !payload.is::<FleetAbort>() {
+                                t.raise(Error::RankPanicked {
+                                    rank: r,
+                                    message: panic_message(payload.as_ref()),
+                                });
+                            }
+                            None
+                        }
+                    }
                 })
                 .expect("spawn rank thread"),
         );
     }
-    let results: Vec<R> = handles
+    let results: Vec<Option<R>> = handles
         .into_iter()
-        .map(|h| h.join().expect("rank thread panicked"))
+        .map(|h| h.join().unwrap_or(None))
         .collect();
     let stats = transport.snapshot();
-    (results, stats)
+    if let Some(err) = transport.abort_error() {
+        return Err(err);
+    }
+    let results = results
+        .into_iter()
+        .map(|r| r.expect("rank returned no result yet no abort was raised"))
+        .collect();
+    Ok((results, stats))
 }
 
 impl Comm {
@@ -712,6 +1038,161 @@ mod tests {
         assert_eq!(rs, rt);
         assert_eq!(ss.bytes_sent, st.bytes_sent);
         assert_eq!(ss.msgs_sent, st.msgs_sent);
+        // The fault-plan coordinate system: op counts are part of the
+        // determinism contract too.
+        assert_eq!(ss.transport_ops, st.transport_ops);
+    }
+
+    #[test]
+    fn injected_panic_is_isolated_on_both_executors() {
+        // A scripted panic mid-collective must come back as a
+        // structured error — no process abort, no hang — with every
+        // surviving rank unwound through the abort protocol.
+        for exec in EXECUTORS {
+            let cfg = RunConfig {
+                fault: Some(FaultPlan::new().panic_at(1, 3)),
+                ..RunConfig::default()
+            };
+            let out = try_run_with(exec, 3, cfg, |c| {
+                let mut acc = 0i64;
+                for _ in 0..8 {
+                    acc += c.allreduce_sum(c.rank() as i64);
+                }
+                acc
+            });
+            match out {
+                Err(Error::RankPanicked { rank, message }) => {
+                    assert_eq!(rank, 1, "{exec}");
+                    assert!(message.contains("injected panic"), "{exec}: {message}");
+                }
+                other => panic!("{exec}: expected RankPanicked, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_peer_unwinds_instead_of_hanging() {
+        // Rank 1 dies at its very first transport op, before anything
+        // reaches rank 0's mailbox. Rank 0 is already parked in a
+        // blocking recv under a long stall deadline, so only the abort
+        // wakeup can release it — a lost wakeup hangs this test.
+        for exec in EXECUTORS {
+            let t0 = Instant::now();
+            let cfg = RunConfig {
+                fault: Some(FaultPlan::new().panic_at(1, 0)),
+                ..RunConfig::default()
+            };
+            let out = try_run_with(exec, 2, cfg, |c| {
+                if c.rank() == 0 {
+                    c.recv::<u8>(1, 1)
+                } else {
+                    c.send(0, 1, vec![1u8]);
+                    Vec::new()
+                }
+            });
+            assert!(
+                matches!(out, Err(Error::RankPanicked { rank: 1, .. })),
+                "{exec}: got {out:?}"
+            );
+            assert!(
+                t0.elapsed() < DEFAULT_STALL_DEADLINE,
+                "{exec}: abort propagated by deadline, not by wakeup"
+            );
+        }
+    }
+
+    #[test]
+    fn stall_deadline_detects_orphan_recv() {
+        // Rank 0 waits for a message nobody will ever send; rank 1
+        // returns cleanly. The stall deadline must convert the would-be
+        // infinite hang into a structured error naming the waiter.
+        for exec in EXECUTORS {
+            let cfg = RunConfig {
+                fault: None,
+                stall_deadline: Duration::from_millis(200),
+            };
+            let out = try_run_with(exec, 2, cfg, |c| {
+                if c.rank() == 0 {
+                    c.recv::<u8>(1, 42)
+                } else {
+                    Vec::new()
+                }
+            });
+            match out {
+                Err(Error::FleetStalled { rank, op }) => {
+                    assert_eq!(rank, 0, "{exec}");
+                    assert!(op.contains("recv from rank 1"), "{exec}: {op}");
+                }
+                other => panic!("{exec}: expected FleetStalled, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn injected_stall_trips_the_deadline() {
+        // Only rank 1 ever blocks (rank 0 returns without touching the
+        // transport), so the stalled rank itself must raise the error —
+        // deterministically — when its own deadline expires.
+        for exec in EXECUTORS {
+            let cfg = RunConfig {
+                fault: Some(FaultPlan::new().stall_at(1, 2)),
+                stall_deadline: Duration::from_millis(200),
+            };
+            let out = try_run_with(exec, 2, cfg, |c| {
+                if c.rank() == 1 {
+                    c.send(0, 1, vec![1u8]); // op 0
+                    c.send(0, 2, vec![2u8]); // op 1
+                    c.send(0, 3, vec![3u8]); // op 2 — stalls before the push
+                }
+                c.rank()
+            });
+            match out {
+                Err(Error::FleetStalled { rank, op }) => {
+                    assert_eq!(rank, 1, "{exec}");
+                    assert!(op.contains("injected stall"), "{exec}: {op}");
+                }
+                other => panic!("{exec}: expected FleetStalled, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn injected_delay_keeps_results_and_traffic_bit_identical() {
+        let program = |c: Comm| {
+            let all = c.allgatherv(vec![c.rank() as u64; 4]);
+            c.barrier();
+            all.concat().iter().sum::<u64>()
+        };
+        for exec in EXECUTORS {
+            let (clean, cs) = run_on(exec, 3, program);
+            let cfg = RunConfig {
+                fault: Some(FaultPlan::new().delay_at(0, 1, 15).delay_at(2, 2, 10)),
+                ..RunConfig::default()
+            };
+            let (slow, ss) = try_run_with(exec, 3, cfg, program).unwrap();
+            assert_eq!(clean, slow, "{exec}");
+            assert_eq!(cs.bytes_sent, ss.bytes_sent, "{exec}");
+            assert_eq!(cs.msgs_sent, ss.msgs_sent, "{exec}");
+            assert_eq!(cs.transport_ops, ss.transport_ops, "{exec}");
+        }
+    }
+
+    #[test]
+    fn fleet_failure_panics_through_the_infallible_wrapper() {
+        // `run_on` keeps its pre-fault-model contract for callers that
+        // treat failure as fatal: the structured error surfaces as a
+        // panic, not a hang.
+        let caught = std::panic::catch_unwind(|| {
+            let cfg = RunConfig {
+                fault: Some(FaultPlan::new().panic_at(0, 0)),
+                ..RunConfig::default()
+            };
+            // Equivalent of run_on with an explicit plan.
+            try_run_with(Executor::Sim, 2, cfg, |c| c.allreduce_sum(1))
+                .unwrap_or_else(|e| panic!("fleet failed: {e}"))
+        });
+        let msg = panic_message(caught.expect_err("must panic").as_ref());
+        assert!(msg.contains("rank 0 panicked"), "{msg}");
     }
 
     #[test]

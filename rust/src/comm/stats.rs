@@ -24,6 +24,12 @@ pub struct StatsSnapshot {
     /// thread active, both threads of a rank charge the same counter,
     /// so a rank's blocked time may exceed its wallclock.
     pub blocked_ns: Vec<u64>,
+    /// Transport operations (mailbox pushes + pops) performed by each
+    /// global rank. Schedule-independent like the traffic counters —
+    /// identical across executors — and the coordinate system of the
+    /// fault-injection plan (DESIGN.md §3.2): a trigger armed at
+    /// `(rank, op)` fires at that rank's `op`-th operation.
+    pub transport_ops: Vec<u64>,
 }
 
 impl StatsSnapshot {
@@ -120,6 +126,7 @@ mod tests {
             msgs_sent: vec![1, 2, 3],
             wall_ns: vec![5_000, 9_000, 7_000],
             blocked_ns: vec![1_000, 9_500, 3_000],
+            transport_ops: vec![2, 4, 6],
         };
         assert_eq!(s.total_bytes(), 60);
         assert_eq!(s.total_msgs(), 6);

@@ -33,6 +33,10 @@ pub struct OrderingReport {
     /// Per-rank transport-blocked nanoseconds (empty for the
     /// sequential engine).
     pub blocked_ns_per_rank: Vec<u64>,
+    /// Transport operations (pushes + pops) per rank — the coordinate
+    /// system of the fault-injection plan (DESIGN.md §3.2), identical
+    /// across executors like the traffic counters.
+    pub transport_ops_per_rank: Vec<u64>,
 }
 
 impl OrderingReport {
@@ -91,8 +95,17 @@ pub struct ServiceMetrics {
     /// Full orderings actually executed on the rank pool — the number
     /// the replay acceptance test pins to 1.
     pub jobs_run: AtomicU64,
-    /// Jobs that returned an error (errors are never cached).
+    /// Jobs whose final outcome was an error — the recovery ladder
+    /// (DESIGN.md §6) was exhausted. Errors are never cached.
     pub errors: AtomicU64,
+    /// Fleet-level faults observed (`RankPanicked`/`FleetStalled`),
+    /// whether or not a retry later recovered them.
+    pub aborts: AtomicU64,
+    /// Re-runs performed by the recovery ladder after a fleet fault.
+    pub retries: AtomicU64,
+    /// Jobs that exhausted their retries and fell back to the
+    /// sequential `p=1` engine as a last resort.
+    pub degraded: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -106,6 +119,9 @@ impl ServiceMetrics {
             evictions: ld(&self.evictions),
             jobs_run: ld(&self.jobs_run),
             errors: ld(&self.errors),
+            aborts: ld(&self.aborts),
+            retries: ld(&self.retries),
+            degraded: ld(&self.degraded),
         }
     }
 }
@@ -123,8 +139,14 @@ pub struct ServiceSnapshot {
     pub evictions: u64,
     /// Full orderings executed.
     pub jobs_run: u64,
-    /// Failed jobs.
+    /// Jobs that failed after exhausting the recovery ladder.
     pub errors: u64,
+    /// Fleet-level faults observed.
+    pub aborts: u64,
+    /// Recovery-ladder re-runs.
+    pub retries: u64,
+    /// Jobs degraded to the sequential fallback.
+    pub degraded: u64,
 }
 
 impl ServiceSnapshot {
@@ -205,6 +227,7 @@ mod tests {
             msgs_sent_per_rank: vec![1, 1],
             wall_ns_per_rank: vec![4_000, 10_000],
             blocked_ns_per_rank: vec![1_000, 7_000],
+            transport_ops_per_rank: vec![2, 2],
         };
         let (min, avg, max) = r.mem_min_avg_max();
         assert_eq!((min, max), (10, 30));

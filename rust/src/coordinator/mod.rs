@@ -16,7 +16,7 @@ pub mod metrics;
 pub mod service;
 
 pub use metrics::{OrderingReport, PhaseTimer, ServiceMetrics, ServiceSnapshot};
-pub use service::{BatchCoordinator, RequestReport, Served, ServiceConfig};
+pub use service::{BatchCoordinator, RequestReport, Route, Served, ServiceConfig};
 
 use crate::baseline::parmetis_like_order;
 use crate::comm;
@@ -199,25 +199,66 @@ impl Deref for OrderingResult {
 /// The ordering service: reusable across jobs.
 pub struct OrderingService {
     runtime: Option<SharedRuntime>,
+    /// Programmatic fault-injection plan for every fleet this service
+    /// launches; `None` defers to the `PTSCOTCH_FAULT` env spec.
+    fault: Option<comm::FaultPlan>,
+    /// Stall deadline handed to every fleet (DESIGN.md §3.2).
+    stall_deadline: std::time::Duration,
 }
 
 impl OrderingService {
     /// Build a service without XLA artifacts (FM / CPU-diffusion only).
     pub fn new_cpu_only() -> OrderingService {
-        OrderingService { runtime: None }
+        OrderingService {
+            runtime: None,
+            fault: None,
+            stall_deadline: comm::DEFAULT_STALL_DEADLINE,
+        }
     }
 
     /// Build a service, loading AOT artifacts from `dir` if present.
     /// Missing artifacts are not an error unless a strategy later
     /// demands the XLA refiner.
     pub fn new(dir: &Path) -> OrderingService {
-        let runtime = load_shared(dir).ok();
-        OrderingService { runtime }
+        OrderingService {
+            runtime: load_shared(dir).ok(),
+            ..OrderingService::new_cpu_only()
+        }
     }
 
     /// Is the XLA runtime loaded?
     pub fn has_xla(&self) -> bool {
         self.runtime.is_some()
+    }
+
+    /// Inject scripted faults into every fleet this service launches
+    /// (overrides the `PTSCOTCH_FAULT` env spec). Triggers are one-shot
+    /// and shared across runs, so a single-trigger plan fails exactly
+    /// one fleet — the shape the recovery-ladder tests rely on.
+    pub fn with_fault_plan(mut self, plan: comm::FaultPlan) -> OrderingService {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Use this stall deadline for every fleet (default
+    /// [`comm::DEFAULT_STALL_DEADLINE`]).
+    pub fn with_stall_deadline(mut self, deadline: std::time::Duration) -> OrderingService {
+        self.stall_deadline = deadline;
+        self
+    }
+
+    /// The fleet run configuration: the programmatic fault plan if one
+    /// was set, else whatever `PTSCOTCH_FAULT` names (a malformed spec
+    /// is `Error::BadEnv`).
+    fn run_config(&self) -> Result<comm::RunConfig> {
+        let fault = match &self.fault {
+            Some(plan) => Some(plan.clone()),
+            None => comm::FaultPlan::from_env()?,
+        };
+        Ok(comm::RunConfig {
+            fault,
+            stall_deadline: self.stall_deadline,
+        })
     }
 
     /// Materialize the refiner for a strategy.
@@ -257,7 +298,10 @@ impl OrderingService {
         let strat = &req.strategy;
         strat.validate()?;
         g.validate()?;
-        let exec = strat.dist.executor.unwrap_or_else(comm::Executor::from_env);
+        let exec = match strat.dist.executor {
+            Some(e) => e,
+            None => comm::Executor::from_env()?,
+        };
         let t0 = Instant::now();
         type Telemetry = (Ordering, Vec<i64>, comm::StatsSnapshot);
         let (ordering, peak_mem, fleet): Telemetry = match req.engine {
@@ -270,6 +314,7 @@ impl OrderingService {
                     msgs_sent: vec![0],
                     wall_ns: Vec::new(),
                     blocked_ns: Vec::new(),
+                    transport_ops: Vec::new(),
                 };
                 (o, vec![g.footprint_bytes() as i64], fleet)
             }
@@ -286,7 +331,7 @@ impl OrderingService {
                     BandEngine::Cpu => None,
                     BandEngine::Auto | BandEngine::Xla => self.runtime.clone(),
                 };
-                let (res, stats) = comm::run_on(exec, p, move |c| {
+                let (res, stats) = comm::try_run_with(exec, p, self.run_config()?, move |c| {
                     let r = parallel_order(
                         &c,
                         &ga,
@@ -295,7 +340,7 @@ impl OrderingService {
                         band_rt.as_ref(),
                     );
                     (r.ordering, r.peak_mem)
-                });
+                })?;
                 let mems = res.iter().map(|(_, m)| *m).collect();
                 let o = res.into_iter().next().expect("rank 0 result").0;
                 (o, mems, stats)
@@ -306,10 +351,10 @@ impl OrderingService {
                 }
                 let ga = Arc::clone(&req.graph);
                 let strat2 = strat.clone();
-                let (res, stats) = comm::run_on(exec, p, move |c| {
+                let (res, stats) = comm::try_run_with(exec, p, self.run_config()?, move |c| {
                     let r = parmetis_like_order(&c, &ga, &strat2)?;
                     Ok::<_, Error>((r.ordering, r.peak_mem))
-                });
+                })?;
                 let mut orderings = Vec::new();
                 let mut mems = Vec::new();
                 for r in res {
@@ -337,6 +382,7 @@ impl OrderingService {
                 msgs_sent_per_rank: fleet.msgs_sent,
                 wall_ns_per_rank: fleet.wall_ns,
                 blocked_ns_per_rank: fleet.blocked_ns,
+                transport_ops_per_rank: fleet.transport_ops,
             },
         })
     }

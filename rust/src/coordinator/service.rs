@@ -16,15 +16,24 @@
 //! function of its fingerprint (same seed → same permutation on every
 //! executor, DESIGN.md §3), so replaying a cached
 //! [`OrderingResult`] is indistinguishable from recomputing it.
+//!
+//! **Recovery ladder (DESIGN.md §6).** Fleet-level faults — a rank
+//! panic or a stalled fleet (DESIGN.md §3.2) — are transient from the
+//! service's point of view, so a job that hits one is re-run with
+//! exponential backoff up to [`ServiceConfig::max_retries`] times and,
+//! as a last resort, degraded to the sequential `p=1` engine. Every
+//! reply records its attempts and final [`Route`]; failures are never
+//! cached, and neither are degraded results (a sequential ordering is
+//! not bit-identical to the parallel one the fingerprint promises).
 
 use super::metrics::{ServiceMetrics, ServiceSnapshot};
-use super::{OrderingRequest, OrderingResult, OrderingService};
+use super::{Engine, OrderingRequest, OrderingResult, OrderingService};
 use crate::Result;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex};
 use std::thread;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Tuning knobs of the batch coordinator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,6 +45,17 @@ pub struct ServiceConfig {
     /// Maximum ordering jobs in flight at once. Each job runs its own
     /// rank fleet, so this bounds total thread pressure per batch.
     pub max_in_flight: usize,
+    /// How many times a job is re-run after a fleet-level fault
+    /// (`RankPanicked`/`FleetStalled`) before the ladder moves on to
+    /// degradation. Deterministic errors are never retried.
+    pub max_retries: u32,
+    /// Base of the exponential retry backoff: retry k sleeps
+    /// `retry_backoff_ms << (k-1)` milliseconds. `0` disables the
+    /// sleep (used by tests).
+    pub retry_backoff_ms: u64,
+    /// After the retry budget is exhausted, fall back to the
+    /// sequential `p=1` engine instead of failing the request.
+    pub degrade: bool,
 }
 
 impl Default for ServiceConfig {
@@ -43,8 +63,27 @@ impl Default for ServiceConfig {
         ServiceConfig {
             cache_capacity: 64,
             max_in_flight: 4,
+            max_retries: 2,
+            retry_backoff_ms: 10,
+            degrade: true,
         }
     }
+}
+
+/// How a reply was ultimately produced — the rung of the recovery
+/// ladder (DESIGN.md §6) the request came to rest on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Replayed from the fingerprint cache; no fleet ran.
+    Cached,
+    /// The requested engine succeeded on the first attempt (or failed
+    /// with a deterministic, non-retryable error).
+    Direct,
+    /// The requested engine succeeded after one or more fault retries.
+    Retried,
+    /// The retry budget was exhausted; the reply comes from (or the
+    /// final error was produced by) the sequential fallback.
+    Degraded,
 }
 
 /// How one request was satisfied.
@@ -76,6 +115,12 @@ pub struct RequestReport {
     /// Seconds the job ran (0 for cache hits; for coalesced riders,
     /// the led job's run time — the wait they actually experienced).
     pub run_seconds: f64,
+    /// Fleet runs performed for this reply: 0 for cache hits, 1 for a
+    /// clean first attempt, more when the recovery ladder re-ran or
+    /// degraded the job.
+    pub attempts: u32,
+    /// The recovery-ladder rung that produced the reply.
+    pub route: Route,
     /// The ordering, block structure and report — or the job's error,
     /// replicated to every coalesced rider (errors are never cached).
     pub result: Result<Arc<OrderingResult>>,
@@ -140,8 +185,9 @@ struct Job {
     members: Vec<(usize, String, Served)>,
 }
 
-/// `(outcome, queue seconds, run seconds)` of one executed job.
-type JobOutcome = (Result<Arc<OrderingResult>>, f64, f64);
+/// `(outcome, queue seconds, run seconds, attempts, route)` of one
+/// executed job.
+type JobOutcome = (Result<Arc<OrderingResult>>, f64, f64, u32, Route);
 
 /// The batch driver: a fingerprint cache and a bounded worker pool in
 /// front of an [`OrderingService`].
@@ -209,6 +255,66 @@ impl BatchCoordinator {
             .expect("one reply per request")
     }
 
+    /// Run one job down the recovery ladder (DESIGN.md §6): attempt
+    /// the requested engine; on a fleet-level fault retry with
+    /// exponential backoff up to [`ServiceConfig::max_retries`] times;
+    /// then, if configured, degrade to the sequential `p=1` engine.
+    /// Deterministic errors (bad strategy, missing artifact, …) exit
+    /// immediately — re-running them would reproduce the same failure.
+    /// Returns `(outcome, attempts, route)`.
+    fn run_with_recovery(
+        &self,
+        req: &OrderingRequest,
+    ) -> (Result<Arc<OrderingResult>>, u32, Route) {
+        let mut attempts: u32 = 0;
+        let exhausted = loop {
+            attempts += 1;
+            match self.service.run(req) {
+                Ok(res) => {
+                    let route = if attempts == 1 {
+                        Route::Direct
+                    } else {
+                        Route::Retried
+                    };
+                    return (Ok(Arc::new(res)), attempts, route);
+                }
+                Err(e) if e.is_fleet_fault() => {
+                    self.metrics.aborts.fetch_add(1, AtomicOrdering::Relaxed);
+                    if attempts <= self.config.max_retries {
+                        self.metrics.retries.fetch_add(1, AtomicOrdering::Relaxed);
+                        let backoff = self.config.retry_backoff_ms << (attempts - 1).min(10);
+                        if backoff > 0 {
+                            thread::sleep(Duration::from_millis(backoff));
+                        }
+                        continue;
+                    }
+                    break e;
+                }
+                Err(e) => {
+                    let route = if attempts == 1 {
+                        Route::Direct
+                    } else {
+                        Route::Retried
+                    };
+                    return (Err(e), attempts, route);
+                }
+            }
+        };
+        if self.config.degrade && req.engine != Engine::Sequential {
+            self.metrics.degraded.fetch_add(1, AtomicOrdering::Relaxed);
+            attempts += 1;
+            let seq = req.clone().engine(Engine::Sequential);
+            let outcome = self.service.run(&seq).map(Arc::new);
+            return (outcome, attempts, Route::Degraded);
+        }
+        let route = if attempts == 1 {
+            Route::Direct
+        } else {
+            Route::Retried
+        };
+        (Err(exhausted), attempts, route)
+    }
+
     /// Serve a batch: fingerprint every request, answer repeats from
     /// the cache, coalesce in-batch duplicates onto one job, and run
     /// the remaining jobs concurrently (at most
@@ -235,6 +341,8 @@ impl BatchCoordinator {
                         served: Served::Hit,
                         queue_seconds: t_batch.elapsed().as_secs_f64(),
                         run_seconds: 0.0,
+                        attempts: 0,
+                        route: Route::Cached,
                         result: Ok(cached),
                     });
                     continue;
@@ -274,11 +382,15 @@ impl BatchCoordinator {
                         let job = &jobs[j];
                         let queue_seconds = t_batch.elapsed().as_secs_f64();
                         let t_run = Instant::now();
-                        let outcome = self.service.run(&job.request).map(Arc::new);
+                        let (outcome, attempts, route) = self.run_with_recovery(&job.request);
                         let run_seconds = t_run.elapsed().as_secs_f64();
                         self.metrics.jobs_run.fetch_add(1, AtomicOrdering::Relaxed);
                         match &outcome {
-                            Ok(res) => {
+                            // A degraded (sequential-fallback) result is
+                            // served but never cached: it is not the
+                            // bit-identical parallel ordering the
+                            // fingerprint promises future hits.
+                            Ok(res) if route != Route::Degraded => {
                                 let evicted = self
                                     .cache
                                     .lock()
@@ -288,12 +400,13 @@ impl BatchCoordinator {
                                     .evictions
                                     .fetch_add(evicted, AtomicOrdering::Relaxed);
                             }
+                            Ok(_) => {}
                             Err(_) => {
                                 self.metrics.errors.fetch_add(1, AtomicOrdering::Relaxed);
                             }
                         }
                         *outcomes[j].lock().expect("outcome slot") =
-                            Some((outcome, queue_seconds, run_seconds));
+                            Some((outcome, queue_seconds, run_seconds, attempts, route));
                     });
                 }
             });
@@ -301,7 +414,7 @@ impl BatchCoordinator {
 
         // Reply assembly, in request order.
         for (job, slot) in jobs.into_iter().zip(outcomes) {
-            let (outcome, queue_seconds, run_seconds) = slot
+            let (outcome, queue_seconds, run_seconds, attempts, route) = slot
                 .into_inner()
                 .expect("outcome slot")
                 .expect("every job ran");
@@ -312,6 +425,8 @@ impl BatchCoordinator {
                     served,
                     queue_seconds,
                     run_seconds,
+                    attempts,
+                    route,
                     result: outcome.clone(),
                 });
             }
@@ -335,6 +450,7 @@ mod tests {
             ServiceConfig {
                 cache_capacity: capacity,
                 max_in_flight: 3,
+                ..ServiceConfig::default()
             },
         )
     }
@@ -447,5 +563,110 @@ mod tests {
         let c = coord(4);
         assert!(c.submit(Vec::new()).is_empty());
         assert_eq!(c.metrics(), ServiceSnapshot::default());
+    }
+
+    #[test]
+    fn clean_requests_route_direct_and_hits_route_cached() {
+        let c = coord(8);
+        let g = generators::grid2d(9, 9);
+        let miss = c.request(OrderingRequest::new(&g));
+        assert_eq!((miss.attempts, miss.route), (1, Route::Direct));
+        let hit = c.request(OrderingRequest::new(&g));
+        assert_eq!((hit.attempts, hit.route), (0, Route::Cached));
+        let m = c.metrics();
+        assert_eq!((m.retries, m.aborts, m.degraded, m.errors), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn one_shot_fault_is_retried_to_success() {
+        // The injected panic fires on the first fleet only (one-shot
+        // trigger); the retry must complete the batch cleanly.
+        let svc = OrderingService::new_cpu_only()
+            .with_fault_plan(crate::comm::FaultPlan::new().panic_at(1, 25));
+        let c = BatchCoordinator::with_config(
+            svc,
+            ServiceConfig {
+                max_retries: 1,
+                retry_backoff_ms: 0,
+                ..ServiceConfig::default()
+            },
+        );
+        let g = generators::grid2d(12, 12);
+        let req = OrderingRequest::new(&g)
+            .parse_strategy("seed=11,executor=sim")
+            .unwrap()
+            .engine(Engine::PtScotch { p: 3 });
+        let reply = c.request(req.clone());
+        assert_eq!((reply.attempts, reply.route), (2, Route::Retried));
+        let recovered = reply.result.expect("retry recovers the request");
+        let m = c.metrics();
+        assert_eq!((m.retries, m.aborts, m.degraded, m.errors), (1, 1, 0, 0));
+        // The recovered result is the same ordering a clean service
+        // produces — the fault left no trace in the output.
+        let clean = BatchCoordinator::new(OrderingService::new_cpu_only());
+        let reference = clean.request(req).result.unwrap();
+        assert_eq!(recovered.ordering, reference.ordering);
+    }
+
+    #[test]
+    fn exhausted_retries_degrade_to_sequential_and_skip_the_cache() {
+        // Two one-shot triggers at the same point: with max_retries=1
+        // the first attempt and its single retry both die, then the
+        // ladder degrades to the sequential engine (no fleet, no
+        // faults left to fire).
+        let plan = crate::comm::FaultPlan::new().panic_at(0, 5).panic_at(0, 5);
+        let svc = OrderingService::new_cpu_only().with_fault_plan(plan);
+        let c = BatchCoordinator::with_config(
+            svc,
+            ServiceConfig {
+                max_retries: 1,
+                retry_backoff_ms: 0,
+                ..ServiceConfig::default()
+            },
+        );
+        let g = generators::grid2d(12, 12);
+        let req = OrderingRequest::new(&g)
+            .parse_strategy("seed=11,executor=sim")
+            .unwrap()
+            .engine(Engine::PtScotch { p: 2 });
+        let reply = c.request(req.clone());
+        assert_eq!((reply.attempts, reply.route), (3, Route::Degraded));
+        let degraded = reply.result.expect("degradation serves the request");
+        let m = c.metrics();
+        assert_eq!((m.retries, m.aborts, m.degraded, m.errors), (1, 2, 1, 0));
+        // The degraded reply equals the sequential reference…
+        let clean = BatchCoordinator::new(OrderingService::new_cpu_only());
+        let seq_ref = clean
+            .request(req.clone().engine(Engine::Sequential))
+            .result
+            .unwrap();
+        assert_eq!(degraded.ordering, seq_ref.ordering);
+        // …and was NOT cached under the parallel fingerprint: the same
+        // request misses again (and now succeeds — the plan is spent).
+        let again = c.request(req);
+        assert_eq!(again.served, Served::Miss);
+        assert_eq!(again.route, Route::Direct);
+    }
+
+    #[test]
+    fn deterministic_errors_are_never_retried() {
+        let c = BatchCoordinator::with_config(
+            OrderingService::new_cpu_only(),
+            ServiceConfig {
+                max_retries: 3,
+                retry_backoff_ms: 0,
+                ..ServiceConfig::default()
+            },
+        );
+        let g = generators::grid2d(8, 8);
+        let reply = c.request(
+            OrderingRequest::new(&g)
+                .parse_strategy("refiner=xla")
+                .unwrap(),
+        );
+        assert_eq!((reply.attempts, reply.route), (1, Route::Direct));
+        assert!(reply.result.is_err());
+        let m = c.metrics();
+        assert_eq!((m.retries, m.aborts, m.errors), (0, 0, 1));
     }
 }

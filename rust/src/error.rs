@@ -25,6 +25,45 @@ pub enum Error {
     Runtime(String),
     /// No AOT artifact available for the requested kernel/size bucket.
     NoArtifact(String),
+    /// A rank thread of the in-process fleet panicked. The abort
+    /// protocol (DESIGN.md §3.2) unwound every surviving rank instead
+    /// of letting the process die or the fleet hang, so the fallible
+    /// run entry points surface this as an error.
+    RankPanicked {
+        /// Global rank whose program panicked.
+        rank: usize,
+        /// The panic message (for injected faults, a description of
+        /// the scripted trigger).
+        message: String,
+    },
+    /// A blocking transport wait exceeded the configured stall
+    /// deadline: some rank stopped making progress without panicking
+    /// (DESIGN.md §3.2). The whole fleet is unwound and the run fails
+    /// with this error instead of hanging.
+    FleetStalled {
+        /// Global rank whose wait timed out (or whose injected stall
+        /// expired unnoticed).
+        rank: usize,
+        /// Description of the transport operation that stalled.
+        op: String,
+    },
+    /// A configuration environment variable (`PTSCOTCH_EXECUTOR`,
+    /// `PTSCOTCH_FAULT`, …) held an unusable value. Surfaced through
+    /// the service and CLI instead of aborting the process.
+    BadEnv(String),
+}
+
+impl Error {
+    /// Is this a fleet-level fault — a rank panic or a stalled fleet —
+    /// that a service-level retry may recover from? Deterministic
+    /// errors (bad strategy, missing artifact, …) would simply recur,
+    /// so the recovery ladder (DESIGN.md §6) only re-runs on these.
+    pub fn is_fleet_fault(&self) -> bool {
+        matches!(
+            self,
+            Error::RankPanicked { .. } | Error::FleetStalled { .. }
+        )
+    }
 }
 
 impl fmt::Display for Error {
@@ -40,6 +79,13 @@ impl fmt::Display for Error {
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::NoArtifact(m) => write!(f, "no artifact: {m}"),
+            Error::RankPanicked { rank, message } => {
+                write!(f, "rank {rank} panicked: {message}")
+            }
+            Error::FleetStalled { rank, op } => {
+                write!(f, "fleet stalled: rank {rank} exceeded the stall deadline in {op}")
+            }
+            Error::BadEnv(m) => write!(f, "bad environment: {m}"),
         }
     }
 }

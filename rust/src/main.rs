@@ -4,7 +4,7 @@
 //! ptscotch order  --graph grid2d:64x64      -p 8 --engine pts [--strategy band=3,...]
 //! ptscotch order  --graph file:matrix.mtx   --engine seq
 //! ptscotch suite  --scale 1 -p 2,4,8        # Table-2/3-style sweep
-//! ptscotch batch  --requests reqs.txt [--repeat 2] [--cache 64] [--jobs 4]
+//! ptscotch batch  --requests reqs.txt [--repeat 2] [--cache 64] [--jobs 4] [--retries 2]
 //! ptscotch info                             # artifact / runtime status
 //! ```
 //!
@@ -15,10 +15,13 @@
 //! [`BatchCoordinator`]: one request per line,
 //! `graph=<spec> [strategy=k=v;k=v] [engine=seq|pts|pm] [p=N] [tag=T]`,
 //! `#` starts a comment. Repeated identical requests are served from
-//! the fingerprint cache (DESIGN.md §6).
+//! the fingerprint cache (DESIGN.md §6). Fleet-level faults (e.g.
+//! injected via `PTSCOTCH_FAULT`) walk the recovery ladder — up to
+//! `--retries` re-runs, then sequential degradation — and the command
+//! exits nonzero if any request exhausts the ladder.
 
 use ptscotch::coordinator::{
-    BatchCoordinator, Engine, OrderingRequest, OrderingService, Served, ServiceConfig,
+    BatchCoordinator, Engine, OrderingRequest, OrderingService, Route, Served, ServiceConfig,
 };
 use ptscotch::graph::{generators, io, Graph};
 use ptscotch::runtime::XlaRuntime;
@@ -222,6 +225,7 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
     let repeat: usize = get_flag(args, "--repeat")
         .map(|s| s.parse().unwrap_or(1))
         .unwrap_or(1);
+    let defaults = ServiceConfig::default();
     let config = ServiceConfig {
         cache_capacity: get_flag(args, "--cache")
             .map(|s| s.parse().unwrap_or(64))
@@ -229,6 +233,10 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
         max_in_flight: get_flag(args, "--jobs")
             .map(|s| s.parse().unwrap_or(4))
             .unwrap_or(4),
+        max_retries: get_flag(args, "--retries")
+            .map(|s| s.parse().unwrap_or(defaults.max_retries))
+            .unwrap_or(defaults.max_retries),
+        ..defaults
     };
     let mut graphs = HashMap::new();
     let mut requests = Vec::new();
@@ -250,13 +258,18 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
         "{:<20} {:>5} {:>10} {:>10} {:>10} {:>12} {:>7}",
         "tag", "round", "served", "queue(ms)", "run(ms)", "OPC", "cblk"
     );
+    let mut failed = 0u64;
     for round in 0..repeat.max(1) {
         let replies = coord.submit(requests.clone());
         for r in replies {
-            let served = match r.served {
-                Served::Hit => "hit",
-                Served::Miss => "miss",
-                Served::Coalesced => "coalesced",
+            // The served column shows the recovery route when the
+            // ladder moved past the direct path.
+            let served = match (r.served, r.route) {
+                (Served::Hit, _) => "hit",
+                (_, Route::Retried) => "retried",
+                (_, Route::Degraded) => "degraded",
+                (Served::Miss, _) => "miss",
+                (Served::Coalesced, _) => "coalesced",
             };
             match &r.result {
                 Ok(res) => println!(
@@ -269,14 +282,18 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
                     res.stats.opc,
                     res.blocks.cblk
                 ),
-                Err(e) => println!("{:<20} {:>5} {:>10} error: {e}", r.tag, round, served),
+                Err(e) => {
+                    failed += 1;
+                    println!("{:<20} {:>5} {:>10} error: {e}", r.tag, round, served);
+                }
             }
         }
     }
     let m = coord.metrics();
     println!(
         "served {} requests: {} hits, {} misses, {} coalesced ({} orderings run, \
-         hit-rate {:.1}%, {} evictions, {} errors)",
+         hit-rate {:.1}%, {} evictions, {} errors; recovery: {} aborts, {} retries, \
+         {} degraded)",
         m.requests(),
         m.hits,
         m.misses,
@@ -284,8 +301,16 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
         m.jobs_run,
         m.hit_rate() * 100.0,
         m.evictions,
-        m.errors
+        m.errors,
+        m.aborts,
+        m.retries,
+        m.degraded
     );
+    if failed > 0 {
+        return Err(format!(
+            "{failed} request(s) failed after exhausting the recovery ladder"
+        ));
+    }
     Ok(())
 }
 
@@ -315,7 +340,7 @@ fn main() -> ExitCode {
             eprintln!(
                 "usage: ptscotch <order|suite|batch|info> [--graph SPEC] [-p N] \
                  [--engine seq|pts|pm] [--strategy k=v,...] \
-                 [--requests FILE --repeat K --cache N --jobs N]"
+                 [--requests FILE --repeat K --cache N --jobs N --retries N]"
             );
             return ExitCode::from(2);
         }

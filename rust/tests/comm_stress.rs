@@ -3,37 +3,38 @@
 //! so all ranks draw identical op sequences and parameters; the ops
 //! themselves (`alltoallv`, `allreduce`, `barrier`, `bcast`, `split`,
 //! tag-shuffled p2p) are chosen to collide tags, cross sub-communicator
-//! boundaries and leave messages in flight across collectives. A
-//! watchdog converts a deadlock into a test failure instead of a hang,
-//! and the per-seed accumulator must agree between the serialized
-//! simulator and the free-running threaded fabric.
+//! boundaries and leave messages in flight across collectives. The
+//! transport's own stall deadline (DESIGN.md §3.2) converts a deadlock
+//! into a structured `FleetStalled` error instead of a hang — no
+//! test-local watchdog thread needed — and the per-seed accumulator
+//! must agree between the serialized simulator and the free-running
+//! threaded fabric.
 
-use ptscotch::comm::{self, Executor};
+use ptscotch::comm::{self, Executor, RunConfig};
 use ptscotch::rng::Rng;
-use std::sync::mpsc;
 use std::time::Duration;
 
-/// Run `f` on `p` ranks under `exec` with a deadlock watchdog: a hung
-/// fleet fails after `secs` seconds instead of wedging the suite, and a
-/// rank panic is reported as such rather than as a timeout.
-fn run_with_watchdog<R, F>(exec: Executor, p: usize, secs: u64, f: F) -> Vec<R>
+/// A deliberately tight stall deadline: the stress programs never
+/// legitimately block for anywhere near this long, so a deadlock (lost
+/// wakeup, tag mismatch, split desync) fails the suite within seconds
+/// as `FleetStalled` instead of wedging it.
+const TIGHT_DEADLINE: Duration = Duration::from_secs(2);
+
+/// Run `f` on `p` ranks under `exec` with the tight stall deadline. A
+/// hung fleet surfaces as `Err(FleetStalled)` and a rank panic as
+/// `Err(RankPanicked)`; both fail the test with the structured message.
+fn run_tight<R, F>(exec: Executor, p: usize, f: F) -> Vec<R>
 where
     R: Send + 'static,
     F: Fn(comm::Comm) -> R + Send + Sync + 'static,
 {
-    let (tx, rx) = mpsc::channel();
-    std::thread::spawn(move || {
-        // A panicked rank propagates out of run_on and drops `tx`.
-        let _ = tx.send(comm::run_on(exec, p, f).0);
-    });
-    match rx.recv_timeout(Duration::from_secs(secs)) {
-        Ok(res) => res,
-        Err(mpsc::RecvTimeoutError::Timeout) => {
-            panic!("{exec} fleet p={p} deadlocked (watchdog {secs}s)")
-        }
-        Err(mpsc::RecvTimeoutError::Disconnected) => {
-            panic!("{exec} fleet p={p}: a rank panicked")
-        }
+    let cfg = RunConfig {
+        fault: None,
+        stall_deadline: TIGHT_DEADLINE,
+    };
+    match comm::try_run_with(exec, p, cfg, f) {
+        Ok((res, _)) => res,
+        Err(e) => panic!("{exec} fleet p={p}: {e}"),
     }
 }
 
@@ -145,7 +146,7 @@ fn stress_program(c: &comm::Comm, seed: u64) -> u64 {
 fn randomized_interleavings_agree_across_executors() {
     for p in [2usize, 3, 5, 8] {
         for seed in [1u64, 17, 4242] {
-            let run = |exec| run_with_watchdog(exec, p, 60, move |c| stress_program(&c, seed));
+            let run = |exec| run_tight(exec, p, move |c| stress_program(&c, seed));
             let sim = run(Executor::Sim);
             let thr = run(Executor::Threads);
             assert_eq!(sim, thr, "p={p} seed={seed}: executors diverged");
@@ -162,7 +163,7 @@ fn overlap_clones_stress_both_executors() {
     // thread doing a full collective sequence on a tag-scoped clone
     // while the main thread runs another on the base communicator.
     for exec in [Executor::Sim, Executor::Threads] {
-        let res = run_with_watchdog(exec, 4, 60, move |c| {
+        let res = run_tight(exec, 4, move |c| {
             let oc = c.overlap_context(9);
             let (bg, fg) = std::thread::scope(|s| {
                 // `move` takes the owned clone: `Comm` is Send, not Sync.

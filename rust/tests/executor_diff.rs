@@ -26,6 +26,10 @@ fn assert_reports_identical(sim: &OrderingResult, thr: &OrderingResult, ctx: &st
     assert_eq!(sim.blocks, thr.blocks, "{ctx}: blocks");
     assert_eq!(sim.bytes_sent_per_rank, thr.bytes_sent_per_rank, "{ctx}: bytes");
     assert_eq!(sim.msgs_sent_per_rank, thr.msgs_sent_per_rank, "{ctx}: msgs");
+    assert_eq!(
+        sim.transport_ops_per_rank, thr.transport_ops_per_rank,
+        "{ctx}: transport ops"
+    );
     assert_eq!(sim.peak_mem_per_rank, thr.peak_mem_per_rank, "{ctx}: peak mem");
     assert_eq!(sim.stats.nnz, thr.stats.nnz, "{ctx}: nnz");
     assert_eq!(sim.stats.opc, thr.stats.opc, "{ctx}: opc");

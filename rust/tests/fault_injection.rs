@@ -1,0 +1,237 @@
+//! Fault-injection suite (DESIGN.md §3.2, §6): scripted rank faults
+//! against real orderings on both executors.
+//!
+//! The contract under test, per (graph, p, executor):
+//!
+//! * a scripted panic at *any* transport-op index returns
+//!   `Err(RankPanicked)` from the fallible run path within the stall
+//!   deadline — the process neither aborts nor hangs;
+//! * injected delays never change `perm`/`iperm` or the traffic
+//!   counters (the determinism contract is schedule-independent, and a
+//!   delay is just a schedule perturbation);
+//! * an injected stall surfaces as `Err(FleetStalled)` once the
+//!   deadline expires;
+//! * the `BatchCoordinator` recovery ladder turns one-shot faults into
+//!   served requests: retry on the next rung, sequential degradation
+//!   on the last — with the metrics and report routes to prove it.
+
+use ptscotch::comm::{self, FaultPlan};
+use ptscotch::coordinator::{
+    BatchCoordinator, Engine, OrderingRequest, OrderingService, Route, Served, ServiceConfig,
+};
+use ptscotch::graph::{generators, Graph};
+use ptscotch::strategy::Strategy;
+use ptscotch::Error;
+use std::time::Duration;
+
+/// The graphs the sweep runs over — small enough to order repeatedly,
+/// shaped differently enough (regular grid vs irregular mesh) to push
+/// distinct collective schedules through the fault hook.
+fn suite() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("grid2d", generators::grid2d(12, 12)),
+        ("irregular", generators::irregular_mesh(10, 10, 5)),
+    ]
+}
+
+/// A CPU-only service with `deadline_secs` as its stall deadline and an
+/// optional scripted fault plan.
+fn svc_with(plan: Option<FaultPlan>, deadline_secs: u64) -> OrderingService {
+    let svc =
+        OrderingService::new_cpu_only().with_stall_deadline(Duration::from_secs(deadline_secs));
+    match plan {
+        Some(p) => svc.with_fault_plan(p),
+        None => svc,
+    }
+}
+
+/// A PtScotch-engine request pinned to `exec` with the suite seed.
+fn order_req(g: &Graph, p: usize, exec: &str) -> OrderingRequest {
+    let strat = Strategy::parse(&format!("executor={exec},seed=11")).unwrap();
+    OrderingRequest::new(g)
+        .strategy(strat)
+        .engine(Engine::PtScotch { p })
+}
+
+#[test]
+fn scripted_panic_at_sampled_ops_errors_within_deadline() {
+    // For every (graph, p, executor): learn the victim rank's total op
+    // count from a fault-free run, then re-run with a scripted panic at
+    // a sample of op indices spanning that range. Every injection must
+    // come back as RankPanicked naming the victim — a propagation bug
+    // would surface as FleetStalled (the 30s deadline) or a hang, both
+    // failing the match.
+    for (name, g) in &suite() {
+        for p in [2usize, 4, 5] {
+            for exec in ["sim", "threads"] {
+                let victim = p - 1;
+                let clean = svc_with(None, 30)
+                    .run(&order_req(g, p, exec))
+                    .unwrap_or_else(|e| panic!("{name} p={p} {exec}: clean run failed: {e}"));
+                let total = clean.transport_ops_per_rank[victim];
+                assert!(total > 0, "{name} p={p} {exec}: victim ran no transport ops");
+                let step = (total / 5).max(1);
+                for op in (0..total).step_by(step as usize) {
+                    let plan = FaultPlan::new().panic_at(victim, op);
+                    let err = svc_with(Some(plan), 30)
+                        .run(&order_req(g, p, exec))
+                        .expect_err("injected panic must fail the run");
+                    match err {
+                        Error::RankPanicked { rank, ref message } => {
+                            assert_eq!(rank, victim, "{name} p={p} {exec} op={op}");
+                            assert!(
+                                message.contains("injected panic"),
+                                "{name} p={p} {exec} op={op}: {message}"
+                            );
+                        }
+                        other => {
+                            panic!("{name} p={p} {exec} op={op}: expected RankPanicked, got {other}")
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn injected_delays_never_change_the_ordering() {
+    // Delays perturb the schedule without changing any message; by the
+    // determinism contract the permutation and traffic counters must be
+    // bit-identical to the fault-free run on both executors.
+    for (name, g) in &suite() {
+        for exec in ["sim", "threads"] {
+            let p = 4;
+            let clean = svc_with(None, 30).run(&order_req(g, p, exec)).unwrap();
+            let plan = FaultPlan::new()
+                .delay_at(0, 7, 20)
+                .delay_at(2, 19, 10)
+                .delay_at(3, 3, 30);
+            let slow = svc_with(Some(plan), 30)
+                .run(&order_req(g, p, exec))
+                .unwrap_or_else(|e| panic!("{name} {exec}: delayed run failed: {e}"));
+            let ctx = format!("{name} {exec}");
+            assert_eq!(clean.ordering.perm, slow.ordering.perm, "{ctx}: perm");
+            assert_eq!(clean.ordering.iperm, slow.ordering.iperm, "{ctx}: iperm");
+            assert_eq!(
+                clean.bytes_sent_per_rank, slow.bytes_sent_per_rank,
+                "{ctx}: bytes"
+            );
+            assert_eq!(
+                clean.msgs_sent_per_rank, slow.msgs_sent_per_rank,
+                "{ctx}: msgs"
+            );
+            assert_eq!(
+                clean.transport_ops_per_rank, slow.transport_ops_per_rank,
+                "{ctx}: transport ops"
+            );
+        }
+    }
+}
+
+#[test]
+fn injected_stall_becomes_fleet_stalled_not_a_hang() {
+    let g = generators::grid2d(12, 12);
+    for exec in ["sim", "threads"] {
+        let t0 = std::time::Instant::now();
+        let plan = FaultPlan::new().stall_at(1, 10);
+        let err = svc_with(Some(plan), 2)
+            .run(&order_req(&g, 3, exec))
+            .expect_err("stalled fleet must fail");
+        assert!(
+            matches!(err, Error::FleetStalled { .. }),
+            "{exec}: expected FleetStalled, got {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "{exec}: stall detection took {:?}",
+            t0.elapsed()
+        );
+    }
+}
+
+#[test]
+fn coordinator_retries_one_shot_fault_to_a_bit_identical_result() {
+    // max_retries=1 + a single one-shot panic: the batch completes with
+    // retries=1, errors=0, and the recovered ordering is the exact one
+    // a fault-free service produces.
+    let g = generators::grid2d(12, 12);
+    for exec in ["sim", "threads"] {
+        let plan = FaultPlan::new().panic_at(1, 25);
+        let coord = BatchCoordinator::with_config(
+            svc_with(Some(plan), 30),
+            ServiceConfig {
+                max_retries: 1,
+                retry_backoff_ms: 1,
+                ..ServiceConfig::default()
+            },
+        );
+        let reply = coord.request(order_req(&g, 3, exec));
+        assert_eq!(reply.served, Served::Miss, "{exec}");
+        assert_eq!((reply.attempts, reply.route), (2, Route::Retried), "{exec}");
+        let recovered = reply.result.expect("retry must recover the request");
+        let m = coord.metrics();
+        assert_eq!(
+            (m.retries, m.aborts, m.errors, m.degraded),
+            (1, 1, 0, 0),
+            "{exec}"
+        );
+        let reference = svc_with(None, 30).run(&order_req(&g, 3, exec)).unwrap();
+        assert_eq!(recovered.ordering.iperm, reference.ordering.iperm, "{exec}");
+    }
+}
+
+#[test]
+fn exhausted_ladder_degrades_to_the_sequential_reference() {
+    // Enough one-shot triggers to kill the first attempt and its only
+    // retry: the ladder must fall back to the sequential engine, serve
+    // the request (errors=0), and keep the degraded result out of the
+    // cache so the parallel fingerprint is never poisoned.
+    let g = generators::grid2d(12, 12);
+    let plan = FaultPlan::new()
+        .panic_at(0, 5)
+        .panic_at(0, 5)
+        .panic_at(0, 5)
+        .panic_at(0, 5);
+    let coord = BatchCoordinator::with_config(
+        svc_with(Some(plan), 30),
+        ServiceConfig {
+            max_retries: 1,
+            retry_backoff_ms: 1,
+            ..ServiceConfig::default()
+        },
+    );
+    let req = order_req(&g, 2, "sim");
+    let reply = coord.request(req.clone());
+    assert_eq!((reply.attempts, reply.route), (3, Route::Degraded));
+    let degraded = reply.result.expect("degradation must serve the request");
+    let m = coord.metrics();
+    assert_eq!((m.retries, m.aborts, m.errors, m.degraded), (1, 2, 0, 1));
+    // The degraded ordering is the sequential one for the same strategy.
+    let seq = OrderingService::new_cpu_only()
+        .run(&req.clone().engine(Engine::Sequential))
+        .unwrap();
+    assert_eq!(degraded.ordering.iperm, seq.ordering.iperm);
+    // Not cached: the same request misses again (two triggers remain, so
+    // it degrades again rather than serving a stale sequential hit).
+    let again = coord.request(req);
+    assert_eq!(again.served, Served::Miss);
+    assert_eq!(again.route, Route::Degraded);
+}
+
+#[test]
+fn malformed_fault_spec_is_a_structured_bad_env_error() {
+    // The env grammar itself (no env mutation here — parse() is the
+    // same code path from_env() uses, and tests run concurrently).
+    for spec in ["0@panic", "1@5:explode", "one@2:stall"] {
+        let err = FaultPlan::parse(spec).unwrap_err();
+        assert!(
+            matches!(err, Error::BadEnv(_)),
+            "{spec:?}: expected BadEnv, got {err}"
+        );
+    }
+    // And a well-formed spec round-trips through the comm re-exports.
+    let plan = FaultPlan::parse("0@3:delay(5);1@9:panic").unwrap();
+    assert_eq!(plan.len(), 2);
+    assert_eq!(comm::FAULT_ENV, "PTSCOTCH_FAULT");
+}
