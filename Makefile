@@ -49,7 +49,7 @@ tsan:
 	    --target x86_64-unknown-linux-gnu \
 	    --release -q --lib comm:: dist:: && \
 	  RUSTFLAGS="-Zsanitizer=thread" TSAN_OPTIONS=halt_on_error=1 \
-	  PTSCOTCH_EXECUTOR=threads \
+	  PTSCOTCH_EXECUTOR=threads PTSCOTCH_STRESS_DEADLINE_SECS=20 \
 	  cargo +nightly test -Zbuild-std \
 	    --target x86_64-unknown-linux-gnu \
 	    --release -q --test comm_stress --test traffic --test service \

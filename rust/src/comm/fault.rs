@@ -17,12 +17,21 @@
 //!   panicking, exercising the stall-deadline path
 //!   (`Error::FleetStalled`).
 //!
-//! Op-count triggers make injection *deterministic*: the same plan on
-//! the same program fires at exactly the same point in the rank's
-//! transport history on either executor, with no flaky sleeps. Plans
-//! come from code ([`FaultPlan::panic_at`] and friends) or from the
-//! [`FAULT_ENV`] environment variable; an absent/empty plan costs one
-//! branch per transport op.
+//! Op-count triggers make injection *deterministic*: a rank's op
+//! counter is schedule-independent, so the same plan on the same
+//! program fires at the same count on either executor, with no flaky
+//! sleeps. **Caveat:** the counter is shared by *all* of a rank's
+//! transport threads. While a rank runs single-threaded the Nth op is
+//! always the same program point; when the §3.1 overlap thread is on
+//! (strategy `overlap=1`, the default) the two threads' ops interleave
+//! into the shared counter in schedule-dependent order, so a trigger
+//! at `(rank, op)` still fires exactly once at the rank's Nth op — and
+//! panic isolation and abort propagation hold regardless of which
+//! thread draws it — but the *program point* it lands on can differ
+//! between runs. Tests that assert point-precise behavior pin
+//! `overlap=0`. Plans come from code ([`FaultPlan::panic_at`] and
+//! friends) or from the [`FAULT_ENV`] environment variable; an
+//! absent/empty plan costs one branch per transport op.
 //!
 //! Triggers are **one-shot**: a trigger that fired stays consumed for
 //! the lifetime of the plan, across every fleet sharing it (clones

@@ -35,17 +35,28 @@
 //!
 //! **Fault model (DESIGN.md §3.2).** A rank panic no longer kills the
 //! process or hangs its peers: each rank body runs under
-//! `catch_unwind`, the first dying rank raises a fleet-wide abort flag
-//! on the shared transport and wakes every mailbox condvar, and every
-//! subsequent or blocked transport operation on surviving ranks
-//! unwinds with a dedicated abort payload. The fallible entry points
-//! ([`try_run_on`] / [`try_run_with`]) surface this as
-//! `Err(Error::RankPanicked)`; a configurable stall deadline on every
-//! blocking wait turns silent no-progress into `Err(Error::FleetStalled)`
-//! instead of a hang. Deterministic scripted faults — panics, delays,
-//! stalls at a given rank's Nth transport op — are injected through
-//! [`FaultPlan`] (or the [`FAULT_ENV`] env spec) to test all of this
-//! without flaky sleeps.
+//! `catch_unwind`, a dying rank raises a fleet-wide abort flag on the
+//! shared transport and wakes every mailbox condvar *at panic time*
+//! (injected panics raise in [`FaultPlan`]'s op hook, intra-rank
+//! overlap threads through [`Comm::guard`], everything else at the
+//! rank's top-level catch), and every subsequent or blocked transport
+//! operation on surviving ranks unwinds with a dedicated abort
+//! payload. The fallible entry points ([`try_run_on`] /
+//! [`try_run_with`]) surface this as `Err(Error::RankPanicked)`; a
+//! configurable stall deadline on every blocking wait turns fleet-wide
+//! no-progress into `Err(Error::FleetStalled)` instead of a hang. The
+//! deadline is opt-in: [`run`]/[`run_on`] arm none (a long compute
+//! phase is not a stall), scripted-fault configs arm
+//! [`DEFAULT_STALL_DEADLINE`], and any transport progress anywhere in
+//! the fleet restarts a waiter's clock. Deterministic scripted faults
+//! — panics, delays, stalls at a given rank's Nth transport op — are
+//! injected through [`FaultPlan`] (or the [`FAULT_ENV`] env spec) to
+//! test all of this without flaky sleeps. One caveat rides on the op
+//! coordinate: a rank's op counter is shared by all of its transport
+//! threads, so with the §3.1 overlap thread enabled (`overlap=1`, the
+//! default strategy) the mapping from op index to *program point* is
+//! schedule-dependent — point-precise injection should pin
+//! `overlap=0` (see `comm::fault`).
 
 pub mod exec;
 pub mod fault;
@@ -63,12 +74,26 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AOrd};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-/// Default per-wait stall deadline of the transport: how long a rank
-/// may block on one receive (or injected stall) before the fleet is
-/// declared stalled and unwound with [`Error::FleetStalled`]. Generous
-/// on purpose — it is a liveness backstop, not a performance knob;
-/// tests that want fast failure lower it via [`RunConfig`].
+/// Stall deadline armed when one is wanted but none was configured:
+/// how long a blocking wait may go **without any fleet-wide transport
+/// progress** before the fleet is declared stalled and unwound with
+/// [`Error::FleetStalled`]. Progress anywhere in the fleet restarts
+/// the clock, so a legitimately imbalanced fleet (one rank waiting
+/// minutes on a slow peer that is still computing *and talking*) is
+/// not misreported. Generous on purpose — it is a liveness backstop,
+/// not a performance knob; tests that want fast failure lower it via
+/// [`RunConfig`]. This value is used by the service layer and by any
+/// fleet whose [`RunConfig`] scripts faults but leaves the deadline at
+/// [`NO_STALL_DEADLINE`] (so an injected stall can always trip it).
 pub const DEFAULT_STALL_DEADLINE: Duration = Duration::from_secs(60);
+
+/// Sentinel "no deadline": blocking waits are bounded only by the
+/// abort protocol (a panicking rank still wakes and unwinds every
+/// waiter). This is the default for the infallible [`run`]/[`run_on`]
+/// paths — a long-running ordering with a minutes-long all-compute
+/// phase (e.g. sequential leaf ordering of a folded branch) must never
+/// be misdeclared stalled just because no one configured a deadline.
+pub const NO_STALL_DEADLINE: Duration = Duration::MAX;
 
 /// Per-fleet run configuration for the fallible entry points: the
 /// fault-injection plan (if any) and the stall deadline.
@@ -77,7 +102,12 @@ pub struct RunConfig {
     /// Scripted fault plan; `None` (or an empty plan) injects nothing
     /// and costs one branch per transport op.
     pub fault: Option<FaultPlan>,
-    /// Per-blocking-wait deadline before the fleet is declared stalled.
+    /// How long a blocking wait may last without fleet-wide transport
+    /// progress before the fleet is declared stalled.
+    /// [`NO_STALL_DEADLINE`] (the default) disables the deadline —
+    /// except that a config carrying a fault plan arms
+    /// [`DEFAULT_STALL_DEADLINE`] instead, so a scripted stall cannot
+    /// hang the fleet it was injected into.
     pub stall_deadline: Duration,
 }
 
@@ -85,7 +115,7 @@ impl Default for RunConfig {
     fn default() -> RunConfig {
         RunConfig {
             fault: None,
-            stall_deadline: DEFAULT_STALL_DEADLINE,
+            stall_deadline: NO_STALL_DEADLINE,
         }
     }
 }
@@ -93,6 +123,8 @@ impl Default for RunConfig {
 impl RunConfig {
     /// Default config with the fault plan taken from [`FAULT_ENV`]
     /// (`Err(Error::BadEnv)` if the variable is set but malformed).
+    /// The deadline stays [`NO_STALL_DEADLINE`]; when the env scripts
+    /// faults, fleet construction arms [`DEFAULT_STALL_DEADLINE`].
     pub fn from_env() -> Result<RunConfig> {
         Ok(RunConfig {
             fault: FaultPlan::from_env()?,
@@ -122,6 +154,14 @@ struct AbortCell {
     flag: AtomicBool,
     err: Mutex<Option<Error>>,
     cv: Condvar,
+}
+
+/// One blocking wait's stall clock (see [`Transport::stall_left`]):
+/// when it expires and the fleet progress count it was armed against.
+/// `deadline: None` means the wait is unbounded ([`NO_STALL_DEADLINE`]).
+struct StallClock {
+    deadline: Option<Instant>,
+    seen_progress: u64,
 }
 
 /// Lock a mutex, ignoring poisoning. The transport must stay usable
@@ -190,8 +230,14 @@ struct Transport {
     /// Non-empty scripted fault plan, if any (empty plans are dropped
     /// at construction so the hot path pays one `Option` branch).
     fault: Option<FaultPlan>,
-    /// Per-blocking-wait deadline (see [`DEFAULT_STALL_DEADLINE`]).
+    /// Per-blocking-wait no-progress deadline (see
+    /// [`DEFAULT_STALL_DEADLINE`] / [`NO_STALL_DEADLINE`]).
     stall_deadline: Duration,
+    /// Fleet-wide transport progress: bumped on every packet deposit
+    /// and every successful dequeue. Blocked waiters restart their
+    /// stall clock whenever this moves, so only true no-progress
+    /// states trip [`Error::FleetStalled`].
+    progress: AtomicU64,
     abort: AbortCell,
 }
 
@@ -206,12 +252,23 @@ impl Transport {
                 boxes: (0..p * p).map(|_| Mailbox::default()).collect(),
             },
         };
+        let fault = cfg.fault.filter(|plan| !plan.is_empty());
+        // A plan that scripts faults arms the default deadline when the
+        // caller left it disabled: an injected stall must be able to
+        // trip *something*, and an injected panic's abort still beats
+        // the deadline by waking every waiter.
+        let stall_deadline = if fault.is_some() && cfg.stall_deadline == NO_STALL_DEADLINE {
+            DEFAULT_STALL_DEADLINE
+        } else {
+            cfg.stall_deadline
+        };
         Transport {
             p,
             fabric,
             ranks: (0..p).map(|_| RankStats::default()).collect(),
-            fault: cfg.fault.filter(|plan| !plan.is_empty()),
-            stall_deadline: cfg.stall_deadline,
+            fault,
+            stall_deadline,
+            progress: AtomicU64::new(0),
             abort: AbortCell::default(),
         }
     }
@@ -281,6 +338,19 @@ impl Transport {
                     std::thread::sleep(Duration::from_millis(ms));
                 }
                 Some(FaultAction::Panic) => {
+                    // Raise the abort *at the panic site*, before the
+                    // unwind starts: a rank may run several transport
+                    // threads (the §3.1 overlap), and a sibling parked
+                    // in a blocking pop is only released by the abort
+                    // wakeup — deferring the raise to the rank's
+                    // top-level `catch_unwind` would wedge the fleet
+                    // until the stall deadline (the scope join cannot
+                    // complete while the sibling blocks) and misreport
+                    // the root cause as `FleetStalled`.
+                    self.raise(Error::RankPanicked {
+                        rank,
+                        message: format!("injected panic at transport op {op}"),
+                    });
                     resume_unwind(Box::new(InjectedPanic { op }));
                 }
                 Some(FaultAction::Stall) => self.stall(rank, op),
@@ -300,33 +370,68 @@ impl Transport {
         self.unwind_abort()
     }
 
+    /// Start a stall clock for one blocking wait: expiry instant (if a
+    /// deadline is armed) plus the progress count it was computed at.
+    fn stall_clock(&self) -> StallClock {
+        StallClock {
+            // `checked_add` turns NO_STALL_DEADLINE (and anything else
+            // past the Instant horizon) into "no deadline".
+            deadline: Instant::now().checked_add(self.stall_deadline),
+            seen_progress: self.progress.load(AOrd::Relaxed),
+        }
+    }
+
+    /// Time this wait may still block: `None` means unbounded,
+    /// `Some(ZERO)` means the deadline expired. Any fleet-wide
+    /// transport progress since the clock was last read restarts it —
+    /// the deadline measures *no-progress* time, so one rank waiting
+    /// long on a busy, still-communicating fleet never trips it.
+    fn stall_left(&self, clock: &mut StallClock) -> Option<Duration> {
+        let prog = self.progress.load(AOrd::Relaxed);
+        if prog != clock.seen_progress && clock.deadline.is_some() {
+            clock.seen_progress = prog;
+            clock.deadline = Instant::now().checked_add(self.stall_deadline);
+        }
+        clock
+            .deadline
+            .map(|dl| dl.saturating_duration_since(Instant::now()))
+    }
+
     /// Execute an injected stall: park on the abort condvar until the
     /// fleet aborts for some other reason, or this rank's own stall
     /// deadline expires — in which case the stalled rank itself raises
-    /// [`Error::FleetStalled`] — then unwind.
+    /// [`Error::FleetStalled`] — then unwind. (An armed deadline is
+    /// guaranteed here: a fault plan arms [`DEFAULT_STALL_DEADLINE`]
+    /// unless the caller configured its own.)
     fn stall(&self, rank: usize, op: u64) -> ! {
-        let deadline = Instant::now() + self.stall_deadline;
+        let mut clock = self.stall_clock();
         let mut g = plock(&self.abort.err);
         loop {
             if self.aborted() {
                 drop(g);
                 self.unwind_abort();
             }
-            let now = Instant::now();
-            if now >= deadline {
-                drop(g);
-                self.raise(Error::FleetStalled {
-                    rank,
-                    op: format!("injected stall at transport op {op}"),
-                });
-                self.unwind_abort();
+            match self.stall_left(&mut clock) {
+                Some(left) if left.is_zero() => {
+                    drop(g);
+                    self.raise(Error::FleetStalled {
+                        rank,
+                        op: format!("injected stall at transport op {op}"),
+                    });
+                    self.unwind_abort();
+                }
+                Some(left) => {
+                    g = self
+                        .abort
+                        .cv
+                        .wait_timeout(g, left)
+                        .unwrap_or_else(PoisonError::into_inner)
+                        .0;
+                }
+                None => {
+                    g = self.abort.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
             }
-            g = self
-                .abort
-                .cv
-                .wait_timeout(g, deadline - now)
-                .unwrap_or_else(PoisonError::into_inner)
-                .0;
         }
     }
 
@@ -352,11 +457,13 @@ impl Transport {
                 mbox.avail.notify_all();
             }
         }
+        self.progress.fetch_add(1, AOrd::Relaxed);
     }
 
     /// Take the first packet matching `tag` out of the (dst, src)
     /// queue, blocking until one arrives, the fleet aborts (unwinds
-    /// with the abort payload), or the stall deadline expires (raises
+    /// with the abort payload), or the stall clock runs out — the
+    /// armed deadline with no fleet-wide progress — (raises
     /// [`Error::FleetStalled`] and unwinds). Time spent waiting is
     /// charged to `dst`'s `blocked_ns` (the busy-time column).
     ///
@@ -367,28 +474,35 @@ impl Transport {
     fn pop(&self, dst: usize, src: usize, tag: u64) -> Box<dyn Any + Send> {
         self.op_event(dst);
         let slot = dst * self.p + src;
-        let deadline = Instant::now() + self.stall_deadline;
+        let mut clock = self.stall_clock();
         match &self.fabric {
             Fabric::Sim { state, avail } => {
                 let mut q = plock(state);
                 loop {
                     if let Some(pos) = q[slot].iter().position(|pk| pk.tag == tag) {
-                        return q[slot].remove(pos).unwrap().data;
+                        let data = q[slot].remove(pos).unwrap().data;
+                        self.progress.fetch_add(1, AOrd::Relaxed);
+                        return data;
                     }
                     if self.aborted() {
                         drop(q);
                         self.unwind_abort();
                     }
-                    let now = Instant::now();
-                    if now >= deadline {
+                    let left = self.stall_left(&mut clock);
+                    if left == Some(Duration::ZERO) {
                         drop(q);
                         self.raise_stall(dst, src, tag);
                     }
                     let t0 = Instant::now();
-                    q = avail[dst]
-                        .wait_timeout(q, deadline - now)
-                        .unwrap_or_else(PoisonError::into_inner)
-                        .0;
+                    q = match left {
+                        Some(d) => {
+                            avail[dst]
+                                .wait_timeout(q, d)
+                                .unwrap_or_else(PoisonError::into_inner)
+                                .0
+                        }
+                        None => avail[dst].wait(q).unwrap_or_else(PoisonError::into_inner),
+                    };
                     self.ranks[dst]
                         .blocked_ns
                         .fetch_add(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
@@ -399,23 +513,29 @@ impl Transport {
                 let mut q = plock(&mbox.queue);
                 loop {
                     if let Some(pos) = q.iter().position(|pk| pk.tag == tag) {
-                        return q.remove(pos).unwrap().data;
+                        let data = q.remove(pos).unwrap().data;
+                        self.progress.fetch_add(1, AOrd::Relaxed);
+                        return data;
                     }
                     if self.aborted() {
                         drop(q);
                         self.unwind_abort();
                     }
-                    let now = Instant::now();
-                    if now >= deadline {
+                    let left = self.stall_left(&mut clock);
+                    if left == Some(Duration::ZERO) {
                         drop(q);
                         self.raise_stall(dst, src, tag);
                     }
                     let t0 = Instant::now();
-                    q = mbox
-                        .avail
-                        .wait_timeout(q, deadline - now)
-                        .unwrap_or_else(PoisonError::into_inner)
-                        .0;
+                    q = match left {
+                        Some(d) => {
+                            mbox.avail
+                                .wait_timeout(q, d)
+                                .unwrap_or_else(PoisonError::into_inner)
+                                .0
+                        }
+                        None => mbox.avail.wait(q).unwrap_or_else(PoisonError::into_inner),
+                    };
                     self.ranks[dst]
                         .blocked_ns
                         .fetch_add(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
@@ -504,8 +624,11 @@ where
 }
 
 /// Fallible [`run_on`]: the fault plan comes from [`FAULT_ENV`]
-/// (`Err(Error::BadEnv)` if set but malformed) and the stall deadline
-/// is [`DEFAULT_STALL_DEADLINE`]. See [`try_run_with`].
+/// (`Err(Error::BadEnv)` if set but malformed). No stall deadline is
+/// armed unless the env scripts faults (then
+/// [`DEFAULT_STALL_DEADLINE`]) — long fleets with no configured
+/// deadline are bounded only by the abort protocol. See
+/// [`try_run_with`].
 pub fn try_run_on<R, F>(exec: Executor, p: usize, f: F) -> Result<(Vec<R>, StatsSnapshot)>
 where
     R: Send + 'static,
@@ -522,8 +645,11 @@ where
 ///   rank's thread, every surviving rank is unwound through the abort
 ///   protocol (DESIGN.md §3.2), and the process neither aborts nor
 ///   hangs.
-/// * `Err(Error::FleetStalled)` — some rank blocked past
-///   `cfg.stall_deadline` without the fleet making progress.
+/// * `Err(Error::FleetStalled)` — some rank blocked for
+///   `cfg.stall_deadline` with no fleet-wide transport progress at
+///   all (any progress restarts the waiter's clock, and
+///   [`NO_STALL_DEADLINE`] — the default — disables the check unless
+///   a fault plan arms it).
 ///
 /// On `Ok`, results are bit-identical across executors and unaffected
 /// by injected [`FaultAction::Delay`]s (the determinism contract).
@@ -795,6 +921,31 @@ impl Comm {
             scope: self.scope.wrapping_mul(31).wrapping_add(color as u64 + 1),
             op_seq: std::cell::Cell::new(0),
             transport: self.transport.clone(),
+        }
+    }
+
+    /// Run `f` under this rank's abort protocol: if `f` panics, the
+    /// fleet abort is raised (naming this rank, first raiser wins)
+    /// *before* the unwind continues. Wrap the body of every
+    /// intra-rank transport thread — and the code running concurrently
+    /// with it — in this: a rank whose §3.1 overlap thread dies would
+    /// otherwise leave its sibling parked in a blocking pop that only
+    /// the abort wakeup can release, wedging the fleet until the stall
+    /// deadline (and misreporting the root cause as `FleetStalled`).
+    /// An unwind that is itself the abort payload passes through
+    /// untouched — the root cause is already recorded.
+    pub fn guard<R>(&self, f: impl FnOnce() -> R) -> R {
+        match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => v,
+            Err(payload) => {
+                if !payload.is::<FleetAbort>() {
+                    self.transport.raise(Error::RankPanicked {
+                        rank: self.grank,
+                        message: panic_message(payload.as_ref()),
+                    });
+                }
+                resume_unwind(payload)
+            }
         }
     }
 
@@ -1098,6 +1249,134 @@ mod tests {
                 t0.elapsed() < DEFAULT_STALL_DEADLINE,
                 "{exec}: abort propagated by deadline, not by wakeup"
             );
+        }
+    }
+
+    #[test]
+    fn overlap_thread_injected_panic_reports_rank_panicked() {
+        // Both of a rank's transport threads are live when the scripted
+        // panic fires, so whichever thread draws the armed op index,
+        // the sibling is (or soon will be) parked in a blocking pop.
+        // The panic-time raise must wake it immediately: the result is
+        // RankPanicked with the injected message — never FleetStalled,
+        // never a wait for the 30s deadline.
+        for exec in EXECUTORS {
+            for op in [1u64, 3, 5, 8] {
+                let t0 = Instant::now();
+                let cfg = RunConfig {
+                    fault: Some(FaultPlan::new().panic_at(1, op)),
+                    stall_deadline: Duration::from_secs(30),
+                };
+                let out = try_run_with(exec, 2, cfg, |c| {
+                    let ca = c.overlap_context(0);
+                    let cb = c.overlap_context(1);
+                    std::thread::scope(|s| {
+                        let h = s.spawn(move || {
+                            cb.guard(|| (0..4).map(|i| cb.allreduce_sum(i)).sum::<i64>())
+                        });
+                        let main = ca.guard(|| (0..4).map(|i| ca.allreduce_sum(i)).sum::<i64>());
+                        let bg = match h.join() {
+                            Ok(v) => v,
+                            Err(payload) => resume_unwind(payload),
+                        };
+                        main + bg
+                    })
+                });
+                match out {
+                    Err(Error::RankPanicked { rank, message }) => {
+                        assert_eq!(rank, 1, "{exec} op={op}");
+                        assert!(message.contains("injected panic"), "{exec} op={op}: {message}");
+                    }
+                    other => panic!("{exec} op={op}: expected RankPanicked, got {other:?}"),
+                }
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "{exec} op={op}: abort propagated by deadline, not by wakeup"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn guarded_overlap_thread_panic_wakes_blocked_sibling() {
+        // A *genuine* bug (not an injected fault) in the overlap thread
+        // of rank 1, while rank 1's main thread and both of rank 0's
+        // threads are parked in receives nobody will answer. Only the
+        // guard's panic-time raise can release them — joining the
+        // scope cannot complete while the main thread blocks.
+        for exec in EXECUTORS {
+            let t0 = Instant::now();
+            let cfg = RunConfig {
+                fault: None,
+                stall_deadline: Duration::from_secs(30),
+            };
+            let out = try_run_with(exec, 2, cfg, |c| {
+                let ca = c.overlap_context(0);
+                let cb = c.overlap_context(1);
+                std::thread::scope(|s| {
+                    let h = s.spawn(move || {
+                        cb.guard(|| {
+                            if cb.rank() == 1 {
+                                panic!("overlap bug on rank 1");
+                            }
+                            cb.recv::<u8>(1, 5)
+                        })
+                    });
+                    let from = 1 - ca.rank();
+                    ca.guard(|| ca.recv::<u8>(from, 6));
+                    match h.join() {
+                        Ok(v) => v,
+                        Err(payload) => resume_unwind(payload),
+                    }
+                })
+            });
+            match out {
+                Err(Error::RankPanicked { rank, message }) => {
+                    assert_eq!(rank, 1, "{exec}");
+                    assert!(message.contains("overlap bug"), "{exec}: {message}");
+                }
+                other => panic!("{exec}: expected RankPanicked, got {other:?}"),
+            }
+            assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "{exec}: abort propagated by deadline, not by wakeup"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_progress_restarts_the_stall_clock() {
+        // Rank 0 waits well past the armed deadline for its message
+        // while ranks 1 and 2 keep exchanging traffic: every exchange
+        // restarts rank 0's clock, so the wait must NOT trip
+        // FleetStalled. (`stall_deadline_detects_orphan_recv` is the
+        // control: the same wait with zero fleet progress does trip.)
+        for exec in EXECUTORS {
+            let cfg = RunConfig {
+                fault: None,
+                stall_deadline: Duration::from_millis(400),
+            };
+            let out = try_run_with(exec, 3, cfg, |c| match c.rank() {
+                0 => c.recv::<u8>(1, 99)[0],
+                1 => {
+                    for i in 0..5u8 {
+                        std::thread::sleep(Duration::from_millis(100));
+                        c.send(2, 7, vec![i]);
+                        let _ = c.recv::<u8>(2, 8);
+                    }
+                    c.send(0, 99, vec![42u8]);
+                    0
+                }
+                _ => {
+                    for _ in 0..5 {
+                        let v: Vec<u8> = c.recv(1, 7);
+                        c.send(1, 8, v);
+                    }
+                    0
+                }
+            });
+            let (res, _) = out.unwrap_or_else(|e| panic!("{exec}: spurious stall: {e}"));
+            assert_eq!(res[0], 42, "{exec}");
         }
     }
 

@@ -241,7 +241,14 @@ impl OrderingService {
     }
 
     /// Use this stall deadline for every fleet (default
-    /// [`comm::DEFAULT_STALL_DEADLINE`]).
+    /// [`comm::DEFAULT_STALL_DEADLINE`]). The deadline measures time
+    /// with **zero fleet-wide transport progress** — any message
+    /// deposited or consumed anywhere restarts every waiter's clock —
+    /// so an imbalanced-but-communicating fleet never trips it; an
+    /// ordering whose all-compute phases (e.g. sequential leaf
+    /// ordering of a huge folded branch) can exceed the deadline with
+    /// no transport at all should raise it, or disable the backstop
+    /// entirely with [`comm::NO_STALL_DEADLINE`].
     pub fn with_stall_deadline(mut self, deadline: std::time::Duration) -> OrderingService {
         self.stall_deadline = deadline;
         self

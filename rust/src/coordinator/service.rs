@@ -593,7 +593,7 @@ mod tests {
         );
         let g = generators::grid2d(12, 12);
         let req = OrderingRequest::new(&g)
-            .parse_strategy("seed=11,executor=sim")
+            .parse_strategy("seed=11,executor=sim,overlap=0")
             .unwrap()
             .engine(Engine::PtScotch { p: 3 });
         let reply = c.request(req.clone());
@@ -626,7 +626,7 @@ mod tests {
         );
         let g = generators::grid2d(12, 12);
         let req = OrderingRequest::new(&g)
-            .parse_strategy("seed=11,executor=sim")
+            .parse_strategy("seed=11,executor=sim,overlap=0")
             .unwrap()
             .engine(Engine::PtScotch { p: 2 });
         let reply = c.request(req.clone());

@@ -158,10 +158,20 @@ fn induce_both(
         let c1 = comm.overlap_context(1);
         std::thread::scope(|s| {
             // `move` takes the owned `c1`; `one` and the slices are
-            // shared-reference captures and copy into the thread.
-            let h = s.spawn(move || one(&c1, keep1));
-            let i0 = one(&c0, keep0);
-            let i1 = h.join().expect("overlap induce thread");
+            // shared-reference captures and copy into the thread. Both
+            // bodies run under `Comm::guard` so a panic in either
+            // transport thread raises the fleet abort immediately —
+            // the sibling may be parked in a blocking pop that only
+            // the abort wakeup can release (DESIGN.md §3.2).
+            let h = s.spawn(move || c1.guard(|| one(&c1, keep1)));
+            let i0 = c0.guard(|| one(&c0, keep0));
+            // Propagate the thread's own unwind payload: an injected
+            // panic (or the abort payload) must reach the rank-level
+            // classifier intact, not stringified by an `expect`.
+            let i1 = match h.join() {
+                Ok(v) => v,
+                Err(payload) => std::panic::resume_unwind(payload),
+            };
             (i0, i1)
         })
     } else {

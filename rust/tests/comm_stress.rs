@@ -15,10 +15,23 @@ use ptscotch::rng::Rng;
 use std::time::Duration;
 
 /// A deliberately tight stall deadline: the stress programs never
-/// legitimately block for anywhere near this long, so a deadlock (lost
-/// wakeup, tag mismatch, split desync) fails the suite within seconds
-/// as `FleetStalled` instead of wedging it.
+/// legitimately go this long without fleet-wide transport progress, so
+/// a deadlock (lost wakeup, tag mismatch, split desync) fails the
+/// suite within seconds as `FleetStalled` instead of wedging it.
 const TIGHT_DEADLINE: Duration = Duration::from_secs(2);
+
+/// The suite deadline, scalable via `PTSCOTCH_STRESS_DEADLINE_SECS`
+/// for slow environments: the TSan targets (`make tsan`, the ci.yml
+/// tsan job) set 20, because thread sanitizer slows execution 5–15×
+/// and a rank legitimately parked a few seconds on one wait must not
+/// flake as `FleetStalled`.
+fn tight_deadline() -> Duration {
+    std::env::var("PTSCOTCH_STRESS_DEADLINE_SECS")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .map(Duration::from_secs)
+        .unwrap_or(TIGHT_DEADLINE)
+}
 
 /// Run `f` on `p` ranks under `exec` with the tight stall deadline. A
 /// hung fleet surfaces as `Err(FleetStalled)` and a rank panic as
@@ -30,7 +43,7 @@ where
 {
     let cfg = RunConfig {
         fault: None,
-        stall_deadline: TIGHT_DEADLINE,
+        stall_deadline: tight_deadline(),
     };
     match comm::try_run_with(exec, p, cfg, f) {
         Ok((res, _)) => res,

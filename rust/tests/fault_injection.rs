@@ -46,8 +46,12 @@ fn svc_with(plan: Option<FaultPlan>, deadline_secs: u64) -> OrderingService {
 }
 
 /// A PtScotch-engine request pinned to `exec` with the suite seed.
+/// `overlap=0` pins the op-index coordinate system: with the §3.1
+/// overlap thread on, a rank's two transport threads interleave into
+/// its shared op counter in schedule-dependent order, so "rank r's
+/// Nth op" would not name a fixed program point (comm::fault docs).
 fn order_req(g: &Graph, p: usize, exec: &str) -> OrderingRequest {
-    let strat = Strategy::parse(&format!("executor={exec},seed=11")).unwrap();
+    let strat = Strategy::parse(&format!("executor={exec},seed=11,overlap=0")).unwrap();
     OrderingRequest::new(g)
         .strategy(strat)
         .engine(Engine::PtScotch { p })
