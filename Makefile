@@ -9,7 +9,7 @@
 # the stub cannot execute them. Only run `test-xla` after wiring the
 # real `xla` crate into Cargo.toml (see README.md).
 
-.PHONY: artifacts check test test-threads test-xla tsan bench bench-smoke fault-smoke clean
+.PHONY: artifacts check test test-trace test-threads test-xla tsan bench bench-smoke fault-smoke clean
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts
@@ -22,6 +22,7 @@ check:
 	cargo clippy --all-targets -- -D warnings
 	cargo build --release --examples
 	cargo test --release --workspace -q
+	$(MAKE) test-trace
 	$(MAKE) test-threads
 	cargo test --release --doc -q
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
@@ -30,6 +31,11 @@ check:
 
 test:
 	cargo test --release -q
+
+# The trace-invariant suite alone (DESIGN.md §7): nesting discipline,
+# counter-delta tiling, off-vs-full bit-identity, Chrome round trip.
+test-trace:
+	cargo test --release -q --test trace_invariants
 
 # The whole workspace again with the threaded executor as the default
 # (DESIGN.md §3): every comm/dist test must pass on the free-running
@@ -53,7 +59,7 @@ tsan:
 	  cargo +nightly test -Zbuild-std \
 	    --target x86_64-unknown-linux-gnu \
 	    --release -q --test comm_stress --test traffic --test service \
-	    --test refiner_diff --test fault_injection; \
+	    --test refiner_diff --test fault_injection --test trace_invariants; \
 	else \
 	  echo "tsan: no nightly toolchain installed (rustup toolchain install nightly --component rust-src); skipping"; \
 	fi
@@ -71,16 +77,33 @@ bench:
 # end-to-end (no OPC gate there — the ceilings are recorded for the
 # default ladder), plus one `--json` run over both engines that
 # regenerates the machine-readable perf/quality trajectory in
-# bench_out/BENCH_PR8.json. Every un-pinned smoke run doubles as the
+# bench_out/BENCH_PR10.json. Every un-pinned smoke run doubles as the
 # ordering-quality gate: it asserts the grid3d OPC stays under the
 # recorded ceiling per leaf method (EXPERIMENTS.md §Perf.2) and that the
 # §Perf.4 service pass runs exactly one ordering cold and zero warm, so
 # neither leaf quality nor the fingerprint cache can regress silently.
+# The final step drives one traced ordering end-to-end (DESIGN.md §7):
+# `trace=full` with `--trace-out` must produce Chrome trace JSON, and
+# when jq is available the envelope is schema-checked (an event array
+# whose entries all carry ph/pid, with timestamps on everything but the
+# per-rank "M" metadata records).
 bench-smoke:
 	cargo bench --bench perf_profile -- --smoke --engine cpu
 	cargo bench --bench perf_profile -- --smoke --engine xla
 	cargo bench --bench perf_profile -- --smoke --refine flow
 	cargo bench --bench perf_profile -- --smoke --json
+	cargo build --release --bins
+	mkdir -p bench_out
+	./target/release/ptscotch order --graph grid3d:8x8x8 -p 4 --engine pts \
+	  --strategy trace=full --trace-out bench_out/trace_smoke.json
+	@if command -v jq >/dev/null 2>&1; then \
+	  jq -e '.traceEvents | length > 0 and all(.ph and .pid != null) \
+	    and (map(select(.ph != "M")) | length > 0 and all(.ts != null))' \
+	    bench_out/trace_smoke.json >/dev/null \
+	    && echo "trace smoke: Chrome JSON schema ok"; \
+	else \
+	  echo "trace smoke: jq not installed; skipped schema check"; \
+	fi
 
 # Fault-injection smoke (DESIGN.md §3.2): a scripted panic at rank 0's
 # 60th transport op must make the CLI *fail* — cleanly, with a

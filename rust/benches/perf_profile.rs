@@ -26,12 +26,17 @@
 //! `BatchCoordinator` twice — cold (one real job, the rest coalesced)
 //! and warm (pure fingerprint-cache hits) — and reports the hit rate
 //! and the per-request latency of each pass, asserting the cold batch
-//! ran exactly one ordering and the warm one ran zero. `--json`
-//! additionally writes the whole profile (phases + quality + refiners
-//! + executor wallclocks + service throughput) to
-//! `bench_out/BENCH_PR8.json` (run by the CI bench/quality-smoke
-//! step). Used to drive and document the optimization log in
-//! EXPERIMENTS.md §Perf.
+//! ran exactly one ordering and the warm one ran zero. The §Perf.5
+//! section orders grid3d at p ∈ {1, 4, 8} with `trace=phases`
+//! (DESIGN.md §7) and tabulates the top-8 phases by exclusive wall
+//! with their bytes/msgs columns plus the `sequential_tail_fraction`
+//! — the slowest rank's leaf-order exclusive time over its run wall,
+//! the Amdahl share the ROADMAP's parallel-leaf work must attack
+//! (`phases.csv`). `--json` additionally writes the whole profile
+//! (phases + quality + refiners + executor wallclocks + service
+//! throughput + phase attribution) to `bench_out/BENCH_PR10.json`
+//! (run by the CI bench/quality-smoke step). Used to drive and
+//! document the optimization log in EXPERIMENTS.md §Perf.
 
 #[path = "common.rs"]
 mod common;
@@ -49,6 +54,7 @@ use ptscotch::sep::fm::{fm_refine, FmParams};
 use ptscotch::sep::initial::greedy_graph_growing;
 use ptscotch::sep::{multilevel_separator, FmRefiner};
 use ptscotch::strategy::{SepStrategy, Strategy};
+use ptscotch::trace::profile::{COL_BYTES, COL_MSGS, COL_WALL};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -69,8 +75,9 @@ fn engine_arg() -> Option<String> {
 /// `--json` mode: also write every profiled row (wallclock plus, for
 /// the distributed phases, bytes/messages on the wire), the
 /// per-leaf-method quality table, the per-refiner quality table, the
-/// sim-vs-threads executor wallclock rows and the §Perf.4 service rows
-/// to `bench_out/BENCH_PR8.json` — the machine-readable perf/quality
+/// sim-vs-threads executor wallclock rows, the §Perf.4 service rows
+/// and the §Perf.5 phase-attribution rows
+/// to `bench_out/BENCH_PR10.json` — the machine-readable perf/quality
 /// trajectory the EXPERIMENTS.md BENCH log points at. CI runs this in
 /// the bench-smoke step so the file regenerates on every push.
 fn json_mode() -> bool {
@@ -187,6 +194,25 @@ struct SRow {
 /// Service rows accumulated for the table, the CSV and `--json`.
 static SROWS: Mutex<Vec<SRow>> = Mutex::new(Vec::new());
 
+/// One §Perf.5 phase-attribution measurement: one phase of a
+/// `trace=phases` grid3d ordering at one rank count — exclusive wall
+/// (summed over the profile tree and all ranks) with its traffic
+/// columns, plus the run's sequential-tail fraction (identical on
+/// every row of the same `p`).
+struct PhRow {
+    p: usize,
+    phase: &'static str,
+    count: u64,
+    excl_ms: f64,
+    bytes: u64,
+    msgs: u64,
+    tail: f64,
+}
+
+/// Phase-attribution rows accumulated for the table, the CSV and
+/// `--json`.
+static PHROWS: Mutex<Vec<PhRow>> = Mutex::new(Vec::new());
+
 /// Mean OPC per `(p, mmd, hamd)` over the accumulated quality rows —
 /// the single source for both the printed summary and the JSON
 /// `quality_mean_opc` section, so they cannot diverge.
@@ -241,7 +267,7 @@ fn time<R>(name: &str, reps: usize, mut f: impl FnMut() -> R) -> f64 {
     dt
 }
 
-/// Serialize the accumulated rows as `bench_out/BENCH_PR8.json`. Phase
+/// Serialize the accumulated rows as `bench_out/BENCH_PR10.json`. Phase
 /// names contain no quotes or backslashes, so the literal embedding is
 /// valid JSON.
 fn write_json(smoke: bool, scale: usize) {
@@ -250,6 +276,7 @@ fn write_json(smoke: bool, scale: usize) {
     let rfrows = RFROWS.lock().unwrap();
     let erows = EROWS.lock().unwrap();
     let srows = SROWS.lock().unwrap();
+    let phrows = PHROWS.lock().unwrap();
     let unix_time = std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
@@ -334,6 +361,20 @@ fn write_json(smoke: bool, scale: usize) {
         ));
     }
     s.push_str("  ],\n");
+    // §Perf.5: phase-attribution rows — top-8 phases by exclusive wall
+    // per rank count, from the `trace=phases` span recorder
+    // (DESIGN.md §7), with the per-p sequential-tail fraction.
+    s.push_str("  \"phase_attribution\": [\n");
+    for (i, r) in phrows.iter().enumerate() {
+        let sep = if i + 1 < phrows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"p\": {}, \"phase\": \"{}\", \"count\": {}, \
+             \"excl_wall_ms\": {:.4}, \"bytes_sent\": {}, \"msgs_sent\": {}, \
+             \"sequential_tail_fraction\": {:.4}}}{sep}\n",
+            r.p, r.phase, r.count, r.excl_ms, r.bytes, r.msgs, r.tail
+        ));
+    }
+    s.push_str("  ],\n");
     let (pmax, measured, modeled) = executor_speedup(&erows);
     s.push_str(&format!(
         "  \"speedup\": {{\"graph\": \"grid3d\", \"p\": {pmax}, \
@@ -345,8 +386,8 @@ fn write_json(smoke: bool, scale: usize) {
     s.push_str("}\n");
     let dir = std::path::Path::new("bench_out");
     let _ = std::fs::create_dir_all(dir);
-    let path = dir.join("BENCH_PR8.json");
-    std::fs::write(&path, s).expect("write BENCH_PR8.json");
+    let path = dir.join("BENCH_PR10.json");
+    std::fs::write(&path, s).expect("write BENCH_PR10.json");
     println!("\nwrote {}", path.display());
 }
 
@@ -653,6 +694,71 @@ fn service_profile(smoke: bool, scale: usize) {
     );
 }
 
+/// §Perf.5 — phase attribution: order grid3d at p ∈ {1, 4, 8} with
+/// `trace=phases` (DESIGN.md §7) and tabulate the top-8 phases by
+/// exclusive wall — summed over the profile tree and all ranks, so the
+/// column tiles to the run totals — with their bytes/msgs columns.
+/// The `seq_tail` column is the profile's sequential-tail fraction:
+/// the slowest rank's leaf-order exclusive wall over its run wall, the
+/// Amdahl share of the sequential leaf tail (EXPERIMENTS.md §Perf.5).
+fn phases_profile(smoke: bool, scale: usize) {
+    let s = scale.max(1);
+    let g = if smoke {
+        generators::grid3d(10, 10, 10)
+    } else {
+        generators::grid3d(16 * s, 16 * s, 16 * s)
+    };
+    let svc = OrderingService::new_cpu_only();
+    println!(
+        "\n-- phase attribution (§Perf.5, grid3d n={}, trace=phases) --",
+        g.n()
+    );
+    println!(
+        "{:<4} {:<18} {:>6} {:>12} {:>12} {:>8} {:>9}",
+        "p", "phase", "count", "excl_ms", "bytes", "msgs", "seq_tail"
+    );
+    for p in [1usize, 4, 8] {
+        let strat = Strategy::parse(&format!("trace=phases{}", refine_clause())).unwrap();
+        let rep = order(&svc, &g, Engine::PtScotch { p }, &strat).expect("traced ordering");
+        let prof = rep.profile.as_ref().expect("trace=phases builds a profile");
+        let tail = prof.sequential_tail_fraction();
+        let mut totals = prof.phase_totals();
+        totals.sort_by(|a, b| {
+            b.2[COL_WALL]
+                .cmp(&a.2[COL_WALL])
+                .then(a.0.name().cmp(b.0.name()))
+        });
+        for &(ph, count, cols) in totals.iter().take(8) {
+            let ms = cols[COL_WALL] as f64 / 1e6;
+            println!(
+                "{p:<4} {:<18} {count:>6} {ms:>12.2} {:>12} {:>8} {tail:>9.3}",
+                ph.name(),
+                cols[COL_BYTES],
+                cols[COL_MSGS]
+            );
+            common::csv_row(
+                "phases.csv",
+                "p,phase,count,excl_wall_ms,bytes_sent,msgs_sent,sequential_tail_fraction",
+                &format!(
+                    "{p},{},{count},{ms:.4},{},{},{tail:.4}",
+                    ph.name(),
+                    cols[COL_BYTES],
+                    cols[COL_MSGS]
+                ),
+            );
+            PHROWS.lock().unwrap().push(PhRow {
+                p,
+                phase: ph.name(),
+                count,
+                excl_ms: ms,
+                bytes: cols[COL_BYTES],
+                msgs: cols[COL_MSGS],
+                tail,
+            });
+        }
+    }
+}
+
 fn main() {
     // Smoke mode (CI / `make check`): a tiny graph and single reps —
     // exercises every phase end-to-end in seconds so the bench can't
@@ -854,7 +960,7 @@ fn main() {
                         }
                         xc
                     });
-                    // VMEM footprint estimate per grid step (DESIGN.md §7).
+                    // VMEM footprint estimate per grid step (DESIGN.md §5).
                     let tile = ptscotch::runtime::EllPacked::tile_bytes(256, bucket.d);
                     let field = bucket.n * 4;
                     println!(
@@ -870,6 +976,7 @@ fn main() {
     quality_profile(smoke, scale);
     refiner_profile(smoke, scale);
     executor_profile(smoke, scale);
+    phases_profile(smoke, scale);
     service_profile(smoke, scale);
 
     if json_mode() {

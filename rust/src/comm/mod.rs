@@ -66,6 +66,7 @@ pub use exec::Executor;
 pub use fault::{FaultAction, FaultPlan, FAULT_ENV};
 pub use stats::{MemTracker, StatsSnapshot};
 
+use crate::trace::{self, TraceLevel};
 use crate::{Error, Result};
 use std::any::Any;
 use std::collections::VecDeque;
@@ -109,6 +110,15 @@ pub struct RunConfig {
     /// [`DEFAULT_STALL_DEADLINE`] instead, so a scripted stall cannot
     /// hang the fleet it was injected into.
     pub stall_deadline: Duration,
+    /// Span-recorder level installed on every rank thread
+    /// (DESIGN.md §7): [`TraceLevel::Off`] (the default) records
+    /// nothing; otherwise each rank gets a thread-local sink whose
+    /// [`crate::trace::RankTrace`] rides back on
+    /// [`StatsSnapshot::traces`] after the fleet joins. The recorder
+    /// only *observes* the per-rank counters (relaxed loads), so
+    /// results and traffic tallies stay bit-identical to an untraced
+    /// run.
+    pub trace: TraceLevel,
 }
 
 impl Default for RunConfig {
@@ -116,6 +126,7 @@ impl Default for RunConfig {
         RunConfig {
             fault: None,
             stall_deadline: NO_STALL_DEADLINE,
+            trace: TraceLevel::Off,
         }
     }
 }
@@ -554,6 +565,7 @@ impl Transport {
             wall_ns: col(|r| &r.wall_ns),
             blocked_ns: col(|r| &r.blocked_ns),
             transport_ops: col(|r| &r.transport_ops),
+            traces: Vec::new(),
         }
     }
 }
@@ -664,9 +676,15 @@ where
     F: Fn(Comm) -> R + Send + Sync + 'static,
 {
     assert!(p >= 1, "need at least one rank");
+    let trace_level = cfg.trace;
     let transport = Arc::new(Transport::new(exec, p, cfg));
     let members = Arc::new((0..p).collect::<Vec<_>>());
     let f = Arc::new(f);
+    // Fleet-shared trace epoch: every rank's span timestamps are
+    // relative to this instant, so the merged Chrome trace aligns.
+    let epoch = Instant::now();
+    let trace_out: Arc<Mutex<Vec<Option<trace::RankTrace>>>> =
+        Arc::new(Mutex::new((0..p).map(|_| None).collect()));
     let mut handles = Vec::with_capacity(p);
     for r in 0..p {
         let comm = Comm {
@@ -679,16 +697,42 @@ where
         };
         let f = f.clone();
         let t = transport.clone();
+        let slot = trace_out.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("rank{r}"))
                 .stack_size(16 << 20)
                 .spawn(move || {
+                    if trace_level != TraceLevel::Off {
+                        // The sink lives on the rank's main thread;
+                        // §3.1 overlap threads have none, so their
+                        // traffic attributes to the enclosing span via
+                        // the shared per-rank counters. The probe only
+                        // reads the atomics — it never perturbs them.
+                        let tp = t.clone();
+                        trace::install(
+                            r,
+                            trace_level,
+                            epoch,
+                            Some(trace::CounterProbe::new(move || {
+                                let s = &tp.ranks[r];
+                                [
+                                    s.sent_bytes.load(AOrd::Relaxed),
+                                    s.sent_msgs.load(AOrd::Relaxed),
+                                    s.transport_ops.load(AOrd::Relaxed),
+                                    s.blocked_ns.load(AOrd::Relaxed),
+                                ]
+                            })),
+                        );
+                    }
                     let t0 = Instant::now();
                     let out = catch_unwind(AssertUnwindSafe(|| f(comm)));
                     t.ranks[r]
                         .wall_ns
                         .store(t0.elapsed().as_nanos() as u64, AOrd::Relaxed);
+                    if trace_level != TraceLevel::Off {
+                        slot.lock().unwrap_or_else(PoisonError::into_inner)[r] = trace::take();
+                    }
                     match out {
                         Ok(v) => Some(v),
                         Err(payload) => {
@@ -711,10 +755,16 @@ where
         .into_iter()
         .map(|h| h.join().unwrap_or(None))
         .collect();
-    let stats = transport.snapshot();
+    let mut stats = transport.snapshot();
     if let Some(err) = transport.abort_error() {
         return Err(err);
     }
+    stats.traces = trace_out
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .iter_mut()
+        .filter_map(Option::take)
+        .collect();
     let results = results
         .into_iter()
         .map(|r| r.expect("rank returned no result yet no abort was raised"))
@@ -795,6 +845,7 @@ impl Comm {
 
     /// Barrier over this communicator (gather-to-root + broadcast).
     pub fn barrier(&self) {
+        let _span = trace::scope(trace::Phase::Collective);
         let tag = self.next_coll_tag();
         if self.rank == 0 {
             for r in 1..self.size() {
@@ -811,6 +862,7 @@ impl Comm {
 
     /// Gather each rank's vector on every rank (returned in rank order).
     pub fn allgatherv<T: Clone + Send + 'static>(&self, mine: Vec<T>) -> Vec<Vec<T>> {
+        let _span = trace::scope(trace::Phase::Collective);
         let tag = self.next_coll_tag();
         let p = self.size();
         if p == 1 {
@@ -860,6 +912,7 @@ impl Comm {
     /// Personalized all-to-all: `out[r]` goes to rank `r`; returns the
     /// vectors received from each rank (in rank order).
     pub fn alltoallv<T: Send + 'static>(&self, out: Vec<Vec<T>>) -> Vec<Vec<T>> {
+        let _span = trace::scope(trace::Phase::Collective);
         assert_eq!(out.len(), self.size());
         let tag = self.next_coll_tag();
         let p = self.size();
@@ -886,6 +939,7 @@ impl Comm {
 
     /// Broadcast from `root` to every rank.
     pub fn bcast<T: Clone + Send + 'static>(&self, root: usize, data: Option<Vec<T>>) -> Vec<T> {
+        let _span = trace::scope(trace::Phase::Collective);
         let tag = self.next_coll_tag();
         if self.rank == root {
             let data = data.expect("root must supply data");
@@ -905,6 +959,7 @@ impl Comm {
     /// color are re-ranked by ascending parent rank. Sibling groups get
     /// distinct tag scopes derived from the color.
     pub fn split(&self, color: usize) -> Comm {
+        let _span = trace::scope(trace::Phase::Collective);
         let colors = self.allgatherv(vec![color]);
         let members: Vec<usize> = (0..self.size())
             .filter(|&r| colors[r][0] == color)
@@ -1266,6 +1321,7 @@ mod tests {
                 let cfg = RunConfig {
                     fault: Some(FaultPlan::new().panic_at(1, op)),
                     stall_deadline: Duration::from_secs(30),
+                    ..RunConfig::default()
                 };
                 let out = try_run_with(exec, 2, cfg, |c| {
                     let ca = c.overlap_context(0);
@@ -1309,6 +1365,7 @@ mod tests {
             let cfg = RunConfig {
                 fault: None,
                 stall_deadline: Duration::from_secs(30),
+                ..RunConfig::default()
             };
             let out = try_run_with(exec, 2, cfg, |c| {
                 let ca = c.overlap_context(0);
@@ -1355,6 +1412,7 @@ mod tests {
             let cfg = RunConfig {
                 fault: None,
                 stall_deadline: Duration::from_millis(400),
+                ..RunConfig::default()
             };
             let out = try_run_with(exec, 3, cfg, |c| match c.rank() {
                 0 => c.recv::<u8>(1, 99)[0],
@@ -1389,6 +1447,7 @@ mod tests {
             let cfg = RunConfig {
                 fault: None,
                 stall_deadline: Duration::from_millis(200),
+                ..RunConfig::default()
             };
             let out = try_run_with(exec, 2, cfg, |c| {
                 if c.rank() == 0 {
@@ -1416,6 +1475,7 @@ mod tests {
             let cfg = RunConfig {
                 fault: Some(FaultPlan::new().stall_at(1, 2)),
                 stall_deadline: Duration::from_millis(200),
+                ..RunConfig::default()
             };
             let out = try_run_with(exec, 2, cfg, |c| {
                 if c.rank() == 1 {

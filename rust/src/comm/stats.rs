@@ -30,6 +30,12 @@ pub struct StatsSnapshot {
     /// fault-injection plan (DESIGN.md §3.2): a trigger armed at
     /// `(rank, op)` fires at that rank's `op`-th operation.
     pub transport_ops: Vec<u64>,
+    /// Per-rank span traces, in rank order; non-empty only when the
+    /// fleet ran with a [`crate::comm::RunConfig`] `trace` level other
+    /// than off (DESIGN.md §7). The recorder observes the counters
+    /// above without perturbing them, so every other column is
+    /// bit-identical to an untraced run.
+    pub traces: Vec<crate::trace::RankTrace>,
 }
 
 impl StatsSnapshot {
@@ -127,6 +133,7 @@ mod tests {
             wall_ns: vec![5_000, 9_000, 7_000],
             blocked_ns: vec![1_000, 9_500, 3_000],
             transport_ops: vec![2, 4, 6],
+            traces: Vec::new(),
         };
         assert_eq!(s.total_bytes(), 60);
         assert_eq!(s.total_msgs(), 6);
@@ -135,6 +142,25 @@ mod tests {
         assert_eq!(s.busy_ns(), vec![4_000, 0, 4_000]);
         assert!((s.max_wall_seconds() - 9e-6).abs() < 1e-12);
         assert!((s.critical_path_seconds() - 4e-6).abs() < 1e-12);
+    }
+
+    /// Regression test for the `busy_ns` underflow: a heavily delayed
+    /// rank (fault-injection delay runs with the §3.1 overlap thread
+    /// active) can legitimately report `blocked_ns > wall_ns`; the
+    /// subtraction must clamp at zero instead of wrapping to ~2^64.
+    #[test]
+    fn busy_ns_saturates_when_blocked_exceeds_wall() {
+        let s = StatsSnapshot {
+            bytes_sent: vec![0, 0],
+            msgs_sent: vec![0, 0],
+            wall_ns: vec![1_000, 4_000],
+            blocked_ns: vec![250_000, 1_000],
+            transport_ops: vec![0, 0],
+            traces: Vec::new(),
+        };
+        assert_eq!(s.busy_ns(), vec![0, 3_000]);
+        // The critical path must come out of the *clamped* column.
+        assert!((s.critical_path_seconds() - 3e-6).abs() < 1e-12);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use crate::comm::Executor;
 use crate::order::SymbolicStats;
+use crate::trace::{PhaseProfile, RankTrace};
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::time::Instant;
 
@@ -37,6 +38,14 @@ pub struct OrderingReport {
     /// system of the fault-injection plan (DESIGN.md §3.2), identical
     /// across executors like the traffic counters.
     pub transport_ops_per_rank: Vec<u64>,
+    /// Raw per-rank span traces — non-empty only when the run's
+    /// `trace=` knob was `phases` or `full` (DESIGN.md §7). Feed them
+    /// to [`crate::trace::chrome::write`] for a Perfetto-loadable
+    /// timeline.
+    pub traces: Vec<RankTrace>,
+    /// The merged hierarchical phase profile built from
+    /// [`OrderingReport::traces`]; `None` when tracing was off.
+    pub profile: Option<PhaseProfile>,
 }
 
 impl OrderingReport {
@@ -228,6 +237,8 @@ mod tests {
             wall_ns_per_rank: vec![4_000, 10_000],
             blocked_ns_per_rank: vec![1_000, 7_000],
             transport_ops_per_rank: vec![2, 2],
+            traces: Vec::new(),
+            profile: None,
         };
         let (min, avg, max) = r.mem_min_avg_max();
         assert_eq!((min, max), (10, 30));

@@ -30,6 +30,7 @@ use crate::runtime::{load_shared, DiffusionRefiner, SharedRuntime};
 use crate::sep::diffusion::CpuDiffusionRefiner;
 use crate::sep::{BandRefiner, FmRefiner};
 use crate::strategy::{BandEngine, RefinerKind, Strategy};
+use crate::trace::{self, PhaseProfile, TraceLevel};
 use crate::{Error, Result};
 use std::ops::Deref;
 use std::path::Path;
@@ -256,8 +257,8 @@ impl OrderingService {
 
     /// The fleet run configuration: the programmatic fault plan if one
     /// was set, else whatever `PTSCOTCH_FAULT` names (a malformed spec
-    /// is `Error::BadEnv`).
-    fn run_config(&self) -> Result<comm::RunConfig> {
+    /// is `Error::BadEnv`), plus the request's `trace=` level.
+    fn run_config(&self, trace: TraceLevel) -> Result<comm::RunConfig> {
         let fault = match &self.fault {
             Some(plan) => Some(plan.clone()),
             None => comm::FaultPlan::from_env()?,
@@ -265,6 +266,7 @@ impl OrderingService {
         Ok(comm::RunConfig {
             fault,
             stall_deadline: self.stall_deadline,
+            trace,
         })
     }
 
@@ -315,13 +317,25 @@ impl OrderingService {
             Engine::Sequential => {
                 let refiner = self.refiner(strat)?;
                 let mut rng = Rng::new(strat.seed);
-                let o = nested_dissection(g, strat, refiner.as_ref(), &mut rng);
+                // The sequential engine runs no fleet, so the span
+                // recorder is installed right here on the caller's
+                // thread — no counter probe (there is no transport, so
+                // every counter column stays zero) and an explicit run
+                // root so the profile tiles like the distributed one.
+                if strat.trace != TraceLevel::Off {
+                    trace::install(0, strat.trace, Instant::now(), None);
+                }
+                let o = {
+                    let _run = trace::scope_at(trace::Phase::Run, 0);
+                    nested_dissection(g, strat, refiner.as_ref(), &mut rng)
+                };
                 let fleet = comm::StatsSnapshot {
                     bytes_sent: vec![0],
                     msgs_sent: vec![0],
                     wall_ns: Vec::new(),
                     blocked_ns: Vec::new(),
                     transport_ops: Vec::new(),
+                    traces: trace::take().into_iter().collect(),
                 };
                 (o, vec![g.footprint_bytes() as i64], fleet)
             }
@@ -338,7 +352,8 @@ impl OrderingService {
                     BandEngine::Cpu => None,
                     BandEngine::Auto | BandEngine::Xla => self.runtime.clone(),
                 };
-                let (res, stats) = comm::try_run_with(exec, p, self.run_config()?, move |c| {
+                let cfg = self.run_config(strat.trace)?;
+                let (res, stats) = comm::try_run_with(exec, p, cfg, move |c| {
                     let r = parallel_order(
                         &c,
                         &ga,
@@ -358,7 +373,8 @@ impl OrderingService {
                 }
                 let ga = Arc::clone(&req.graph);
                 let strat2 = strat.clone();
-                let (res, stats) = comm::try_run_with(exec, p, self.run_config()?, move |c| {
+                let cfg = self.run_config(strat.trace)?;
+                let (res, stats) = comm::try_run_with(exec, p, cfg, move |c| {
                     let r = parmetis_like_order(&c, &ga, &strat2)?;
                     Ok::<_, Error>((r.ordering, r.peak_mem))
                 })?;
@@ -377,6 +393,15 @@ impl OrderingService {
         let stats = symbolic_cholesky(g, &ordering);
         let blocks = block_ordering(g, &ordering);
         debug_assert!(blocks.validate(g.n()).is_ok());
+        // Merge the per-rank traces into the hierarchical profile. A
+        // malformed stream is an internal invariant violation (spans
+        // are RAII guards), so the error propagates rather than being
+        // silently dropped.
+        let profile = if fleet.traces.is_empty() {
+            None
+        } else {
+            Some(PhaseProfile::build(&fleet.traces)?)
+        };
         Ok(OrderingResult {
             ordering,
             blocks,
@@ -390,6 +415,8 @@ impl OrderingService {
                 wall_ns_per_rank: fleet.wall_ns,
                 blocked_ns_per_rank: fleet.blocked_ns,
                 transport_ops_per_rank: fleet.transport_ops,
+                traces: fleet.traces,
+                profile,
             },
         })
     }

@@ -126,6 +126,19 @@ pub struct RequestReport {
     pub result: Result<Arc<OrderingResult>>,
 }
 
+impl RequestReport {
+    /// The merged phase profile of the reply — present only when the
+    /// job succeeded and its strategy ran with `trace=phases|full`
+    /// (DESIGN.md §7). Cache hits return whatever the run that
+    /// populated the entry recorded.
+    pub fn profile(&self) -> Option<&crate::trace::PhaseProfile> {
+        self.result
+            .as_ref()
+            .ok()
+            .and_then(|r| r.report.profile.as_ref())
+    }
+}
+
 /// LRU fingerprint store. Stamp-based: `get`/`insert` advance a clock
 /// and eviction removes the smallest stamp — an O(capacity) scan, which
 /// is negligible next to even one leaf ordering.

@@ -24,6 +24,7 @@
 //! contract as the MPI code they model.
 
 use crate::comm::Comm;
+use crate::trace;
 use crate::graph::Graph;
 
 /// Precomputed halo-exchange schedule of one [`DGraph`] (DESIGN.md
@@ -329,6 +330,7 @@ impl DGraph {
     /// already know what to send, so there is no request wave and no
     /// per-call want-list allocation. Collective.
     pub fn halo_exchange<T: Clone + Send + 'static>(&self, comm: &Comm, vals: &[T]) -> Vec<T> {
+        let _span = trace::scope(trace::Phase::Halo);
         debug_assert_eq!(vals.len(), self.nloc());
         let plan = self.halo_plan();
         debug_assert_eq!(plan.send_idx.len(), comm.size());
@@ -351,6 +353,7 @@ impl DGraph {
     /// frontier-driven band BFS (`dist::dband::band_distances`).
     /// Collective.
     pub fn halo_frontier(&self, comm: &Comm, in_frontier: &[bool]) -> Vec<u32> {
+        let _span = trace::scope(trace::Phase::Halo);
         debug_assert_eq!(in_frontier.len(), self.nloc());
         let plan = self.halo_plan();
         debug_assert_eq!(plan.send_idx.len(), comm.size());

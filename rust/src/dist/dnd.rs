@@ -36,6 +36,7 @@ use crate::rng::Rng;
 use crate::runtime::SharedRuntime;
 use crate::sep::{BandRefiner, P0, P1, SEP};
 use crate::strategy::{LeafMethod, Strategy};
+use crate::trace;
 use crate::Result;
 
 /// Result of a parallel ordering run on one rank.
@@ -61,6 +62,10 @@ pub fn parallel_order(
     refiner: &dyn BandRefiner,
     xla: Option<&SharedRuntime>,
 ) -> ParallelOrderResult {
+    // Root span of the whole distributed run: with a recorder installed
+    // every other span nests under it, so the exclusive counter columns
+    // of the profile tree tile exactly to the run totals (DESIGN.md §7).
+    let _run = trace::scope_at(trace::Phase::Run, 0);
     let mem = MemTracker::new();
     let dg = DGraph::from_global(comm, g);
     mem.grow(dg.footprint_bytes());
@@ -276,6 +281,18 @@ pub(crate) fn dissect(
     let total = comm.allreduce(mine, |a, b| [a[0] + b[0], a[1] + b[1], a[2] + b[2]]);
     let counts = [total[0] as usize, total[1] as usize, total[2] as usize];
     let ncore_glb = counts[0] + counts[1] + counts[2];
+    if comm.rank() == 0 {
+        // One quality event per ND node, from the subgroup's rank 0
+        // only, so merged traces carry each separator exactly once.
+        trace::quality_at(
+            depth as u32,
+            counts[2] as u64,
+            counts[0].abs_diff(counts[1]) as u64,
+            strat.sep.band_width,
+            strat.sep.refine.name(),
+            0,
+        );
+    }
     let degenerate = counts[0] == 0
         || counts[1] == 0
         || counts[2] as f64 > ncore_glb as f64 * strat.nd.max_sep_fraction;
@@ -321,15 +338,21 @@ pub(crate) fn dissect(
     let keep1: Vec<bool> = part.iter().map(|&x| x == P1).collect();
     let halo_cand: Option<Vec<bool>> =
         carry_halo.then(|| part.iter().map(|&x| x == SEP || x == HALO_PART).collect());
-    let (ind0, ind1) = induce_both(
-        comm,
-        &dg,
-        &keep0,
-        &keep1,
-        halo_cand.as_deref(),
-        &payload,
-        overlap,
-    );
+    let (ind0, ind1) = {
+        // The §3.1 overlap thread is sinkless: its traffic lands on the
+        // shared rank counters and is attributed to this span when it
+        // closes (the `thread::scope` join happens inside the call).
+        let _span = trace::scope_at(trace::Phase::Induce, depth as u32);
+        induce_both(
+            comm,
+            &dg,
+            &keep0,
+            &keep1,
+            halo_cand.as_deref(),
+            &payload,
+            overlap,
+        )
+    };
     mem.grow(ind0.dg.footprint_bytes() + ind1.dg.footprint_bytes());
     drop(dg);
     drop(payload);
@@ -338,8 +361,10 @@ pub(crate) fn dissect(
     // high half (any p — no power-of-two restriction, §3.2), then split
     // and recurse on whichever half this rank joined.
     let p = comm.size();
+    let fold_span = trace::scope_at(trace::Phase::Fold, depth as u32);
     let f0 = fold_half(comm, &ind0.dg, &ind0.orig, FoldTarget::low_half(p));
     let f1 = fold_half(comm, &ind1.dg, &ind1.orig, FoldTarget::high_half(p));
+    drop(fold_span);
     let b0 = ind0.dg.footprint_bytes();
     let b1 = ind1.dg.footprint_bytes();
     drop(ind0);

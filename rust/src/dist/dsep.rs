@@ -37,6 +37,7 @@ use crate::runtime::SharedRuntime;
 use crate::sep::band::BandGraph;
 use crate::sep::{multilevel_separator, refine_band_with_mode, BandRefiner, SepState, P0, P1, SEP};
 use crate::strategy::{SepStrategy, Strategy};
+use crate::trace;
 use std::collections::HashMap;
 
 /// Compute a vertex separator of the distributed graph; returns one
@@ -77,8 +78,14 @@ pub fn dist_separator(
         }
         let round = coarse_graphs.len() as u64;
         let mut r = rng.derive(0xC0A2 ^ (round << 16) ^ grank);
-        let mate = parallel_match(comm, fine, strat.dist.matching_rounds, &mut r);
-        let DistCoarsening { coarse, fine2coarse } = coarsen_dist(comm, fine, &mate);
+        let mate = {
+            let _span = trace::scope(trace::Phase::Match);
+            parallel_match(comm, fine, strat.dist.matching_rounds, &mut r)
+        };
+        let DistCoarsening { coarse, fine2coarse } = {
+            let _span = trace::scope(trace::Phase::Coarsen);
+            coarsen_dist(comm, fine, &mate)
+        };
         if coarse.nglb as f64 > fine.nglb as f64 * 0.95 {
             break; // matching stalled (near-clique); stop coarsening
         }
@@ -90,6 +97,7 @@ pub fn dist_separator(
     // Phase 2: multi-sequential initial separator on the duplicated
     // coarsest graph (§3.2's fold-with-duplication endpoint).
     let coarsest: &DGraph = coarse_graphs.last().unwrap_or(dg);
+    let init_span = trace::scope(trace::Phase::InitialSep);
     let seps: Vec<u8> = if strat.dist.fold_dup {
         let central = coarsest.centralize_all(comm);
         mem.grow(central.footprint_bytes());
@@ -114,13 +122,17 @@ pub fn dist_separator(
     let mut part: Vec<u8> = (0..coarsest.nloc())
         .map(|v| seps[coarsest.glb(v) as usize])
         .collect();
+    drop(init_span);
 
     // Phase 3: uncoarsen, refining on distributed band graphs (§3.3).
     for li in (0..maps.len()).rev() {
         let coarse = &coarse_graphs[li];
         let fine: &DGraph = if li == 0 { dg } else { &coarse_graphs[li - 1] };
         let coarse_part = part;
-        part = coarse.fetch_at(comm, &maps[li], &coarse_part);
+        part = {
+            let _span = trace::scope(trace::Phase::ProjectSep);
+            coarse.fetch_at(comm, &maps[li], &coarse_part)
+        };
         band_refine_dist(
             comm,
             fine,
@@ -211,6 +223,10 @@ pub fn band_refine_dist(
     rng: &Rng,
     mem: &MemTracker,
 ) {
+    // Umbrella span for the whole §3.3 step: the centralized path's
+    // gather/refine/commit traffic lands here when no inner span is
+    // open, so the profile never loses band-refinement bytes.
+    let _span = trace::scope(trace::Phase::BandRefine);
     let nloc = dg.nloc();
     let width = strat.sep.band_width;
 
@@ -226,8 +242,10 @@ pub fn band_refine_dist(
     // exchange per level), or fused min-plus levels of the AOT artifact
     // per rank when the `engine=` knob and the bucket fit allow it —
     // the verdict is collective, like the diffusion dispatch below.
-    let (dist, _used_xla) =
-        bfs_band_dist_engine(comm, dg, part, width, strat.dist.band_engine, xla);
+    let (dist, _used_xla) = {
+        let _span = trace::scope(trace::Phase::BandExtract);
+        bfs_band_dist_engine(comm, dg, part, width, strat.dist.band_engine, xla)
+    };
 
     // Gate on the global band size *before* shipping any adjacency:
     // small bands take the centralized multi-sequential path, large
@@ -235,6 +253,7 @@ pub fn band_refine_dist(
     let band: Vec<usize> = (0..nloc).filter(|&v| dist[v] != u32::MAX).collect();
     let global_band = comm.allreduce_sum(band.len() as i64) as usize;
     if global_band > strat.dist.max_centralized_band {
+        let _span = trace::scope(trace::Phase::RefineDiffusion);
         band_refine_diffusion_dist(comm, dg, part, strat, xla, mem, &dist);
         return;
     }

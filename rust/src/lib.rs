@@ -69,6 +69,7 @@ pub mod rng;
 pub mod runtime;
 pub mod sep;
 pub mod strategy;
+pub mod trace;
 
 pub use error::{Error, Result};
 pub use graph::Graph;

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! ptscotch order  --graph grid2d:64x64      -p 8 --engine pts [--strategy band=3,...]
+//!                 [--trace-out trace.json]   # with trace=phases|full in the strategy
 //! ptscotch order  --graph file:matrix.mtx   --engine seq
 //! ptscotch suite  --scale 1 -p 2,4,8        # Table-2/3-style sweep
 //! ptscotch batch  --requests reqs.txt [--repeat 2] [--cache 64] [--jobs 4] [--retries 2]
@@ -26,6 +27,8 @@ use ptscotch::coordinator::{
 use ptscotch::graph::{generators, io, Graph};
 use ptscotch::runtime::XlaRuntime;
 use ptscotch::strategy::Strategy;
+use ptscotch::trace::chrome;
+use ptscotch::trace::profile::{COL_BYTES, COL_MSGS, COL_OPS};
 use std::collections::HashMap;
 use std::path::Path;
 use std::process::ExitCode;
@@ -114,6 +117,7 @@ fn cmd_order(args: &[String]) -> Result<(), String> {
         g.avg_degree(),
         svc.has_xla()
     );
+    let trace_out = get_flag(args, "--trace-out");
     let req = OrderingRequest::new(&g).strategy(strat).engine(engine);
     let res = svc.run(&req).map_err(|e| e.to_string())?;
     let (mn, avg, mx) = res.mem_min_avg_max();
@@ -131,6 +135,31 @@ fn cmd_order(args: &[String]) -> Result<(), String> {
         mx,
         res.total_comm_bytes()
     );
+    if let Some(profile) = &res.profile {
+        println!("{profile}");
+        // The exclusive counter columns tile: summed over the whole
+        // tree and all ranks they equal the run totals exactly.
+        println!(
+            "trace totals: bytes={} (run {}), msgs={} (run {}), ops={}",
+            profile.total(COL_BYTES),
+            res.total_comm_bytes(),
+            profile.total(COL_MSGS),
+            res.msgs_sent_per_rank.iter().sum::<u64>(),
+            profile.total(COL_OPS),
+        );
+    }
+    if let Some(out) = trace_out {
+        if res.traces.is_empty() {
+            return Err(format!(
+                "--trace-out {out} needs trace=phases or trace=full in --strategy"
+            ));
+        }
+        chrome::write(Path::new(&out), &res.traces).map_err(|e| e.to_string())?;
+        eprintln!(
+            "wrote Chrome trace: {out} ({} events)",
+            chrome::event_count(&res.traces)
+        );
+    }
     Ok(())
 }
 
@@ -194,7 +223,11 @@ fn parse_request_line(
             "engine" => engine_name = v.to_string(),
             "p" => p = v.parse().map_err(|_| format!("bad p {v}"))?,
             "tag" => tag = v.to_string(),
-            other => return Err(format!("unknown request key {other}")),
+            other => {
+                return Err(format!(
+                    "unknown request key {other} (valid keys: graph, strategy, engine, p, tag)"
+                ))
+            }
         }
     }
     let spec = graph_spec.ok_or("request line needs graph=<spec>")?;
@@ -221,6 +254,7 @@ fn parse_request_line(
 
 fn cmd_batch(args: &[String]) -> Result<(), String> {
     let path = get_flag(args, "--requests").ok_or("--requests FILE required")?;
+    let show_profile = args.iter().any(|a| a == "--profile");
     let text = std::fs::read_to_string(&path).map_err(|e| format!("{path}: {e}"))?;
     let repeat: usize = get_flag(args, "--repeat")
         .map(|s| s.parse().unwrap_or(1))
@@ -272,16 +306,27 @@ fn cmd_batch(args: &[String]) -> Result<(), String> {
                 (Served::Coalesced, _) => "coalesced",
             };
             match &r.result {
-                Ok(res) => println!(
-                    "{:<20} {:>5} {:>10} {:>10.2} {:>10.2} {:>12.4e} {:>7}",
-                    r.tag,
-                    round,
-                    served,
-                    r.queue_seconds * 1e3,
-                    r.run_seconds * 1e3,
-                    res.stats.opc,
-                    res.blocks.cblk
-                ),
+                Ok(res) => {
+                    println!(
+                        "{:<20} {:>5} {:>10} {:>10.2} {:>10.2} {:>12.4e} {:>7}",
+                        r.tag,
+                        round,
+                        served,
+                        r.queue_seconds * 1e3,
+                        r.run_seconds * 1e3,
+                        res.stats.opc,
+                        res.blocks.cblk
+                    );
+                    if show_profile {
+                        // One per-phase summary row per reply; requests
+                        // without `trace=` in their strategy have no
+                        // profile to summarize.
+                        match r.profile() {
+                            Some(prof) => println!("  profile: {}", prof.summary_row()),
+                            None => println!("  profile: (trace=off)"),
+                        }
+                    }
+                }
                 Err(e) => {
                     failed += 1;
                     println!("{:<20} {:>5} {:>10} error: {e}", r.tag, round, served);
@@ -340,7 +385,8 @@ fn main() -> ExitCode {
             eprintln!(
                 "usage: ptscotch <order|suite|batch|info> [--graph SPEC] [-p N] \
                  [--engine seq|pts|pm] [--strategy k=v,...] \
-                 [--requests FILE --repeat K --cache N --jobs N --retries N]"
+                 [--requests FILE --repeat K --cache N --jobs N --retries N --profile] \
+                 [--trace-out FILE]"
             );
             return ExitCode::from(2);
         }
@@ -351,5 +397,49 @@ fn main() -> ExitCode {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_line_parses_every_valid_key() {
+        let mut graphs = HashMap::new();
+        let req = parse_request_line(
+            "graph=grid2d:4x4 strategy=band=5;seed=9 engine=pts p=2 tag=job-a",
+            &mut graphs,
+        )
+        .expect("valid line");
+        assert_eq!(req.tag, "job-a");
+        assert_eq!(req.engine, Engine::PtScotch { p: 2 });
+        assert_eq!(req.strategy.sep.band_width, 5);
+        assert_eq!(req.strategy.seed, 9);
+        // The shared-graph map keyed the spec.
+        assert!(graphs.contains_key("grid2d:4x4"));
+    }
+
+    #[test]
+    fn request_line_rejects_unknown_key_naming_the_valid_ones() {
+        let mut graphs = HashMap::new();
+        let err = parse_request_line("graph=grid2d:4x4 widht=3", &mut graphs)
+            .expect_err("unknown key must be rejected");
+        assert!(err.contains("unknown request key widht"), "{err}");
+        // The error is structured: it names the bad key *and* the
+        // accepted vocabulary, so a typo in a request file is
+        // self-explaining.
+        for key in ["graph", "strategy", "engine", "p", "tag"] {
+            assert!(err.contains(key), "{err} should list {key}");
+        }
+    }
+
+    #[test]
+    fn request_line_rejects_bare_tokens_and_missing_graph() {
+        let mut graphs = HashMap::new();
+        let err = parse_request_line("grid2d:4x4", &mut graphs).expect_err("bare token");
+        assert!(err.contains("key=value"), "{err}");
+        let err = parse_request_line("tag=x", &mut graphs).expect_err("missing graph");
+        assert!(err.contains("graph=<spec>"), "{err}");
     }
 }

@@ -21,6 +21,7 @@ use crate::graph::{induce_with_halo, Graph, InducedGraph};
 use crate::rng::Rng;
 use crate::sep::{multilevel_separator, BandRefiner, P0, P1, SEP};
 use crate::strategy::{LeafMethod, Strategy};
+use crate::trace;
 
 /// One pending subproblem: a subgraph (with its map back to root ids) and
 /// the global start index of its ordering range (§2.2). `graph` is
@@ -169,6 +170,7 @@ fn order_leaf(
     iperm: &mut [usize],
     strat: &Strategy,
 ) {
+    let _span = trace::scope(trace::Phase::LeafOrder);
     let ord: Vec<usize> = match strat.nd.leaf_method {
         LeafMethod::Mmd => minimum_degree(graph.expect("mmd leaves carry their subgraph")),
         LeafMethod::Hamd => {

@@ -10,6 +10,7 @@ use super::{flow, BandRefiner, FmRefiner, SepState, P0, P1, SEP};
 use crate::graph::{Graph, GraphBuilder};
 use crate::rng::Rng;
 use crate::strategy::{RefineMode, SepStrategy};
+use crate::trace;
 
 /// A band graph: the extracted subgraph, the map back to parent vertices,
 /// the two anchor ids, the separator state restricted to the band, and
@@ -134,21 +135,35 @@ pub fn refine_band_with_mode(
     rng: &mut Rng,
 ) {
     match strat.refine {
-        RefineMode::Fm => FmRefiner {
-            params: strat.fm.clone(),
+        RefineMode::Fm => {
+            let _span = trace::scope(trace::Phase::RefineFm);
+            FmRefiner {
+                params: strat.fm.clone(),
+            }
+            .refine_band(band, rng)
         }
-        .refine_band(band, rng),
-        RefineMode::Diffusion => CpuDiffusionRefiner {
-            fm: strat.fm.clone(),
-            ..CpuDiffusionRefiner::default()
+        RefineMode::Diffusion => {
+            let _span = trace::scope(trace::Phase::RefineDiffusion);
+            CpuDiffusionRefiner {
+                fm: strat.fm.clone(),
+                ..CpuDiffusionRefiner::default()
+            }
+            .refine_band(band, rng)
         }
-        .refine_band(band, rng),
         RefineMode::Flow => {
+            let _span = trace::scope(trace::Phase::RefineFlow);
             flow::flow_refine_band(band);
         }
         RefineMode::Auto => {
-            base.refine_band(band, rng);
+            {
+                // The base `refiner=` object is FM or diffusion; tag the
+                // ladder's first rung with the generic FM phase — the
+                // quality events carry the exact knob string.
+                let _span = trace::scope(trace::Phase::RefineFm);
+                base.refine_band(band, rng);
+            }
             if band.graph.n() <= strat.flow_max_band {
+                let _span = trace::scope(trace::Phase::RefineFlow);
                 flow::flow_refine_band(band);
             }
         }
@@ -166,7 +181,11 @@ pub fn band_refine_step(
     refiner: &dyn BandRefiner,
     rng: &mut Rng,
 ) -> bool {
-    let Some(mut band) = extract_band(g, state, strat.band_width) else {
+    let band = {
+        let _span = trace::scope(trace::Phase::BandExtract);
+        extract_band(g, state, strat.band_width)
+    };
+    let Some(mut band) = band else {
         return false;
     };
     let before = state.quality_key();

@@ -11,6 +11,7 @@ use super::{BandRefiner, SepState};
 use crate::graph::Graph;
 use crate::rng::Rng;
 use crate::strategy::SepStrategy;
+use crate::trace;
 
 /// Project a coarse separator state to the fine graph through `map`
 /// (both children of a coarse vertex inherit its label).
@@ -31,6 +32,7 @@ pub fn multilevel_separator(
     // Coarsening chain. Stop when small enough or when matching stalls
     // (coarsening ratio too close to 1, e.g. on near-cliques).
     let mut levels: Vec<Coarsening> = Vec::new();
+    let coarsen_span = trace::scope(trace::Phase::Coarsen);
     let mut cur = g;
     while cur.n() > strat.coarse_target {
         let c = coarsen_hem(cur, rng);
@@ -40,11 +42,13 @@ pub fn multilevel_separator(
         levels.push(c);
         cur = &levels.last().unwrap().coarse;
     }
+    drop(coarsen_span);
 
     // Initial separator on the coarsest graph: best of `ggg_tries`
     // greedy-growing seeds, each FM-refined on the whole (tiny) graph.
     let coarsest: &Graph = levels.last().map(|c| &c.coarse).unwrap_or(g);
     let mut state = {
+        let _span = trace::scope(trace::Phase::InitialSep);
         let mut best: Option<SepState> = None;
         for _ in 0..strat.ggg_tries.max(1) {
             let mut s = greedy_graph_growing(coarsest, 1, rng);
@@ -64,7 +68,10 @@ pub fn multilevel_separator(
     // Uncoarsening with band refinement at every level.
     for li in (0..levels.len()).rev() {
         let fine: &Graph = if li == 0 { g } else { &levels[li - 1].coarse };
-        state = project_state(fine, &state, &levels[li].map);
+        state = {
+            let _span = trace::scope(trace::Phase::ProjectSep);
+            project_state(fine, &state, &levels[li].map)
+        };
         if !band_refine_step(fine, &mut state, strat, refiner, rng) {
             // Empty separator (disconnected component split): nothing to
             // refine at this level.
@@ -72,6 +79,13 @@ pub fn multilevel_separator(
         }
     }
     debug_assert!(state.validate(g).is_ok());
+    trace::quality(
+        state.sep_weight().max(0) as u64,
+        state.imbalance().max(0) as u64,
+        strat.band_width,
+        strat.refine.name(),
+        levels.len() as u32 + 1,
+    );
     state
 }
 

@@ -6,6 +6,7 @@
 
 use crate::comm::Executor;
 use crate::sep::fm::FmParams;
+use crate::trace::TraceLevel;
 use crate::{Error, Result};
 use std::fmt;
 
@@ -100,6 +101,19 @@ pub enum RefineMode {
     /// and keep whichever result wins the quality key.
     #[default]
     Auto,
+}
+
+impl RefineMode {
+    /// Canonical knob value, as accepted by `refine=` and reported in
+    /// trace quality events (DESIGN.md §7).
+    pub fn name(self) -> &'static str {
+        match self {
+            RefineMode::Fm => "fm",
+            RefineMode::Diffusion => "diffusion",
+            RefineMode::Flow => "flow",
+            RefineMode::Auto => "auto",
+        }
+    }
 }
 
 /// Parameters of the multilevel separator computation.
@@ -271,6 +285,25 @@ pub struct Strategy {
     pub dist: DistStrategy,
     /// Band refiner used during uncoarsening.
     pub refiner: RefinerKind,
+    /// Span-recorder level — the `trace=off|phases|full` knob
+    /// (DESIGN.md §7). `off` (the default) leaves one thread-local
+    /// check per instrumentation point and records nothing; `phases`
+    /// records the algorithmic phases into a per-run `PhaseProfile`;
+    /// `full` additionally records every collective and halo exchange
+    /// (what the Chrome-trace export is most useful with).
+    ///
+    /// ```
+    /// use ptscotch::strategy::Strategy;
+    /// use ptscotch::trace::TraceLevel;
+    ///
+    /// assert_eq!(Strategy::default().trace, TraceLevel::Off);
+    /// assert_eq!(
+    ///     Strategy::parse("trace=phases").unwrap().trace,
+    ///     TraceLevel::Phases,
+    /// );
+    /// assert!(Strategy::parse("trace=loud").is_err());
+    /// ```
+    pub trace: TraceLevel,
 }
 
 impl Default for Strategy {
@@ -281,6 +314,7 @@ impl Default for Strategy {
             nd: NdStrategy::default(),
             dist: DistStrategy::default(),
             refiner: RefinerKind::Fm,
+            trace: TraceLevel::Off,
         }
     }
 }
@@ -311,6 +345,7 @@ pub const VALID_KEYS: &[&str] = &[
     "rounds",
     "maxband",
     "sweeps",
+    "trace",
 ];
 
 impl Strategy {
@@ -427,6 +462,7 @@ impl Strategy {
                     }
                 }
                 "flowband" => s.sep.flow_max_band = parse_usize(v)?,
+                "trace" => s.trace = v.parse::<TraceLevel>().map_err(Error::InvalidStrategy)?,
                 _ => {
                     return Err(Error::InvalidStrategy(format!(
                         "unknown key {k} (valid keys: {})",
@@ -501,12 +537,7 @@ impl fmt::Display for Strategy {
             RefinerKind::DiffusionCpu => "diffcpu",
             RefinerKind::DiffusionXla => "xla",
         };
-        let refine = match self.sep.refine {
-            RefineMode::Fm => "fm",
-            RefineMode::Diffusion => "diffusion",
-            RefineMode::Flow => "flow",
-            RefineMode::Auto => "auto",
-        };
+        let refine = self.sep.refine.name();
         let engine = match self.dist.band_engine {
             BandEngine::Auto => "auto",
             BandEngine::Cpu => "cpu",
@@ -518,7 +549,7 @@ impl fmt::Display for Strategy {
              leaf={},maxsep={},leafmethod={leafmethod},refiner={refiner},refine={refine},\
              flowband={},engine={engine},\
              executor={executor},folddup={},foldthresh={},overlap={},rounds={},\
-             maxband={},sweeps={}",
+             maxband={},sweeps={},trace={}",
             self.seed,
             self.sep.band_width,
             self.sep.coarse_target,
@@ -536,6 +567,7 @@ impl fmt::Display for Strategy {
             self.dist.matching_rounds,
             self.dist.max_centralized_band,
             self.dist.diffusion_sweeps,
+            self.trace,
         )
     }
 }
@@ -728,6 +760,7 @@ mod tests {
             ("rounds", "3"),
             ("maxband", "500"),
             ("sweeps", "4"),
+            ("trace", "full"),
         ];
         let covered: Vec<&str> = samples.iter().map(|(k, _)| *k).collect();
         assert_eq!(

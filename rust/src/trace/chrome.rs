@@ -1,0 +1,124 @@
+//! Chrome trace-event JSON export of the per-rank traces — one pid per
+//! rank, loadable in Perfetto (`ui.perfetto.dev`) or `chrome://tracing`
+//! (DESIGN.md §7).
+//!
+//! The output is the JSON-object flavor of the trace-event format:
+//! `{"traceEvents": [...]}` with complete ("X") events for spans
+//! (microsecond timestamps relative to the fleet-shared epoch, counter
+//! deltas in `args`), instant ("i") events for per-ND-node quality
+//! observations, and one `process_name` metadata ("M") event per rank.
+
+use super::profile::replay;
+use super::{RankTrace, CTR_BLOCKED, CTR_BYTES, CTR_MSGS, CTR_OPS};
+use crate::error::{Error, Result};
+use std::path::Path;
+
+fn us(t_ns: u64) -> String {
+    format!("{:.3}", t_ns as f64 / 1e3)
+}
+
+/// Render the traces as a Chrome trace-event JSON string.
+pub fn render(traces: &[RankTrace]) -> Result<String> {
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |out: &mut String, ev: String| {
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&ev);
+    };
+    for t in traces {
+        push(
+            &mut out,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\"args\":{{\"name\":\"rank {}\"}}}}",
+                t.rank, t.rank
+            ),
+        );
+        for s in replay(&t.events)? {
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"{}\",\"cat\":\"phase\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                     \"pid\":{},\"tid\":0,\"args\":{{\"depth\":{},\"bytes\":{},\"msgs\":{},\
+                     \"ops\":{},\"blocked_ns\":{}}}}}",
+                    s.phase,
+                    us(s.t_open_ns),
+                    us(s.t_close_ns - s.t_open_ns),
+                    t.rank,
+                    s.depth,
+                    s.incl[CTR_BYTES],
+                    s.incl[CTR_MSGS],
+                    s.incl[CTR_OPS],
+                    s.incl[CTR_BLOCKED],
+                ),
+            );
+        }
+        for q in &t.quality {
+            push(
+                &mut out,
+                format!(
+                    "{{\"name\":\"separator\",\"cat\":\"quality\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"ts\":{},\"pid\":{},\"tid\":0,\"args\":{{\"depth\":{},\"sep_weight\":{},\
+                     \"imbalance\":{},\"band_width\":{},\"refiner\":\"{}\",\"levels\":{}}}}}",
+                    us(q.t_ns),
+                    t.rank,
+                    q.depth,
+                    q.sep_weight,
+                    q.imbalance,
+                    q.band_width,
+                    q.refiner,
+                    q.levels,
+                ),
+            );
+        }
+    }
+    out.push_str("]}");
+    Ok(out)
+}
+
+/// Number of JSON events [`render`] emits for these traces: one span
+/// plus one quality event each, plus one metadata event per rank.
+/// Used by the round-trip tests to pin the export against the trace.
+pub fn event_count(traces: &[RankTrace]) -> usize {
+    traces
+        .iter()
+        .map(|t| 1 + t.events.len() / 2 + t.quality.len())
+        .sum()
+}
+
+/// Write [`render`]'s output to `path`.
+pub fn write(path: &Path, traces: &[RankTrace]) -> Result<()> {
+    let s = render(traces)?;
+    std::fs::write(path, s).map_err(|e| Error::Io(format!("{}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{install, quality, scope_at, take, Phase, TraceLevel};
+    use std::time::Instant;
+
+    #[test]
+    fn render_emits_one_event_per_span_quality_and_rank() {
+        install(1, TraceLevel::Phases, Instant::now(), None);
+        {
+            let _r = scope_at(Phase::Run, 0);
+            let _l = scope_at(Phase::LeafOrder, 3);
+            quality(5, 1, 2, "fm", 3);
+        }
+        let t = take().unwrap();
+        let traces = vec![t];
+        let s = render(&traces).unwrap();
+        assert!(s.starts_with("{\"traceEvents\":["));
+        assert!(s.ends_with("]}"));
+        assert_eq!(s.matches("\"ph\":\"X\"").count(), 2);
+        assert_eq!(s.matches("\"ph\":\"i\"").count(), 1);
+        assert_eq!(s.matches("\"ph\":\"M\"").count(), 1);
+        assert_eq!(event_count(&traces), 4);
+        assert!(s.contains("\"name\":\"leaf-order\""));
+        assert!(s.contains("\"pid\":1"));
+        assert!(s.contains("\"refiner\":\"fm\""));
+    }
+}

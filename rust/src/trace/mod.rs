@@ -1,0 +1,554 @@
+//! Phase-attributed tracing: a deterministic, always-compiled-in,
+//! near-zero-cost-when-off span recorder threaded through the whole
+//! ordering stack (DESIGN.md §7).
+//!
+//! Every emulated rank (and the sequential engine's driver thread) can
+//! carry a thread-local [`TraceSink`]: a plain `Vec` of open/close
+//! [`SpanEvent`]s — no locks, no allocation beyond the `Vec` growth, no
+//! shared state on the hot path. Each event snapshots the rank's
+//! existing atomic traffic counters (sent bytes / sent msgs / transport
+//! ops / blocked ns) through a [`CounterProbe`], so every span carries
+//! its own traffic and blocked-time attribution as a *delta* between
+//! its open and close snapshots. Spans observe the counters with
+//! relaxed loads and never write them, which is what keeps the
+//! executor-differential counter pins and the sim ≡ threads
+//! bit-identity contract intact under tracing.
+//!
+//! The recorder is controlled by the `trace=off|phases|full` strategy
+//! knob ([`TraceLevel`]): `off` leaves only one thread-local check per
+//! instrumentation point, `phases` records the algorithmic phases of
+//! the pipeline ([`Phase`]), and `full` additionally records every
+//! collective and halo-exchange entry. After the fleet joins, the
+//! per-rank [`RankTrace`]s merge into a [`PhaseProfile`] tree on
+//! `OrderingReport` and can be exported as Chrome trace-event JSON
+//! ([`chrome::write`]) for Perfetto.
+
+pub mod chrome;
+pub mod profile;
+
+pub use profile::{PhaseProfile, Span};
+
+use std::cell::RefCell;
+use std::time::Instant;
+
+/// How much the span recorder records; the `trace=` strategy knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum TraceLevel {
+    /// No recording: every instrumentation point costs one
+    /// thread-local check and nothing is kept. The default.
+    #[default]
+    Off,
+    /// Record the algorithmic phases ([`Phase`]) plus quality events.
+    Phases,
+    /// `Phases` plus every collective and halo-exchange entry point.
+    Full,
+}
+
+impl TraceLevel {
+    /// Canonical lowercase name (`off`/`phases`/`full`), the spelling
+    /// `Strategy`'s `Display` emits and `parse` accepts.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Phases => "phases",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+impl std::fmt::Display for TraceLevel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for TraceLevel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "phases" => Ok(TraceLevel::Phases),
+            "full" => Ok(TraceLevel::Full),
+            other => Err(format!("unknown trace level {other:?} (off|phases|full)")),
+        }
+    }
+}
+
+/// The fixed phase vocabulary of the ordering pipeline. Spans are
+/// tagged with one of these plus the ND recursion depth they run at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Phase {
+    /// Root span covering one whole ordering run on a rank; every
+    /// other span nests inside it, so per-phase exclusive counter
+    /// deltas tile exactly to the rank's run totals.
+    Run,
+    /// Parallel probabilistic matching rounds (`dist::matching`).
+    Match,
+    /// Graph coarsening — distributed (`coarsen_dist`) or sequential
+    /// heavy-edge matching levels inside the multilevel driver.
+    Coarsen,
+    /// Fold-with-duplication of the half fleets (`dist::fold`).
+    Fold,
+    /// Coarsest-graph initial separator: centralization, the
+    /// multi-sequential `multilevel_separator` runs and best-pick.
+    InitialSep,
+    /// Band extraction around the projected separator (sequential
+    /// `extract_band` or the distributed band BFS).
+    BandExtract,
+    /// Umbrella for one distributed band-refinement pass
+    /// (`band_refine_dist`): covers the centralize/scatter traffic
+    /// around the per-mode refiner spans nested inside it.
+    BandRefine,
+    /// Vertex Fiduccia–Mattheyses band refinement.
+    RefineFm,
+    /// Diffusion (damped-Jacobi) band refinement, CPU or XLA.
+    RefineDiffusion,
+    /// Flow-based (push-relabel min vertex cut) band refinement.
+    RefineFlow,
+    /// Separator projection back to the finer graph (`project_state`,
+    /// distributed `fetch_at` projection).
+    ProjectSep,
+    /// Induction of the two part subgraphs (`induce_both`, including
+    /// the §3.1 overlapped variant — overlap-thread traffic lands in
+    /// this span's delta because the threads join before it closes).
+    Induce,
+    /// Leaf ordering (halo-AMD or MMD) of an ND leaf.
+    LeafOrder,
+    /// One halo exchange (`DGraph::halo_exchange`/`halo_frontier`);
+    /// recorded only at [`TraceLevel::Full`].
+    Halo,
+    /// One `comm` collective entry point (barrier, allgatherv,
+    /// alltoallv, bcast, split); recorded only at [`TraceLevel::Full`].
+    Collective,
+}
+
+impl Phase {
+    /// Every phase, in canonical display order.
+    pub const ALL: [Phase; 15] = [
+        Phase::Run,
+        Phase::Match,
+        Phase::Coarsen,
+        Phase::Fold,
+        Phase::InitialSep,
+        Phase::BandExtract,
+        Phase::BandRefine,
+        Phase::RefineFm,
+        Phase::RefineDiffusion,
+        Phase::RefineFlow,
+        Phase::ProjectSep,
+        Phase::Induce,
+        Phase::LeafOrder,
+        Phase::Halo,
+        Phase::Collective,
+    ];
+
+    /// Canonical lowercase name used in tables and Chrome traces.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Run => "run",
+            Phase::Match => "match",
+            Phase::Coarsen => "coarsen",
+            Phase::Fold => "fold",
+            Phase::InitialSep => "initial-sep",
+            Phase::BandExtract => "band-extract",
+            Phase::BandRefine => "band-refine",
+            Phase::RefineFm => "refine-fm",
+            Phase::RefineDiffusion => "refine-diffusion",
+            Phase::RefineFlow => "refine-flow",
+            Phase::ProjectSep => "project-sep",
+            Phase::Induce => "induce",
+            Phase::LeafOrder => "leaf-order",
+            Phase::Halo => "halo",
+            Phase::Collective => "collective",
+        }
+    }
+
+    /// The minimum [`TraceLevel`] at which this phase is recorded:
+    /// per-call transport phases (`Halo`, `Collective`) only at
+    /// `full`, everything else at `phases`.
+    pub fn min_level(&self) -> TraceLevel {
+        match self {
+            Phase::Halo | Phase::Collective => TraceLevel::Full,
+            _ => TraceLevel::Phases,
+        }
+    }
+}
+
+impl std::fmt::Display for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Open or close marker of a [`SpanEvent`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A span opened at this event's timestamp.
+    Open,
+    /// The innermost open span closed at this event's timestamp.
+    Close,
+}
+
+/// Number of counter columns snapshotted per event; see [`SpanEvent::ctrs`].
+pub const CTRS: usize = 4;
+/// Index of the sent-bytes column in a counter snapshot.
+pub const CTR_BYTES: usize = 0;
+/// Index of the sent-messages column in a counter snapshot.
+pub const CTR_MSGS: usize = 1;
+/// Index of the transport-ops column in a counter snapshot.
+pub const CTR_OPS: usize = 2;
+/// Index of the blocked-nanoseconds column in a counter snapshot.
+pub const CTR_BLOCKED: usize = 3;
+
+/// One open/close event in a rank's trace. Spans are stored as event
+/// pairs (not closed intervals) so nesting discipline is checkable
+/// from the recorded data itself and reconstruction is a stack replay
+/// ([`profile::replay`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Open or close.
+    pub kind: EventKind,
+    /// Phase tag of the span this event opens or closes.
+    pub phase: Phase,
+    /// ND recursion depth tag (0 at the root; children of node `d` are
+    /// `2d+1`/`2d+2`, matching the dissection's node numbering).
+    pub depth: u32,
+    /// Nanoseconds since the fleet-shared trace epoch.
+    pub t_ns: u64,
+    /// Monotone counter snapshot at this event:
+    /// `[sent_bytes, sent_msgs, transport_ops, blocked_ns]`
+    /// (see the `CTR_*` index constants). All zeros when the sink has
+    /// no probe (the sequential engine).
+    pub ctrs: [u64; CTRS],
+}
+
+/// A per-ND-node quality observation (separator weight, imbalance,
+/// band width, refiner chosen, multilevel level count), attached to
+/// the trace as an instant event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QualityEvent {
+    /// Nanoseconds since the fleet-shared trace epoch.
+    pub t_ns: u64,
+    /// ND node tag, inherited from the innermost open span.
+    pub depth: u32,
+    /// Vertex weight of the separator.
+    pub sep_weight: u64,
+    /// Absolute part imbalance `|w0 − w1|`.
+    pub imbalance: u64,
+    /// Band width the refinement ran with.
+    pub band_width: u32,
+    /// Canonical name of the refiner that produced the separator.
+    pub refiner: &'static str,
+    /// Number of multilevel coarsening levels used (0 when unknown,
+    /// e.g. for the distributed per-node summary).
+    pub levels: u32,
+}
+
+/// Everything one rank recorded during a run: its span events in
+/// emission order plus its quality events.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RankTrace {
+    /// The emulated rank that recorded this trace (0 for the
+    /// sequential engine).
+    pub rank: usize,
+    /// The level the sink recorded at.
+    pub level: TraceLevel,
+    /// Open/close events in emission order.
+    pub events: Vec<SpanEvent>,
+    /// Quality events in emission order.
+    pub quality: Vec<QualityEvent>,
+}
+
+/// Reads the rank's monotone traffic counters for event snapshots.
+/// Built by `comm` over the rank's `RankStats` atomics (relaxed loads
+/// only — the probe never writes), absent for the sequential engine.
+pub struct CounterProbe(Box<dyn Fn() -> [u64; CTRS] + Send>);
+
+impl CounterProbe {
+    /// Wrap a counter-reading closure.
+    pub fn new(f: impl Fn() -> [u64; CTRS] + Send + 'static) -> Self {
+        CounterProbe(Box::new(f))
+    }
+
+    fn read(&self) -> [u64; CTRS] {
+        (self.0)()
+    }
+}
+
+impl std::fmt::Debug for CounterProbe {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("CounterProbe")
+    }
+}
+
+struct Active {
+    rank: usize,
+    level: TraceLevel,
+    epoch: Instant,
+    probe: Option<CounterProbe>,
+    events: Vec<SpanEvent>,
+    quality: Vec<QualityEvent>,
+    /// `(phase, depth)` of every currently open span, innermost last.
+    stack: Vec<(Phase, u32)>,
+}
+
+impl Active {
+    fn snapshot(&self) -> [u64; CTRS] {
+        match &self.probe {
+            Some(p) => p.read(),
+            None => [0; CTRS],
+        }
+    }
+
+    fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Active>> = const { RefCell::new(None) };
+}
+
+/// Install a sink on the current thread. `comm::try_run_with` calls
+/// this inside each spawned rank thread (with a probe over the rank's
+/// counters and the fleet-shared epoch); the sequential engine calls
+/// it on its driver thread with no probe. Replaces any sink already
+/// installed on the thread.
+pub fn install(rank: usize, level: TraceLevel, epoch: Instant, probe: Option<CounterProbe>) {
+    ACTIVE.with(|a| {
+        *a.borrow_mut() = Some(Active {
+            rank,
+            level,
+            epoch,
+            probe,
+            events: Vec::new(),
+            quality: Vec::new(),
+            stack: Vec::new(),
+        });
+    });
+}
+
+/// Uninstall the current thread's sink and return what it recorded;
+/// `None` when no sink is installed.
+pub fn take() -> Option<RankTrace> {
+    ACTIVE.with(|a| {
+        a.borrow_mut().take().map(|s| RankTrace {
+            rank: s.rank,
+            level: s.level,
+            events: s.events,
+            quality: s.quality,
+        })
+    })
+}
+
+/// The level the current thread records at ([`TraceLevel::Off`] when
+/// no sink is installed).
+pub fn level() -> TraceLevel {
+    ACTIVE.with(|a| a.borrow().as_ref().map_or(TraceLevel::Off, |s| s.level))
+}
+
+/// RAII guard for one span: records the open event on creation and
+/// the close event on drop. Inert (a single thread-local check) when
+/// no sink is installed or the phase's [`Phase::min_level`] exceeds
+/// the sink's level.
+#[must_use = "the span closes when the guard drops"]
+pub struct SpanGuard {
+    armed: bool,
+}
+
+/// Open a span of `phase`, inheriting the ND depth tag of the
+/// innermost open span (0 when none is open).
+pub fn scope(phase: Phase) -> SpanGuard {
+    open_span(phase, None)
+}
+
+/// Open a span of `phase` tagged with an explicit ND node `depth`.
+pub fn scope_at(phase: Phase, depth: u32) -> SpanGuard {
+    open_span(phase, Some(depth))
+}
+
+fn open_span(phase: Phase, depth: Option<u32>) -> SpanGuard {
+    ACTIVE.with(|a| {
+        let mut b = a.borrow_mut();
+        let Some(s) = b.as_mut() else {
+            return SpanGuard { armed: false };
+        };
+        if s.level < phase.min_level() {
+            return SpanGuard { armed: false };
+        }
+        let depth = depth.unwrap_or_else(|| s.stack.last().map_or(0, |&(_, d)| d));
+        let ctrs = s.snapshot();
+        let t_ns = s.now_ns();
+        s.stack.push((phase, depth));
+        s.events.push(SpanEvent {
+            kind: EventKind::Open,
+            phase,
+            depth,
+            t_ns,
+            ctrs,
+        });
+        SpanGuard { armed: true }
+    })
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        ACTIVE.with(|a| {
+            let mut b = a.borrow_mut();
+            let Some(s) = b.as_mut() else { return };
+            let Some((phase, depth)) = s.stack.pop() else {
+                return;
+            };
+            let ctrs = s.snapshot();
+            let t_ns = s.now_ns();
+            s.events.push(SpanEvent {
+                kind: EventKind::Close,
+                phase,
+                depth,
+                t_ns,
+                ctrs,
+            });
+        });
+    }
+}
+
+/// Record a per-ND-node quality event (no-op without a sink). The ND
+/// depth tag is inherited from the innermost open span.
+pub fn quality(
+    sep_weight: u64,
+    imbalance: u64,
+    band_width: u32,
+    refiner: &'static str,
+    levels: u32,
+) {
+    let depth = ACTIVE.with(|a| {
+        a.borrow()
+            .as_ref()
+            .and_then(|s| s.stack.last().map(|&(_, d)| d))
+            .unwrap_or(0)
+    });
+    quality_at(depth, sep_weight, imbalance, band_width, refiner, levels);
+}
+
+/// [`quality`] with an explicit ND depth tag, for call sites (like the
+/// distributed dissection driver) whose enclosing span sits at a
+/// different depth than the ND node being reported.
+pub fn quality_at(
+    depth: u32,
+    sep_weight: u64,
+    imbalance: u64,
+    band_width: u32,
+    refiner: &'static str,
+    levels: u32,
+) {
+    ACTIVE.with(|a| {
+        let mut b = a.borrow_mut();
+        let Some(s) = b.as_mut() else { return };
+        let t_ns = s.now_ns();
+        s.quality.push(QualityEvent {
+            t_ns,
+            depth,
+            sep_weight,
+            imbalance,
+            band_width,
+            refiner,
+            levels,
+        });
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guards_are_inert_without_a_sink() {
+        assert_eq!(level(), TraceLevel::Off);
+        let g = scope(Phase::Coarsen);
+        drop(g);
+        assert!(take().is_none());
+    }
+
+    #[test]
+    fn spans_record_nested_events_with_depth_inheritance() {
+        install(3, TraceLevel::Phases, Instant::now(), None);
+        {
+            let _run = scope_at(Phase::Run, 0);
+            {
+                let _i = scope_at(Phase::Induce, 5);
+                let _c = scope(Phase::Coarsen); // inherits depth 5
+            }
+            quality(10, 2, 3, "fm", 4);
+        }
+        let t = take().expect("sink installed");
+        assert_eq!(t.rank, 3);
+        assert_eq!(t.events.len(), 6);
+        let kinds: Vec<_> = t.events.iter().map(|e| (e.kind, e.phase, e.depth)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (EventKind::Open, Phase::Run, 0),
+                (EventKind::Open, Phase::Induce, 5),
+                (EventKind::Open, Phase::Coarsen, 5),
+                (EventKind::Close, Phase::Coarsen, 5),
+                (EventKind::Close, Phase::Induce, 5),
+                (EventKind::Close, Phase::Run, 0),
+            ]
+        );
+        assert_eq!(t.quality.len(), 1);
+        assert_eq!(t.quality[0].sep_weight, 10);
+        assert_eq!(t.quality[0].refiner, "fm");
+        // Timestamps are monotone and counters (no probe) stay zero.
+        for w in t.events.windows(2) {
+            assert!(w[0].t_ns <= w[1].t_ns);
+        }
+        assert!(t.events.iter().all(|e| e.ctrs == [0; CTRS]));
+        assert!(take().is_none());
+    }
+
+    #[test]
+    fn full_only_phases_are_skipped_at_phases_level() {
+        install(0, TraceLevel::Phases, Instant::now(), None);
+        {
+            let _c = scope(Phase::Collective);
+            let _h = scope(Phase::Halo);
+        }
+        let t = take().unwrap();
+        assert!(t.events.is_empty());
+        install(0, TraceLevel::Full, Instant::now(), None);
+        {
+            let _c = scope(Phase::Collective);
+        }
+        let t = take().unwrap();
+        assert_eq!(t.events.len(), 2);
+    }
+
+    #[test]
+    fn probe_snapshots_land_in_events() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let ctr = Arc::new(AtomicU64::new(7));
+        let c2 = ctr.clone();
+        let probe = CounterProbe::new(move || [c2.load(Ordering::Relaxed), 0, 0, 0]);
+        install(0, TraceLevel::Phases, Instant::now(), Some(probe));
+        {
+            let _g = scope(Phase::Run);
+            ctr.store(19, Ordering::Relaxed);
+        }
+        let t = take().unwrap();
+        assert_eq!(t.events[0].ctrs[CTR_BYTES], 7);
+        assert_eq!(t.events[1].ctrs[CTR_BYTES], 19);
+    }
+
+    #[test]
+    fn trace_level_parse_display_round_trip() {
+        for l in [TraceLevel::Off, TraceLevel::Phases, TraceLevel::Full] {
+            assert_eq!(l.name().parse::<TraceLevel>().unwrap(), l);
+        }
+        let err = "loud".parse::<TraceLevel>().unwrap_err();
+        assert!(err.contains("off|phases|full"), "{err}");
+    }
+}

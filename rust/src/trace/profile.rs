@@ -1,0 +1,510 @@
+//! Merging per-rank traces into a hierarchical [`PhaseProfile`] — the
+//! critical-path view of a run (DESIGN.md §7).
+//!
+//! Each rank's open/close event stream is replayed with a stack
+//! ([`replay`]) into closed [`Span`]s carrying inclusive and exclusive
+//! wall time and counter deltas, then folded into one tree keyed by
+//! the *phase path* (the nesting chain of phases): all spans with the
+//! same path, across all ranks and ND depths, aggregate into one
+//! [`PhaseNode`] with per-rank totals. Exclusive columns tile: summing
+//! the exclusive column over every node of the tree reproduces the
+//! root's inclusive total exactly, which for a run wrapped in a
+//! [`Phase::Run`] root span equals the rank's run-total counters.
+
+use super::{EventKind, Phase, QualityEvent, RankTrace, SpanEvent, CTRS};
+use crate::error::{Error, Result};
+
+/// Number of aggregated columns per rank in a [`PhaseNode`]:
+/// `[wall_ns, bytes, msgs, ops, blocked_ns]`.
+pub const COLS: usize = 5;
+/// Column index of wall nanoseconds.
+pub const COL_WALL: usize = 0;
+/// Column index of sent bytes.
+pub const COL_BYTES: usize = 1;
+/// Column index of sent messages.
+pub const COL_MSGS: usize = 2;
+/// Column index of transport ops.
+pub const COL_OPS: usize = 3;
+/// Column index of blocked nanoseconds.
+pub const COL_BLOCKED: usize = 4;
+
+/// One closed span reconstructed from a rank's event stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Phase tag.
+    pub phase: Phase,
+    /// ND depth tag.
+    pub depth: u32,
+    /// Open timestamp (ns since the trace epoch).
+    pub t_open_ns: u64,
+    /// Close timestamp (ns since the trace epoch).
+    pub t_close_ns: u64,
+    /// Inclusive counter deltas (`[bytes, msgs, ops, blocked_ns]`).
+    pub incl: [u64; CTRS],
+    /// Exclusive counter deltas: inclusive minus direct children.
+    pub excl: [u64; CTRS],
+    /// Exclusive wall ns: inclusive minus direct children.
+    pub excl_wall_ns: u64,
+    /// Index into the replay output of the parent span (`usize::MAX`
+    /// for a top-level span).
+    pub parent: usize,
+}
+
+impl Span {
+    /// Inclusive wall nanoseconds.
+    pub fn wall_ns(&self) -> u64 {
+        self.t_close_ns - self.t_open_ns
+    }
+}
+
+/// Replay a rank's open/close event stream into closed [`Span`]s
+/// (in close order), validating nesting discipline as it goes: every
+/// close must match the innermost open span's phase and depth,
+/// timestamps and counter snapshots must be monotone, and the stack
+/// must be empty at the end.
+pub fn replay(events: &[SpanEvent]) -> Result<Vec<Span>> {
+    let mut spans: Vec<Span> = Vec::with_capacity(events.len() / 2);
+    struct Open {
+        phase: Phase,
+        depth: u32,
+        t_open: u64,
+        ctrs: [u64; CTRS],
+        child_wall: u64,
+        child_ctrs: [u64; CTRS],
+    }
+    let mut stack: Vec<Open> = Vec::new();
+    let mut last_t = 0u64;
+    let mut last_ctrs = [0u64; CTRS];
+    let bad = |m: String| Error::Runtime(format!("malformed trace: {m}"));
+    for (i, e) in events.iter().enumerate() {
+        if e.t_ns < last_t {
+            return Err(bad(format!("timestamp regression at event {i}")));
+        }
+        last_t = e.t_ns;
+        for c in 0..CTRS {
+            if e.ctrs[c] < last_ctrs[c] {
+                return Err(bad(format!("counter {c} regression at event {i}")));
+            }
+        }
+        last_ctrs = e.ctrs;
+        match e.kind {
+            EventKind::Open => {
+                stack.push(Open {
+                    phase: e.phase,
+                    depth: e.depth,
+                    t_open: e.t_ns,
+                    ctrs: e.ctrs,
+                    child_wall: 0,
+                    child_ctrs: [0; CTRS],
+                });
+            }
+            EventKind::Close => {
+                let Some(o) = stack.pop() else {
+                    return Err(bad(format!("close with empty stack at event {i}")));
+                };
+                if o.phase != e.phase || o.depth != e.depth {
+                    return Err(bad(format!(
+                        "close {}@{} does not match open {}@{} at event {i}",
+                        e.phase, e.depth, o.phase, o.depth
+                    )));
+                }
+                let wall = e.t_ns - o.t_open;
+                let mut incl = [0u64; CTRS];
+                let mut excl = [0u64; CTRS];
+                for c in 0..CTRS {
+                    incl[c] = e.ctrs[c] - o.ctrs[c];
+                    excl[c] = incl[c].saturating_sub(o.child_ctrs[c]);
+                }
+                if let Some(p) = stack.last_mut() {
+                    p.child_wall += wall;
+                    for c in 0..CTRS {
+                        p.child_ctrs[c] += incl[c];
+                    }
+                }
+                spans.push(Span {
+                    phase: o.phase,
+                    depth: o.depth,
+                    t_open_ns: o.t_open,
+                    t_close_ns: e.t_ns,
+                    incl,
+                    excl,
+                    excl_wall_ns: wall.saturating_sub(o.child_wall),
+                    parent: usize::MAX, // resolved below
+                });
+            }
+        }
+    }
+    if !stack.is_empty() {
+        return Err(bad(format!("{} spans left open at end of trace", stack.len())));
+    }
+    // `parent` currently holds the parent's *stack* position at open
+    // time, which is not a stable index into `spans` (close order).
+    // Recompute it with a second stack replay over the same events.
+    let mut idx_stack: Vec<usize> = Vec::new();
+    let mut order: Vec<usize> = Vec::new(); // close-order index per open
+    let mut closed = 0usize;
+    for e in events {
+        match e.kind {
+            EventKind::Open => {
+                order.push(usize::MAX);
+                idx_stack.push(order.len() - 1);
+            }
+            EventKind::Close => {
+                let me = idx_stack.pop().expect("validated above");
+                order[me] = closed;
+                closed += 1;
+            }
+        }
+    }
+    // Walk opens again, assigning each closed span its parent's
+    // close-order index.
+    let mut open_pos: Vec<usize> = Vec::new();
+    let mut open_seen = 0usize;
+    for e in events {
+        match e.kind {
+            EventKind::Open => {
+                let parent = open_pos.last().map_or(usize::MAX, |&p| order[p]);
+                spans[order[open_seen]].parent = parent;
+                open_pos.push(open_seen);
+                open_seen += 1;
+            }
+            EventKind::Close => {
+                open_pos.pop();
+            }
+        }
+    }
+    Ok(spans)
+}
+
+/// One node of the merged phase tree: all spans sharing this phase
+/// path, aggregated per rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseNode {
+    /// Phase tag of this tree position.
+    pub phase: Phase,
+    /// Total number of spans folded into this node, across all ranks.
+    pub count: u64,
+    /// Per-rank inclusive totals, indexed `[rank][COL_*]`.
+    pub incl: Vec<[u64; COLS]>,
+    /// Per-rank exclusive totals (inclusive minus direct children).
+    pub excl: Vec<[u64; COLS]>,
+    /// Child phases in first-seen order.
+    pub children: Vec<PhaseNode>,
+}
+
+impl PhaseNode {
+    fn new(phase: Phase, p: usize) -> Self {
+        PhaseNode {
+            phase,
+            count: 0,
+            incl: vec![[0; COLS]; p],
+            excl: vec![[0; COLS]; p],
+            children: Vec::new(),
+        }
+    }
+
+    /// Max of an exclusive column over ranks.
+    pub fn excl_max(&self, col: usize) -> u64 {
+        self.excl.iter().map(|r| r[col]).max().unwrap_or(0)
+    }
+
+    /// Mean of an exclusive column over ranks.
+    pub fn excl_mean(&self, col: usize) -> f64 {
+        if self.excl.is_empty() {
+            return 0.0;
+        }
+        self.excl.iter().map(|r| r[col]).sum::<u64>() as f64 / self.excl.len() as f64
+    }
+
+    /// Sum of an exclusive column over ranks.
+    pub fn excl_sum(&self, col: usize) -> u64 {
+        self.excl.iter().map(|r| r[col]).sum()
+    }
+
+    /// Max of an inclusive column over ranks.
+    pub fn incl_max(&self, col: usize) -> u64 {
+        self.incl.iter().map(|r| r[col]).max().unwrap_or(0)
+    }
+}
+
+/// The merged, hierarchical phase profile of one run — per-phase
+/// inclusive/exclusive wall, traffic and blocked time with per-rank
+/// max vs mean, plus the run's quality events. Built from the ranks'
+/// [`RankTrace`]s after the fleet joins; rendered by `Display` as the
+/// per-phase table the CLI prints.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PhaseProfile {
+    /// Number of ranks merged (columns of the per-rank vectors).
+    pub p: usize,
+    /// Top-level phase nodes (a single `run` root in practice).
+    pub roots: Vec<PhaseNode>,
+    /// Quality events from all ranks as `(rank, event)`.
+    pub quality: Vec<(usize, QualityEvent)>,
+    /// Total spans merged across all ranks.
+    pub spans: u64,
+}
+
+impl PhaseProfile {
+    /// Merge per-rank traces into one profile. Ranks may record
+    /// different span sets (different dissection branches); a rank
+    /// simply contributes zero to nodes it never entered. Fails on a
+    /// malformed event stream (unbalanced or mismatched nesting).
+    pub fn build(traces: &[RankTrace]) -> Result<PhaseProfile> {
+        let p = traces.iter().map(|t| t.rank + 1).max().unwrap_or(0);
+        let mut prof = PhaseProfile {
+            p,
+            roots: Vec::new(),
+            quality: Vec::new(),
+            spans: 0,
+        };
+        fn descend<'a>(
+            nodes: &'a mut Vec<PhaseNode>,
+            phases: &[Phase],
+            p: usize,
+        ) -> &'a mut PhaseNode {
+            let ph = phases[0];
+            let pos = match nodes.iter().position(|n| n.phase == ph) {
+                Some(pos) => pos,
+                None => {
+                    nodes.push(PhaseNode::new(ph, p));
+                    nodes.len() - 1
+                }
+            };
+            if phases.len() == 1 {
+                &mut nodes[pos]
+            } else {
+                descend(&mut nodes[pos].children, &phases[1..], p)
+            }
+        }
+        for t in traces {
+            let spans = replay(&t.events)?;
+            // Resolve each span's phase path root-first, then walk the
+            // tree creating nodes as needed.
+            for (i, s) in spans.iter().enumerate() {
+                let mut path = vec![spans[i].phase];
+                let mut cur = *s;
+                while cur.parent != usize::MAX {
+                    path.push(spans[cur.parent].phase);
+                    cur = spans[cur.parent];
+                }
+                path.reverse();
+                let n = descend(&mut prof.roots, &path, p);
+                n.count += 1;
+                let r = t.rank;
+                n.incl[r][COL_WALL] += s.wall_ns();
+                n.excl[r][COL_WALL] += s.excl_wall_ns;
+                for c in 0..CTRS {
+                    n.incl[r][1 + c] += s.incl[c];
+                    n.excl[r][1 + c] += s.excl[c];
+                }
+                prof.spans += 1;
+            }
+            for q in &t.quality {
+                prof.quality.push((t.rank, *q));
+            }
+        }
+        Ok(prof)
+    }
+
+    /// Depth-first flattening of the tree as `(node, depth)` pairs.
+    pub fn flatten(&self) -> Vec<(&PhaseNode, usize)> {
+        fn walk<'a>(n: &'a PhaseNode, d: usize, out: &mut Vec<(&'a PhaseNode, usize)>) {
+            out.push((n, d));
+            for c in &n.children {
+                walk(c, d + 1, out);
+            }
+        }
+        let mut out = Vec::new();
+        for r in &self.roots {
+            walk(r, 0, &mut out);
+        }
+        out
+    }
+
+    /// Per-phase totals aggregated across the whole tree (exclusive
+    /// columns summed over every node with that phase tag and every
+    /// rank), as `(phase, count, [COLS] totals)` in [`Phase::ALL`]
+    /// order, omitting phases that never appear.
+    pub fn phase_totals(&self) -> Vec<(Phase, u64, [u64; COLS])> {
+        let mut acc: Vec<(u64, [u64; COLS])> = vec![(0, [0; COLS]); Phase::ALL.len()];
+        for (n, _) in self.flatten() {
+            let i = Phase::ALL.iter().position(|&p| p == n.phase).expect("fixed enum");
+            acc[i].0 += n.count;
+            for c in 0..COLS {
+                acc[i].1[c] += n.excl_sum(c);
+            }
+        }
+        Phase::ALL
+            .iter()
+            .zip(acc)
+            .filter(|(_, (count, _))| *count > 0)
+            .map(|(&ph, (count, cols))| (ph, count, cols))
+            .collect()
+    }
+
+    /// Sum of one exclusive column over the entire tree and all ranks.
+    /// For a run wrapped in a `run` root span this reproduces the
+    /// run-total counter exactly (the exclusive columns tile).
+    pub fn total(&self, col: usize) -> u64 {
+        self.flatten().iter().map(|(n, _)| n.excl_sum(col)).sum()
+    }
+
+    /// The sequential-tail fraction: the slowest rank's total
+    /// leaf-order exclusive wall time divided by the slowest rank's
+    /// root inclusive wall time — the Amdahl share of the sequential
+    /// leaf orderings on the critical path. 0 when nothing was traced.
+    pub fn sequential_tail_fraction(&self) -> f64 {
+        let root_max: u64 = self.roots.iter().map(|r| r.incl_max(COL_WALL)).max().unwrap_or(0);
+        if root_max == 0 {
+            return 0.0;
+        }
+        let mut leaf = vec![0u64; self.p];
+        for (n, _) in self.flatten() {
+            if n.phase == Phase::LeafOrder {
+                for (r, row) in n.excl.iter().enumerate() {
+                    leaf[r] += row[COL_WALL];
+                }
+            }
+        }
+        leaf.into_iter().max().unwrap_or(0) as f64 / root_max as f64
+    }
+
+    /// One-line summary for the batch CLI's `--profile` row: the top
+    /// three phases by exclusive wall (per-rank max) plus the
+    /// sequential-tail fraction.
+    pub fn summary_row(&self) -> String {
+        let mut totals = self.phase_totals();
+        totals.sort_by(|a, b| b.2[COL_WALL].cmp(&a.2[COL_WALL]).then(a.0.name().cmp(b.0.name())));
+        let parts: Vec<String> = totals
+            .iter()
+            .take(3)
+            .map(|(ph, _, cols)| format!("{ph} {:.1}ms", cols[COL_WALL] as f64 / 1e6))
+            .collect();
+        format!(
+            "{} seq_tail={:.3}",
+            parts.join(" | "),
+            self.sequential_tail_fraction()
+        )
+    }
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+impl std::fmt::Display for PhaseProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "phase profile (p = {}, {} spans; wall in ms, exclusive unless noted)",
+            self.p, self.spans
+        )?;
+        writeln!(
+            f,
+            "{:<34} {:>7} {:>10} {:>10} {:>10} {:>12} {:>8} {:>10}",
+            "phase", "count", "incl(max)", "excl(max)", "excl(mean)", "bytes", "msgs", "blocked"
+        )?;
+        for (n, d) in self.flatten() {
+            let name = format!("{}{}", "  ".repeat(d), n.phase);
+            writeln!(
+                f,
+                "{:<34} {:>7} {:>10} {:>10} {:>10} {:>12} {:>8} {:>10}",
+                name,
+                n.count,
+                fmt_ms(n.incl_max(COL_WALL)),
+                fmt_ms(n.excl_max(COL_WALL)),
+                format!("{:.2}", n.excl_mean(COL_WALL) / 1e6),
+                n.excl_sum(COL_BYTES),
+                n.excl_sum(COL_MSGS),
+                fmt_ms(n.excl_max(COL_BLOCKED)),
+            )?;
+        }
+        write!(
+            f,
+            "quality events: {}; sequential tail fraction: {:.3}",
+            self.quality.len(),
+            self.sequential_tail_fraction()
+        )?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{install, scope, scope_at, take, TraceLevel};
+    use std::time::Instant;
+
+    fn trace_of(f: impl FnOnce()) -> RankTrace {
+        install(0, TraceLevel::Full, Instant::now(), None);
+        f();
+        take().unwrap()
+    }
+
+    #[test]
+    fn replay_reconstructs_nesting_and_parents() {
+        let t = trace_of(|| {
+            let _r = scope_at(Phase::Run, 0);
+            {
+                let _a = scope_at(Phase::Induce, 1);
+                let _b = scope(Phase::Coarsen);
+            }
+            let _c = scope_at(Phase::LeafOrder, 2);
+        });
+        let spans = replay(&t.events).unwrap();
+        assert_eq!(spans.len(), 4);
+        // Close order: coarsen, induce, leaf-order, run.
+        assert_eq!(spans[0].phase, Phase::Coarsen);
+        assert_eq!(spans[1].phase, Phase::Induce);
+        assert_eq!(spans[2].phase, Phase::LeafOrder);
+        assert_eq!(spans[3].phase, Phase::Run);
+        assert_eq!(spans[0].parent, 1);
+        assert_eq!(spans[1].parent, 3);
+        assert_eq!(spans[2].parent, 3);
+        assert_eq!(spans[3].parent, usize::MAX);
+        // Exclusive wall tiles to the root's inclusive wall.
+        let excl_sum: u64 = spans.iter().map(|s| s.excl_wall_ns).sum();
+        assert_eq!(excl_sum, spans[3].wall_ns());
+    }
+
+    #[test]
+    fn replay_rejects_unbalanced_streams() {
+        let mut t = trace_of(|| {
+            let _r = scope(Phase::Run);
+        });
+        t.events.pop();
+        let err = replay(&t.events).unwrap_err().to_string();
+        assert!(err.contains("left open"), "{err}");
+    }
+
+    #[test]
+    fn profile_merges_ranks_and_tiles_exclusive_columns() {
+        let mk = |rank: usize| {
+            install(rank, TraceLevel::Phases, Instant::now(), None);
+            {
+                let _r = scope_at(Phase::Run, 0);
+                let _l = scope_at(Phase::LeafOrder, 1);
+            }
+            take().unwrap()
+        };
+        let traces = vec![mk(0), mk(1)];
+        let prof = PhaseProfile::build(&traces).unwrap();
+        assert_eq!(prof.p, 2);
+        assert_eq!(prof.roots.len(), 1);
+        assert_eq!(prof.roots[0].phase, Phase::Run);
+        assert_eq!(prof.roots[0].count, 2);
+        assert_eq!(prof.roots[0].children.len(), 1);
+        assert_eq!(prof.roots[0].children[0].phase, Phase::LeafOrder);
+        assert_eq!(prof.spans, 4);
+        // Exclusive wall over the whole tree equals root inclusive sum.
+        let root_incl: u64 = prof.roots[0].incl.iter().map(|r| r[COL_WALL]).sum();
+        assert_eq!(prof.total(COL_WALL), root_incl);
+        // The fraction is a share of the root's wall time, so it can
+        // never exceed 1 (and is 0 only on a zero-resolution clock).
+        assert!(prof.sequential_tail_fraction() <= 1.0);
+        let table = prof.to_string();
+        assert!(table.contains("run"), "{table}");
+        assert!(table.contains("leaf-order"), "{table}");
+        assert!(!prof.summary_row().is_empty());
+    }
+}

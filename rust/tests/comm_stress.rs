@@ -44,6 +44,7 @@ where
     let cfg = RunConfig {
         fault: None,
         stall_deadline: tight_deadline(),
+        ..RunConfig::default()
     };
     match comm::try_run_with(exec, p, cfg, f) {
         Ok((res, _)) => res,

@@ -1,0 +1,234 @@
+//! Invariant suite for the phase-attributed tracing layer (DESIGN.md
+//! §7). Three contracts are enforced here, on real ordering runs:
+//!
+//! 1. **Well-formedness** — every rank's event stream replays into a
+//!    properly nested span forest with exactly one `run` root, and the
+//!    root's inclusive counter deltas reproduce the rank's run-total
+//!    traffic counters *exactly* (the recorder snapshots the very
+//!    atomics the telemetry reports, so nothing can drift). The merged
+//!    [`PhaseProfile`]'s exclusive columns tile back to the same
+//!    totals.
+//! 2. **Observer neutrality** — a `trace=off` run is bit-identical
+//!    (permutation, blocks, bytes, msgs, transport ops) to a
+//!    `trace=full` run of the same request, across the generator
+//!    suite, rank counts and both executors. Tracing may never perturb
+//!    what it observes.
+//! 3. **Export fidelity** — the Chrome trace-event JSON is
+//!    syntactically sound and carries exactly
+//!    [`chrome::event_count`] events, and [`chrome::write`] puts the
+//!    same bytes on disk that [`chrome::render`] returns.
+
+use ptscotch::coordinator::{Engine, OrderingRequest, OrderingResult, OrderingService};
+use ptscotch::graph::{generators, Graph};
+use ptscotch::strategy::Strategy;
+use ptscotch::trace::profile::{replay, COL_BYTES, COL_MSGS, COL_OPS};
+use ptscotch::trace::{chrome, Phase, TraceLevel, CTR_BYTES, CTR_MSGS, CTR_OPS};
+
+/// Run one ordering with the given executor and trace level.
+fn order_traced(
+    svc: &OrderingService,
+    g: &Graph,
+    engine: Engine,
+    exec: &str,
+    trace: &str,
+) -> OrderingResult {
+    let strat = Strategy::parse(&format!("executor={exec},seed=13,trace={trace}")).unwrap();
+    let req = OrderingRequest::new(g).strategy(strat).engine(engine);
+    svc.run(&req).unwrap()
+}
+
+#[test]
+fn spans_nest_and_counter_deltas_tile_to_run_totals() {
+    let g = generators::grid3d(7, 7, 7);
+    let svc = OrderingService::new_cpu_only();
+    for exec in ["sim", "threads"] {
+        let res = order_traced(&svc, &g, Engine::PtScotch { p: 4 }, exec, "full");
+        assert_eq!(res.traces.len(), 4, "{exec}: one trace per rank");
+        for (r, t) in res.traces.iter().enumerate() {
+            assert_eq!(t.rank, r, "{exec}: traces in rank order");
+            assert_eq!(t.level, TraceLevel::Full, "{exec}");
+            // Replay validates the nesting discipline (close matches
+            // innermost open, monotone clocks/counters, empty stack).
+            let spans = replay(&t.events)
+                .unwrap_or_else(|e| panic!("{exec} rank {r}: malformed trace: {e}"));
+            assert!(!spans.is_empty(), "{exec} rank {r}: no spans");
+            let roots: Vec<_> = spans.iter().filter(|s| s.parent == usize::MAX).collect();
+            assert_eq!(roots.len(), 1, "{exec} rank {r}: exactly one root span");
+            let root = roots[0];
+            assert_eq!(root.phase, Phase::Run, "{exec} rank {r}");
+            // The root's inclusive deltas ARE the rank's run totals:
+            // the probe reads the same atomics the snapshot reports.
+            assert_eq!(
+                root.incl[CTR_BYTES], res.bytes_sent_per_rank[r],
+                "{exec} rank {r}: bytes"
+            );
+            assert_eq!(
+                root.incl[CTR_MSGS], res.msgs_sent_per_rank[r],
+                "{exec} rank {r}: msgs"
+            );
+            assert_eq!(
+                root.incl[CTR_OPS], res.transport_ops_per_rank[r],
+                "{exec} rank {r}: transport ops"
+            );
+        }
+        // The merged profile's exclusive columns tile to the totals.
+        let prof = res.profile.as_ref().expect("profile built when traced");
+        assert_eq!(
+            prof.total(COL_BYTES),
+            res.bytes_sent_per_rank.iter().sum::<u64>(),
+            "{exec}: profile bytes tile"
+        );
+        assert_eq!(
+            prof.total(COL_MSGS),
+            res.msgs_sent_per_rank.iter().sum::<u64>(),
+            "{exec}: profile msgs tile"
+        );
+        assert_eq!(
+            prof.total(COL_OPS),
+            res.transport_ops_per_rank.iter().sum::<u64>(),
+            "{exec}: profile ops tile"
+        );
+        // grid3d on 4 ranks has distributed levels, so per-ND-node
+        // quality events were recorded, and the tail fraction is a
+        // fraction.
+        let quality: usize = res.traces.iter().map(|t| t.quality.len()).sum();
+        assert!(quality >= 1, "{exec}: no quality events");
+        let tail = prof.sequential_tail_fraction();
+        assert!((0.0..=1.0).contains(&tail), "{exec}: tail {tail}");
+        // The rendered table mentions the run root and the span count.
+        let table = format!("{prof}");
+        assert!(table.contains("run"), "{table}");
+        assert!(table.contains("phase profile (p = 4"), "{table}");
+    }
+}
+
+#[test]
+fn trace_off_runs_are_bit_identical_to_traced_runs() {
+    let suite: Vec<(&str, Graph)> = vec![
+        ("grid2d", generators::grid2d(12, 12)),
+        ("grid3d", generators::grid3d(6, 6, 6)),
+        ("cage", generators::cage_like(500, 8, 2)),
+    ];
+    let svc = OrderingService::new_cpu_only();
+    for (name, g) in &suite {
+        for p in [1usize, 2, 4] {
+            for exec in ["sim", "threads"] {
+                let engine = Engine::PtScotch { p };
+                let off = order_traced(&svc, g, engine, exec, "off");
+                let full = order_traced(&svc, g, engine, exec, "full");
+                let ctx = format!("{name} p={p} {exec}");
+                assert_eq!(off.ordering.perm, full.ordering.perm, "{ctx}: perm");
+                assert_eq!(off.ordering.iperm, full.ordering.iperm, "{ctx}: iperm");
+                assert_eq!(off.blocks, full.blocks, "{ctx}: blocks");
+                assert_eq!(
+                    off.bytes_sent_per_rank, full.bytes_sent_per_rank,
+                    "{ctx}: bytes"
+                );
+                assert_eq!(
+                    off.msgs_sent_per_rank, full.msgs_sent_per_rank,
+                    "{ctx}: msgs"
+                );
+                assert_eq!(
+                    off.transport_ops_per_rank, full.transport_ops_per_rank,
+                    "{ctx}: transport ops"
+                );
+                assert!(off.traces.is_empty(), "{ctx}: off run recorded traces");
+                assert!(off.profile.is_none(), "{ctx}: off run built a profile");
+                assert_eq!(full.traces.len(), p, "{ctx}: traced run trace count");
+            }
+        }
+    }
+}
+
+/// Minimal structural JSON check: balanced braces/brackets outside
+/// string literals, string escapes honored, nothing after the top
+/// value. Not a full parser — enough to reject the usual
+/// hand-rendering failures (truncation, stray commas in keys,
+/// unescaped quotes) that would make Perfetto refuse the file.
+fn assert_json_balanced(s: &str) {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for (i, c) in s.char_indices() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => {
+                depth -= 1;
+                assert!(depth >= 0, "unbalanced close at byte {i}");
+            }
+            _ => {}
+        }
+    }
+    assert!(!in_str, "unterminated string");
+    assert_eq!(depth, 0, "unbalanced JSON");
+}
+
+#[test]
+fn chrome_export_is_balanced_and_round_trips_event_count() {
+    let g = generators::grid3d(6, 6, 6);
+    let svc = OrderingService::new_cpu_only();
+    let res = order_traced(&svc, &g, Engine::PtScotch { p: 2 }, "sim", "full");
+    let json = chrome::render(&res.traces).unwrap();
+    assert_json_balanced(&json);
+    assert!(json.starts_with("{\"traceEvents\":["), "envelope");
+    // Event-count round trip: the serialized stream carries exactly
+    // one "X" complete event per span, one "M" metadata event per
+    // rank, and one "i" instant per quality event.
+    let count = |needle: &str| json.matches(needle).count();
+    let spans: usize = res.traces.iter().map(|t| t.events.len() / 2).sum();
+    let quality: usize = res.traces.iter().map(|t| t.quality.len()).sum();
+    assert_eq!(count("\"ph\":\"X\""), spans, "complete events");
+    assert_eq!(count("\"ph\":\"M\""), res.traces.len(), "metadata events");
+    assert_eq!(count("\"ph\":\"i\""), quality, "instant events");
+    assert_eq!(
+        count("\"ph\":"),
+        chrome::event_count(&res.traces),
+        "event_count round trip"
+    );
+    // write() puts exactly render()'s bytes on disk.
+    let path = std::env::temp_dir().join(format!("ptscotch-trace-{}.json", std::process::id()));
+    chrome::write(&path, &res.traces).unwrap();
+    let disk = std::fs::read_to_string(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(disk, json, "write/render agreement");
+}
+
+#[test]
+fn sequential_engine_records_a_probe_free_trace() {
+    let g = generators::grid2d(16, 16);
+    let svc = OrderingService::new_cpu_only();
+    let res = order_traced(&svc, &g, Engine::Sequential, "sim", "phases");
+    assert_eq!(res.traces.len(), 1, "one pseudo-rank");
+    let t = &res.traces[0];
+    assert_eq!(t.rank, 0);
+    // No fleet, no probe: every counter snapshot is zero, so every
+    // profile counter column is zero — only wall time is attributed.
+    assert!(
+        t.events.iter().all(|e| e.ctrs == [0; 4]),
+        "sequential events must carry zero counter snapshots"
+    );
+    let spans = replay(&t.events).unwrap();
+    assert_eq!(
+        spans.iter().filter(|s| s.parent == usize::MAX).count(),
+        1,
+        "one run root"
+    );
+    assert!(
+        spans.iter().any(|s| s.phase == Phase::LeafOrder),
+        "sequential ND orders leaves"
+    );
+    let prof = res.profile.as_ref().expect("profile");
+    assert_eq!(prof.total(COL_BYTES), 0);
+    assert_eq!(prof.total(COL_MSGS), 0);
+    let tail = prof.sequential_tail_fraction();
+    assert!((0.0..=1.0).contains(&tail), "tail {tail}");
+}
